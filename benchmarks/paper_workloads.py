@@ -1,0 +1,36 @@
+"""Shared workload builders for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+from repro.core.traffic import (
+    mixtral_trace_workload,
+    receiver_skew_workload,
+    sender_skew_workload,
+    sparse_topk_workload,
+    uniform_workload,
+)
+
+M, N = 8, 8
+BYTES = 32 * 2**20
+CHUNK = 2 * 2**20
+POLICIES = ("ecmp", "minrtt", "plb", "reps", "rails")
+
+
+def uniform():
+    return uniform_workload(M, N, bytes_per_pair=BYTES)
+
+
+def sparse(sparsity: float, seed: int = 1):
+    return sparse_topk_workload(M, N, sparsity=sparsity, bytes_per_pair=BYTES, seed=seed)
+
+
+def sender_skew(seed: int = 1):
+    return sender_skew_workload(M, N, total_bytes=BYTES * M * (M - 1) * N * N / 8, seed=seed)
+
+
+def receiver_skew(seed: int = 1):
+    return receiver_skew_workload(M, N, total_bytes=BYTES * M * (M - 1) * N * N / 8, seed=seed)
+
+
+def mixtral(phase: str, mode: str, seed: int = 2):
+    return mixtral_trace_workload(M, N, phase=phase, mode=mode, seed=seed)

@@ -1,0 +1,177 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``us_per_call`` is the wall
+time of one simulated collective (or scheduler call); ``derived`` is the
+paper-relevant metric for that figure (normalized BusBw, CCT reduction,
+MSE, speedup, ...).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only fig7
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.lpt import lpt_schedule
+from repro.core.lp import closed_form_opt, solve_minmax_lp
+from repro.netsim import run_policy_suite
+
+from . import paper_workloads as W
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def _emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_fig7_9_uniform() -> None:
+    """Figs 7a/8a/9a: normalized BusBw + CCT under uniform load."""
+    tm = W.uniform()
+    res, us = _timed(lambda: run_policy_suite(tm, chunk_bytes=W.CHUNK))
+    base = res["ecmp"]
+    for p, m in res.items():
+        _emit(f"fig7a_busbw_{p}", us / len(res), f"{m.bus_bw / base.bus_bw:.3f}x_ecmp")
+        _emit(f"fig9a_cct_p99_{p}", us / len(res), f"{m.cct['p99'] / res['rails'].cct['p99']:.3f}x_rails")
+
+
+def bench_fig7_9_sparse() -> None:
+    """Figs 7b-e/8/9: sparsity sweep — RailS advantage grows with sparsity."""
+    for sp in (0.6, 0.4, 0.2, 0.0):
+        tm = W.sparse(sp)
+        res, us = _timed(lambda tm=tm: run_policy_suite(tm, chunk_bytes=W.CHUNK))
+        best_other = max(
+            res[p].bus_bw for p in ("ecmp", "minrtt", "plb", "reps")
+        )
+        _emit(
+            f"fig7_sparse{sp:g}_rails_busbw_gain",
+            us / 5,
+            f"{(res['rails'].bus_bw / best_other - 1) * 100:.1f}pct_over_best_baseline",
+        )
+        _emit(
+            f"fig9_sparse{sp:g}_rails_cct_cut_vs_ecmp",
+            us / 5,
+            f"{(1 - res['rails'].cct['p99'] / res['ecmp'].cct['p99']) * 100:.1f}pct",
+        )
+
+
+def bench_fig10_sender_skew() -> None:
+    tm = W.sender_skew()
+    res, us = _timed(lambda: run_policy_suite(tm, chunk_bytes=W.CHUNK))
+    for p, m in res.items():
+        _emit(f"fig10b_send_mse_{p}", us / 5, f"{m.send_mse:.4f}")
+    _emit(
+        "fig10a_rails_busbw_vs_ecmp", us / 5,
+        f"{res['rails'].bus_bw / res['ecmp'].bus_bw:.2f}x",
+    )
+    _emit(
+        "fig10d_rails_cct_cut", us / 5,
+        f"{(1 - res['rails'].cct['p99'] / res['ecmp'].cct['p99']) * 100:.1f}pct",
+    )
+
+
+def bench_fig11_receiver_skew() -> None:
+    tm = W.receiver_skew()
+    res, us = _timed(lambda: run_policy_suite(tm, chunk_bytes=W.CHUNK))
+    for p, m in res.items():
+        _emit(f"fig11c_recv_mse_{p}", us / 5, f"{m.recv_mse:.4f}")
+    _emit(
+        "fig11a_rails_busbw_vs_ecmp", us / 5,
+        f"{res['rails'].bus_bw / res['ecmp'].bus_bw:.2f}x",
+    )
+    _emit(
+        "fig11d_rails_cct_cut", us / 5,
+        f"{(1 - res['rails'].cct['p99'] / res['ecmp'].cct['p99']) * 100:.1f}pct",
+    )
+
+
+def bench_fig12_13_mixtral() -> None:
+    """Figs 12/13: Mixtral trace, dense + sparse setups, 4 phases."""
+    for mode in ("dense", "sparse"):
+        for phase in ("start", "early", "mid", "stable"):
+            # Iteration time == the all-to-all barrier == makespan (the
+            # paper's Figs 12b/13b metric); mean over 3 trace seeds.
+            cuts_best, cuts_worst, us_tot = [], [], 0.0
+            for seed in (2, 3, 4):
+                tm = W.mixtral(phase, mode, seed=seed)
+                res, us = _timed(lambda tm=tm: run_policy_suite(tm, chunk_bytes=W.CHUNK))
+                us_tot += us
+                others = [res[p].makespan for p in ("ecmp", "minrtt", "plb", "reps")]
+                cuts_best.append((1 - res["rails"].makespan / min(others)) * 100)
+                cuts_worst.append((1 - res["rails"].makespan / max(others)) * 100)
+            _emit(
+                f"fig{12 if mode == 'dense' else 13}_{phase}_rails_iter_cut",
+                us_tot / 15,
+                f"{np.mean(cuts_best):.1f}to{np.mean(cuts_worst):.1f}pct",
+            )
+
+
+def bench_lpt_scheduler() -> None:
+    """Algorithm-2 microbenchmark: O(F log F + F N) scheduler cost."""
+    rng = np.random.default_rng(0)
+    for f in (100, 1000, 10000):
+        w = rng.exponential(1.0, f)
+        lpt_schedule(w, 8)  # warm
+        t0 = time.perf_counter()
+        reps = 10
+        for _ in range(reps):
+            res = lpt_schedule(w, 8)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        _emit(f"lpt_sched_F{f}_N8", us, f"mse={res.mse:.3e}")
+
+
+def bench_lp_solver() -> None:
+    """Eq.-24 simplex vs Theorem-3 closed form (validation + timing)."""
+    rng = np.random.default_rng(1)
+    d2 = rng.uniform(0, 10, (4, 4))
+    np.fill_diagonal(d2, 0)
+    (p, t_lp, sol), us = _timed(lambda: solve_minmax_lp(d2, 4))
+    _, t_cf = closed_form_opt(d2, 4)
+    _emit("lp_eq24_simplex_M4N4", us, f"gap_vs_closed_form={abs(t_lp - t_cf):.2e}")
+
+
+def bench_theorem_bounds() -> None:
+    """Theorem-4 bound tightness across skew levels."""
+    rng = np.random.default_rng(2)
+    for alpha in (0.5, 1.0, 2.0):
+        w = rng.zipf(1.0 + alpha, 2000).astype(float)
+        res, us = _timed(lambda w=w: lpt_schedule(w, 8))
+        _emit(
+            f"thm4_mse_over_bound_zipf{alpha:g}", us,
+            f"{res.mse / (w.max() ** 2):.2e}",
+        )
+
+
+BENCHES = {
+    "fig7_9_uniform": bench_fig7_9_uniform,
+    "fig7_9_sparse": bench_fig7_9_sparse,
+    "fig10": bench_fig10_sender_skew,
+    "fig11": bench_fig11_receiver_skew,
+    "fig12_13": bench_fig12_13_mixtral,
+    "lpt": bench_lpt_scheduler,
+    "lp": bench_lp_solver,
+    "thm4": bench_theorem_bounds,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and args.only not in name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

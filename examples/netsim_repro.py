@@ -1,0 +1,88 @@
+"""Reproduce the paper's headline evaluation table in one run.
+
+Prints, per workload family (Figs 7-13), RailS's gains against the
+baselines, next to the claims in the paper's abstract:
+  * sparse loads: BusBw +20%..78%, CCT -17%..78%
+  * Mixtral iteration: -18%..40% (dense), >=40% (sparse)
+  * skewed loads: lowest NIC-load MSE.
+
+Two sparse variants are shown: ``gpu`` pins each hot expert's ingress to
+one GPU (the paper's §VI-F sparse setup — large gaps), ``domain`` spreads
+it across the domain (milder, lands in the abstract's 20-78% band).
+
+    PYTHONPATH=src python examples/netsim_repro.py
+"""
+
+import numpy as np
+
+from repro.core.traffic import (
+    mixtral_trace_workload,
+    receiver_skew_workload,
+    sender_skew_workload,
+    sparse_topk_workload,
+    uniform_workload,
+)
+from repro.netsim import run_policy_suite
+
+M, N = 8, 8
+B = 32 * 2**20
+CHUNK = 2 * 2**20
+TOTAL = B * M * (M - 1) * N * N / 8
+
+
+def stats(tm):
+    res = run_policy_suite(tm, chunk_bytes=CHUNK)
+    rails = res["rails"]
+    others = [res[p] for p in ("ecmp", "minrtt", "plb", "reps")]
+    return {
+        "busbw_vs_ecmp": (rails.bus_bw / res["ecmp"].bus_bw - 1) * 100,
+        "busbw_vs_best": (rails.bus_bw / max(o.bus_bw for o in others) - 1) * 100,
+        # iteration time == makespan (the all-to-all barrier; paper Figs 12b/13b)
+        "cct_vs_ecmp": (1 - rails.makespan / res["ecmp"].makespan) * 100,
+        "cct_vs_best": (1 - rails.makespan / min(o.makespan for o in others)) * 100,
+        "smse": rails.send_mse,
+        "rmse": rails.recv_mse,
+        "base_smse": max(o.send_mse for o in others),
+        "base_rmse": max(o.recv_mse for o in others),
+    }
+
+
+def avg_stats(makers):
+    rows = [stats(mk()) for mk in makers]
+    return {k: float(np.mean([r[k] for r in rows])) for k in rows[0]}
+
+
+def show(tag, s):
+    print(
+        f"{tag:28s} busbw +{s['busbw_vs_ecmp']:6.1f}% ecmp /+{s['busbw_vs_best']:6.1f}% best | "
+        f"cct -{s['cct_vs_ecmp']:5.1f}% ecmp /-{s['cct_vs_best']:5.1f}% best | "
+        f"MSE {s['smse']:.3f}/{s['rmse']:.3f} (baselines {s['base_smse']:.2f}/{s['base_rmse']:.2f})"
+    )
+
+
+def main() -> None:
+    print("=== RailS vs baselines (paper Figs 7-13 reproduction; mean of 3 seeds) ===")
+    show("uniform (Fig7a)", avg_stats(
+        [lambda s=s: uniform_workload(M, N, bytes_per_pair=B) for s in range(1)]))
+    for sp in (0.6, 0.4, 0.2, 0.0):
+        show(f"sparse-{sp:g} gpu (Fig7b-e)", avg_stats(
+            [lambda s=s, sp=sp: sparse_topk_workload(M, N, sparsity=sp, bytes_per_pair=B, seed=s)
+             for s in (1, 2, 3)]))
+    for sp in (0.6, 0.2):
+        show(f"sparse-{sp:g} domain", avg_stats(
+            [lambda s=s, sp=sp: sparse_topk_workload(M, N, sparsity=sp, bytes_per_pair=B,
+                                                     seed=s, concentrate="domain")
+             for s in (1, 2, 3)]))
+    show("sender-skew (Fig10)", avg_stats(
+        [lambda s=s: sender_skew_workload(M, N, total_bytes=TOTAL, seed=s) for s in (1, 2, 3)]))
+    show("receiver-skew (Fig11)", avg_stats(
+        [lambda s=s: receiver_skew_workload(M, N, total_bytes=TOTAL, seed=s) for s in (1, 2, 3)]))
+    for mode in ("dense", "sparse"):
+        for phase in ("start", "stable"):
+            show(f"mixtral-{mode}-{phase} (Fig{12 if mode=='dense' else 13})", avg_stats(
+                [lambda s=s, m=mode, ph=phase: mixtral_trace_workload(M, N, phase=ph, mode=m, seed=s)
+                 for s in (2, 3, 4)]))
+
+
+if __name__ == "__main__":
+    main()

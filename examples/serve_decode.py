@@ -1,0 +1,30 @@
+"""Serving example: batched prefill + autoregressive decode (gemma2 family).
+
+    PYTHONPATH=src python examples/serve_decode.py --gen 24
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve_main(
+        [
+            "--arch", args.arch, "--reduced",
+            "--batch", str(args.batch),
+            "--prompt-len", str(args.prompt_len),
+            "--gen", str(args.gen),
+            "--temperature", "0.8",
+        ]
+    )
+
+
+if __name__ == "__main__":
+    main()

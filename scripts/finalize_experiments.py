@@ -1,0 +1,59 @@
+"""Splice generated tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python scripts/finalize_experiments.py \
+        --netsim /tmp/netsim_repro.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import io
+import subprocess
+import sys
+from contextlib import redirect_stdout
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _capture(mod_main, *args) -> str:
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        mod_main(*args)
+    return buf.getvalue()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--netsim", type=str, default=None,
+                    help="file with examples/netsim_repro.py output")
+    ap.add_argument("--dryrun", type=str, default="results/dryrun")
+    ap.add_argument("--perf", type=str, default="results/perf")
+    args = ap.parse_args()
+
+    sys.path.insert(0, str(ROOT / "scripts"))
+    import build_experiments
+    import perf_report
+
+    text = (ROOT / "EXPERIMENTS.md").read_text()
+
+    tables = _capture(build_experiments.main, args.dryrun)
+    dry, _, roof = tables.partition("### Roofline table")
+    roof = "### Roofline table" + roof
+    text = text.replace("<!-- DRYRUN_TABLE -->", dry.strip())
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roof.strip())
+
+    if args.netsim and Path(args.netsim).exists():
+        net = Path(args.netsim).read_text().strip()
+        text = text.replace("<!-- NETSIM_TABLE -->", f"```\n{net}\n```")
+
+    if Path(args.perf).exists():
+        perf = _capture(perf_report.main, args.perf)
+        text = text.replace("<!-- PERF_TABLES -->", perf.strip())
+
+    (ROOT / "EXPERIMENTS.md").write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

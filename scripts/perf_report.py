@@ -1,0 +1,43 @@
+"""§Perf report: compare hillclimb variants per cell (markdown).
+
+    PYTHONPATH=src python scripts/perf_report.py results/perf
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+
+def main(outdir: str) -> None:
+    cells = defaultdict(dict)
+    for p in sorted(Path(outdir).glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") != "ok":
+            continue
+        parts = p.stem.split("__")
+        tag = parts[3] if len(parts) > 3 else "base"
+        cells[f"{d['arch']}__{d['shape']}"][tag] = d
+
+    for cell, variants in cells.items():
+        base = variants.get("base")
+        if base is None:
+            continue
+        print(f"\n#### {cell}\n")
+        print("| variant | compute s | memory s | collective s | dominant | peak GiB | Δ dominant vs base |")
+        print("|---|---|---|---|---|---|---|")
+        base_r = base["roofline"]
+        for tag, d in sorted(variants.items(), key=lambda kv: (kv[0] != "base", kv[0])):
+            r = d["roofline"]
+            delta = (r[base_r["dominant"]] / base_r[base_r["dominant"]] - 1) * 100
+            print(
+                f"| {tag} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+                f"| {r['dominant'].replace('_s','')} | {d['memory']['peak_estimate_gib']} | "
+                f"{delta:+.1f}% |"
+            )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/perf")

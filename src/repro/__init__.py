@@ -1,0 +1,18 @@
+"""repro — RailS (topology-aware all-to-all load balancing) on JAX/TPU.
+
+Subpackages:
+  core      — the paper's algorithms (LPT, LP, theorems, rail collectives)
+  netsim    — discrete-event rail-fabric simulator + §VI baselines
+  models    — architecture zoo (dense/MoE/hybrid/SSM/enc-dec)
+  configs   — assigned architecture configs + smoke variants
+  parallel  — mesh views, sharding rules, pipeline parallelism
+  launch    — production mesh, dry-run, train/serve drivers
+  data      — deterministic sharded data pipeline
+  optim     — AdamW, schedules, gradient compression
+  checkpoint— sharded save/restore with atomic commit
+  runtime   — fault tolerance, elastic re-mesh, straggler mitigation
+  kernels   — Pallas TPU kernels (flash attention, grouped GEMM, rmsnorm)
+  roofline  — compiled-artifact cost/collective analysis
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Sharded checkpointing with atomic commit + async double-buffering."""
+
+from .checkpoint import Checkpointer, latest_step, restore, save
+
+__all__ = ["Checkpointer", "latest_step", "restore", "save"]

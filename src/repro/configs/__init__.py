@@ -1,0 +1,33 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from .base import SHAPES, ModelConfig, ShapeSpec, get_config, list_archs, supports_shape
+
+_ARCH_MODULES = (
+    "qwen2_vl_72b",
+    "deepseek_7b",
+    "h2o_danube3_4b",
+    "gemma2_9b",
+    "phi4_mini_3_8b",
+    "zamba2_1_2b",
+    "xlstm_125m",
+    "mixtral_8x7b",
+    "qwen3_moe_30b_a3b",
+    "whisper_small",
+)
+
+
+def _load_all() -> None:
+    import importlib
+
+    for mod in _ARCH_MODULES:
+        importlib.import_module(f"{__name__}.{mod}")
+
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "get_config",
+    "list_archs",
+    "supports_shape",
+]

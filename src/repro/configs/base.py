@@ -1,0 +1,218 @@
+"""Config system: model configs, input-shape specs, and the arch registry.
+
+Every assigned architecture is a ``ModelConfig`` instance in its own module
+(``src/repro/configs/<id>.py``) built from the public-literature numbers in
+the assignment. ``reduced()`` derives the family-preserving smoke config
+(small dims, few layers/experts) used by CPU tests; the full config is only
+ever touched through ``jax.eval_shape`` + the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "supports_shape", "register", "get_config", "list_archs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # defaults to d_model // num_heads
+
+    # attention
+    rope_theta: float = 1e4
+    attn_pattern: str = "full"  # full | swa | alt_local_global
+    sliding_window: Optional[int] = None
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    use_mrope: bool = False
+    mrope_sections: tuple = ()  # head_dim/2 split across (t, h, w) streams
+    use_qk_norm: bool = False
+
+    # ffn
+    act: str = "silu"  # silu | gelu
+
+    # moe
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+
+    # ssm / hybrid (Mamba2)
+    ssm_state: int = 0
+    mamba_expand: int = 2
+    mamba_head_dim: int = 64
+    conv_width: int = 4
+    shared_attn_period: int = 0  # zamba2: shared attention every k mamba layers
+
+    # xlstm
+    xlstm_pattern: tuple = ()  # per-layer "m" (mLSTM) / "s" (sLSTM)
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500  # precomputed frame embeddings (frontend stub)
+
+    # norms / embeddings
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    use_post_norm: bool = False  # gemma2 post-block norms
+    embed_scale: bool = False  # gemma scales embeddings by sqrt(d_model)
+
+    # RailS dispatch (MoE all-to-all)
+    dispatch_mode: str = "dense"  # dense | ring | rails | spray
+    num_rails: int = 4
+    dispatch_chunks: int = 2
+
+    # numerics / compilation
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"  # full | dots (save matmul outputs)
+    xent_chunk: int = 2048
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_heads % max(self.num_kv_heads, 1) != 0:
+            raise ValueError(f"{self.name}: num_heads must be divisible by num_kv_heads")
+        if self.num_experts and self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    # -- derived -------------------------------------------------------------
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: SSM/hybrid state or windowed attention."""
+        return self.family in ("ssm", "hybrid") or self.attn_pattern in (
+            "swa",
+            "alt_local_global",
+        )
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, h = self.d_model, self.head_dim
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family == "ssm":
+            d_in = self.mamba_expand * d
+            per_layer = self.num_layers * (3 * d * d_in)  # coarse
+        else:
+            attn = d * (self.num_heads * h) + 2 * d * (self.num_kv_heads * h) + (self.num_heads * h) * d
+            if self.is_moe:
+                ffn = self.num_experts * 3 * d * self.moe_d_ff + d * self.num_experts
+            else:
+                ffn = 3 * d * self.d_ff
+            per_layer = self.num_layers * (attn + ffn)
+            if self.family == "hybrid":
+                d_in = self.mamba_expand * d
+                per_layer = self.num_layers * (3 * d * d_in) + attn  # mamba + shared attn
+        enc = 0
+        if self.is_encoder_decoder:
+            enc = self.encoder_layers * (4 * d * d + 2 * d * self.d_ff)
+            per_layer += self.num_layers * (4 * d * d)  # cross-attention
+        return emb + per_layer + enc
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        all_experts = self.num_layers * self.num_experts * 3 * d * self.moe_d_ff
+        active = self.num_layers * self.experts_per_token * 3 * d * self.moe_d_ff
+        return full - all_experts + active
+
+    def reduced(self) -> "ModelConfig":
+        """Family-preserving smoke config for CPU tests."""
+        changes = dict(
+            num_layers=max(2, 2 * (1 if self.attn_pattern != "alt_local_global" else 1)),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=2 if self.num_kv_heads < self.num_heads else 4,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            xent_chunk=64,
+        )
+        if self.attn_pattern == "alt_local_global":
+            changes["num_layers"] = 2
+        if self.sliding_window:
+            changes["sliding_window"] = 16
+        if self.is_moe:
+            changes.update(num_experts=4, experts_per_token=2, moe_d_ff=128)
+        if self.family in ("ssm", "hybrid"):
+            changes.update(ssm_state=16, mamba_head_dim=32)
+        if self.shared_attn_period:
+            changes.update(num_layers=4, shared_attn_period=2)
+        if self.xlstm_pattern:
+            changes.update(xlstm_pattern=("m", "s"), num_layers=2)
+        if self.is_encoder_decoder:
+            changes.update(encoder_layers=2, encoder_seq=8)
+        if self.use_mrope:
+            changes.update(head_dim=32, mrope_sections=(4, 6, 6))
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+    num_microbatches: int = 1
+
+
+#: The assigned input-shape set (applies to every LM arch).
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train", num_microbatches=8),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill", num_microbatches=4),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Cell policy (DESIGN.md §6): long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md §6)"
+    return True, ""
+
+
+_REGISTRY: dict[str, "ModelConfig"] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        from . import _load_all  # lazy import of all arch modules
+
+        _load_all()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}") from None
+
+
+def list_archs() -> list[str]:
+    if not _REGISTRY:
+        from . import _load_all
+
+        _load_all()
+    return sorted(_REGISTRY)

@@ -1,0 +1,18 @@
+"""DeepSeek-7B [arXiv:2401.02954; hf] — LLaMA-architecture dense LM."""
+
+from .base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="deepseek-7b",
+        family="dense",
+        num_layers=30,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=11008,
+        vocab_size=102400,
+        rope_theta=1e4,
+        attn_pattern="full",
+    )
+)

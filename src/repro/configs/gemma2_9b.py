@@ -1,0 +1,31 @@
+"""Gemma2-9B [arXiv:2408.00118; hf].
+
+Alternating local(SWA-4096)/global attention, attention- and final-logit
+softcapping, GeGLU, post-block norms, tied + scaled embeddings,
+head_dim 256 (decoupled from d_model/num_heads).
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="gemma2-9b",
+        family="dense",
+        num_layers=42,
+        d_model=3584,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=256,
+        d_ff=14336,
+        vocab_size=256000,
+        rope_theta=1e4,
+        attn_pattern="alt_local_global",
+        sliding_window=4096,
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        act="gelu",
+        use_post_norm=True,
+        tie_embeddings=True,
+        embed_scale=True,
+    )
+)

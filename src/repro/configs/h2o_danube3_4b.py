@@ -1,0 +1,19 @@
+"""H2O-Danube-3-4B [arXiv:2401.16818; unverified] — llama+mistral mix, SWA."""
+
+from .base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="h2o-danube-3-4b",
+        family="dense",
+        num_layers=24,
+        d_model=3840,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=10240,
+        vocab_size=32000,
+        rope_theta=1e4,
+        attn_pattern="swa",
+        sliding_window=4096,
+    )
+)

@@ -1,0 +1,29 @@
+"""Mixtral-8x7B [arXiv:2401.04088; hf] — 8 experts top-2, SWA.
+
+This is the paper's own evaluation model (§VI-F): the MoE dispatch/combine
+all-to-alls run in RailS mode (LPT-scheduled rail spraying) by default.
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="mixtral-8x7b",
+        family="moe",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14336,
+        vocab_size=32000,
+        rope_theta=1e6,
+        attn_pattern="swa",
+        sliding_window=4096,
+        num_experts=8,
+        experts_per_token=2,
+        moe_d_ff=14336,
+        dispatch_mode="rails",
+        num_rails=4,
+        dispatch_chunks=2,
+    )
+)

@@ -1,0 +1,19 @@
+"""Phi-4-mini-3.8B [arXiv:2412.08905; hf] — RoPE + SwiGLU + GQA dense LM."""
+
+from .base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="phi4-mini-3.8b",
+        family="dense",
+        num_layers=32,
+        d_model=3072,
+        num_heads=24,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=200064,
+        rope_theta=1e4,
+        attn_pattern="full",
+        tie_embeddings=True,
+    )
+)

@@ -1,0 +1,28 @@
+"""Qwen2-VL-72B backbone [arXiv:2409.12191; hf].
+
+VLM: the transformer backbone only — the vision frontend is a stub
+(``input_specs`` provides M-RoPE position streams; patch embeddings would
+enter through the same embedding interface). M-RoPE splits each head's
+rotary spectrum into (temporal, height, width) sections of (16, 24, 24)
+frequency pairs for head_dim=128.
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab_size=152064,
+        rope_theta=1e6,
+        use_mrope=True,
+        mrope_sections=(16, 24, 24),
+        attn_pattern="full",
+    )
+)

@@ -1,0 +1,30 @@
+"""Qwen3-30B-A3B [hf:Qwen/Qwen3-30B-A3B; hf] — 128 experts, top-8, QK-norm.
+
+The richest RailS case: a 128-way expert traffic matrix with top-8 routing
+generates the strongest all-to-all imbalance of the assigned pool.
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="qwen3-moe-30b-a3b",
+        family="moe",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=4,
+        head_dim=128,
+        d_ff=768,
+        vocab_size=151936,
+        rope_theta=1e6,
+        use_qk_norm=True,
+        attn_pattern="full",
+        num_experts=128,
+        experts_per_token=8,
+        moe_d_ff=768,
+        dispatch_mode="rails",
+        num_rails=4,
+        dispatch_chunks=2,
+    )
+)

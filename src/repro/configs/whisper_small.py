@@ -1,0 +1,26 @@
+"""Whisper-small [arXiv:2212.04356; unverified] — enc-dec audio backbone.
+
+Backbone only: the conv frontend is a STUB — ``input_specs`` provides
+precomputed frame embeddings ``(B, encoder_seq, d_model)`` directly to the
+encoder; the decoder is a standard causal transformer with cross-attention.
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="whisper-small",
+        family="audio",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=51865,
+        act="gelu",
+        is_encoder_decoder=True,
+        encoder_layers=12,
+        encoder_seq=1500,
+        attn_pattern="full",
+    )
+)

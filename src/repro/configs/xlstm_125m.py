@@ -1,0 +1,22 @@
+"""xLSTM-125M [arXiv:2405.04517; unverified] — alternating sLSTM/mLSTM blocks.
+
+d_ff=0 in the assignment: the blocks carry their own internal projections
+(mLSTM up-projects 2x, sLSTM uses a 4/3 GeGLU), there is no separate FFN.
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="xlstm-125m",
+        family="ssm",
+        num_layers=12,
+        d_model=768,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        xlstm_pattern=("m", "s") * 6,
+        act="gelu",
+    )
+)

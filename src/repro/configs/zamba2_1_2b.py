@@ -1,0 +1,26 @@
+"""Zamba2-1.2B [arXiv:2411.15242; hf] — hybrid Mamba2 + shared attention.
+
+38 Mamba2 layers with a *weight-shared* attention+MLP block applied every
+``shared_attn_period`` Mamba layers (Zamba2's signature design: one global
+attention block reused across depth).
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="zamba2-1.2b",
+        family="hybrid",
+        num_layers=38,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32000,
+        ssm_state=64,
+        mamba_expand=2,
+        mamba_head_dim=64,
+        shared_attn_period=6,
+        attn_pattern="full",
+    )
+)

@@ -1,0 +1,68 @@
+"""RailS core: the paper's contribution as composable JAX/numpy modules.
+
+Layers:
+  traffic   — D1/D2 traffic matrices + MoE workload generators (Table I)
+  lpt       — LPT schedulers (host numpy + device jax.lax), Algorithm 2
+  lp        — min–max completion-time LP (eq. 24) + simplex + Theorem-3 form
+  theorems  — executable Theorems 1–4 used as test/benchmark invariants
+  plan      — flow splitting + per-sender chunk→rail spray plans (§V)
+  rails_all_to_all — the JAX collective: N-rail LPT-scheduled all-to-all
+"""
+
+from .lpt import (
+    LptResult,
+    load_mse,
+    lpt_schedule,
+    lpt_schedule_jax,
+    normalized_load_mse,
+    random_schedule,
+    round_robin_schedule,
+)
+from .lp import (
+    LpSolution,
+    closed_form_opt,
+    loads_from_allocation,
+    optimal_completion_time,
+    simplex,
+    solve_minmax_lp,
+)
+from .plan import (
+    AtomicFlow,
+    SprayPlan,
+    build_all_plans,
+    build_spray_plan,
+    plan_quality,
+    split_message,
+    split_traffic_row,
+)
+from .rails_all_to_all import (
+    RailSchedule,
+    build_rail_schedule,
+    dense_all_to_all,
+    rails_all_to_all,
+    rails_dispatch,
+    ring_all_to_all,
+    spray_all_to_all,
+)
+from .theorems import (
+    lpt_makespan_bound,
+    theorem1_capacity,
+    theorem1_maxflow_check,
+    theorem2_lower_bound,
+    theorem2_optimal_time,
+    theorem3_check_symmetry,
+    theorem4_mse_bound,
+)
+from .traffic import (
+    WORKLOADS,
+    TrafficMatrix,
+    aggregate_domains,
+    mixtral_trace_workload,
+    moe_gating_traffic,
+    receiver_skew_workload,
+    sender_skew_workload,
+    sparse_topk_workload,
+    uniform_workload,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

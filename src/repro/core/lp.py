@@ -1,0 +1,264 @@
+"""Min–max completion-time LP (paper §IV-C/§IV-D, eq. 24) + simplex solver.
+
+The paper reformulates all-to-all completion time as::
+
+    min_{P, t}  t
+    s.t.  sum_f D2[k,f] * P[k,f,n] <= t      (send load,  ∀k,n)
+          sum_k D2[k,f] * P[k,f,n] <= t      (recv load,  ∀f,n)
+          sum_n P[k,f,n] = 1                 (∀k,f)
+          P >= 0
+
+Theorem 3 gives the closed-form optimum ``P* = 1/N`` with::
+
+    t* = max( max_k sum_f D2[k,f],  max_f sum_k D2[k,f] ) / N
+
+We implement (a) :func:`solve_minmax_lp` — a dense two-phase simplex over the
+exact LP (used for validation and for *heterogeneous-rail* extensions the
+closed form does not cover), and (b) :func:`closed_form_opt` — Theorem 3.
+Tests assert both agree on rail topologies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "LpSolution",
+    "simplex",
+    "solve_minmax_lp",
+    "closed_form_opt",
+    "optimal_completion_time",
+    "loads_from_allocation",
+]
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class LpSolution:
+    x: np.ndarray
+    objective: float
+    status: str  # "optimal" | "infeasible" | "unbounded"
+    iterations: int
+
+
+def simplex(
+    c: np.ndarray,
+    a_ub: np.ndarray | None = None,
+    b_ub: np.ndarray | None = None,
+    a_eq: np.ndarray | None = None,
+    b_eq: np.ndarray | None = None,
+    max_iter: int = 50_000,
+) -> LpSolution:
+    """Two-phase tableau simplex for ``min c@x  s.t. A_ub x<=b_ub, A_eq x=b_eq, x>=0``.
+
+    Dense, Bland's-rule pivoting (no cycling), suitable for the small/medium
+    LPs arising from eq. 24 (hundreds of variables). Not a production LP
+    code — a verification oracle for the closed form.
+    """
+    c = np.asarray(c, dtype=np.float64)
+    n = c.size
+    rows: list[np.ndarray] = []
+    rhs: list[float] = []
+    n_ub = 0
+    if a_ub is not None:
+        a_ub = np.asarray(a_ub, dtype=np.float64)
+        b_ub = np.asarray(b_ub, dtype=np.float64)
+        n_ub = a_ub.shape[0]
+        for i in range(n_ub):
+            rows.append(a_ub[i])
+            rhs.append(float(b_ub[i]))
+    n_eq = 0
+    if a_eq is not None:
+        a_eq = np.asarray(a_eq, dtype=np.float64)
+        b_eq = np.asarray(b_eq, dtype=np.float64)
+        n_eq = a_eq.shape[0]
+        for i in range(n_eq):
+            rows.append(a_eq[i])
+            rhs.append(float(b_eq[i]))
+    m = len(rows)
+    a = np.vstack(rows) if rows else np.zeros((0, n))
+    b = np.asarray(rhs, dtype=np.float64)
+    # Normalize to b >= 0 (flip rows; flips slack sign for ub rows).
+    slack_sign = np.ones(m)
+    for i in range(m):
+        if b[i] < 0:
+            a[i] = -a[i]
+            b[i] = -b[i]
+            slack_sign[i] = -1.0
+    # Columns: [x (n)] [slack (n_ub)] [artificial (m)]
+    n_slack = n_ub
+    total = n + n_slack + m
+    tab = np.zeros((m, total))
+    tab[:, :n] = a
+    for i in range(n_ub):
+        tab[i, n + i] = slack_sign[i]
+    for i in range(m):
+        tab[i, n + n_slack + i] = 1.0
+    basis = [n + n_slack + i for i in range(m)]
+    # Rows whose slack sign is +1 can start with the slack basic instead of
+    # the artificial (cheaper phase 1).
+    for i in range(n_ub):
+        if slack_sign[i] > 0:
+            basis[i] = n + i
+            tab[i, n + n_slack + i] = 0.0
+
+    b_col = b.copy()
+    it_count = 0
+
+    def pivot(tab, b_col, basis, row, col):
+        piv = tab[row, col]
+        tab[row] /= piv
+        b_col[row] /= piv
+        for r in range(tab.shape[0]):
+            if r != row and abs(tab[r, col]) > _EPS:
+                factor = tab[r, col]
+                tab[r] -= factor * tab[row]
+                b_col[r] -= factor * b_col[row]
+        basis[row] = col
+
+    def run_phase(obj_row, allowed_cols):
+        nonlocal it_count
+        # Reduced costs for current basis.
+        z = obj_row.copy()
+        for r, bv in enumerate(basis):
+            if abs(obj_row[bv]) > _EPS:
+                z -= obj_row[bv] * tab[r]
+        obj_val = -sum(obj_row[bv] * b_col[r] for r, bv in enumerate(basis))
+        while it_count < max_iter:
+            it_count += 1
+            # Bland's rule: smallest-index entering column with z < -eps.
+            enter = -1
+            for j in allowed_cols:
+                if z[j] < -1e-8:
+                    enter = j
+                    break
+            if enter < 0:
+                return "optimal"
+            # Ratio test (Bland: smallest basis index on ties).
+            best_ratio, leave = np.inf, -1
+            for r in range(m):
+                if tab[r, enter] > _EPS:
+                    ratio = b_col[r] / tab[r, enter]
+                    if ratio < best_ratio - _EPS or (
+                        abs(ratio - best_ratio) <= _EPS
+                        and (leave < 0 or basis[r] < basis[leave])
+                    ):
+                        best_ratio, leave = ratio, r
+            if leave < 0:
+                return "unbounded"
+            pivot(tab, b_col, basis, leave, enter)
+            # Recompute reduced costs (dense refresh keeps it simple/robust).
+            z = obj_row.copy()
+            for r, bv in enumerate(basis):
+                if abs(obj_row[bv]) > _EPS:
+                    z -= obj_row[bv] * tab[r]
+        return "maxiter"
+
+    # Phase 1: minimize sum of artificials.
+    art_cols = list(range(n + n_slack, total))
+    phase1_obj = np.zeros(total)
+    for j in art_cols:
+        phase1_obj[j] = 1.0
+    status = run_phase(phase1_obj, list(range(total)))
+    art_val = sum(b_col[r] for r, bv in enumerate(basis) if bv >= n + n_slack)
+    if status != "optimal" or art_val > 1e-6:
+        return LpSolution(np.zeros(n), np.inf, "infeasible", it_count)
+    # Drive remaining artificial basics out (degenerate rows).
+    for r in range(m):
+        if basis[r] >= n + n_slack:
+            for j in range(n + n_slack):
+                if abs(tab[r, j]) > 1e-7:
+                    pivot(tab, b_col, basis, r, j)
+                    break
+    # Phase 2: original objective, artificial columns barred.
+    phase2_obj = np.zeros(total)
+    phase2_obj[:n] = c
+    status = run_phase(phase2_obj, list(range(n + n_slack)))
+    x = np.zeros(total)
+    for r, bv in enumerate(basis):
+        x[bv] = b_col[r]
+    obj = float(c @ x[:n])
+    return LpSolution(x[:n], obj, "optimal" if status == "optimal" else status, it_count)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 24 construction and closed form
+# ---------------------------------------------------------------------------
+
+
+def solve_minmax_lp(
+    d2: np.ndarray,
+    num_rails: int,
+    rail_rates: np.ndarray | None = None,
+) -> tuple[np.ndarray, float, LpSolution]:
+    """Solve eq. 24 exactly. Returns ``(P, t_star, raw_solution)``.
+
+    ``rail_rates`` optionally scales per-rail capacity (heterogeneous rails —
+    a beyond-paper extension; the paper assumes all rails at rate R2). Loads
+    on rail n are divided by ``rail_rates[n]`` inside the constraints, so
+    ``t`` is in time units of a unit-rate rail.
+    """
+    d2 = np.asarray(d2, dtype=np.float64)
+    m = d2.shape[0]
+    n = num_rails
+    if rail_rates is None:
+        rail_rates = np.ones(n)
+    rail_rates = np.asarray(rail_rates, dtype=np.float64)
+    nvar = m * m * n + 1  # P flattened (k,f,n) + t
+    t_idx = nvar - 1
+
+    def pidx(k, f, r):
+        return (k * m + f) * n + r
+
+    a_ub = np.zeros((2 * m * n, nvar))
+    b_ub = np.zeros(2 * m * n)
+    row = 0
+    for k in range(m):
+        for r in range(n):
+            for f in range(m):
+                a_ub[row, pidx(k, f, r)] = d2[k, f] / rail_rates[r]
+            a_ub[row, t_idx] = -1.0
+            row += 1
+    for f in range(m):
+        for r in range(n):
+            for k in range(m):
+                a_ub[row, pidx(k, f, r)] = d2[k, f] / rail_rates[r]
+            a_ub[row, t_idx] = -1.0
+            row += 1
+    a_eq = np.zeros((m * m, nvar))
+    b_eq = np.ones(m * m)
+    for k in range(m):
+        for f in range(m):
+            for r in range(n):
+                a_eq[k * m + f, pidx(k, f, r)] = 1.0
+    c = np.zeros(nvar)
+    c[t_idx] = 1.0
+    sol = simplex(c, a_ub, b_ub, a_eq, b_eq)
+    p = sol.x[: m * m * n].reshape(m, m, n)
+    return p, sol.objective, sol
+
+
+def closed_form_opt(d2: np.ndarray, num_rails: int) -> tuple[np.ndarray, float]:
+    """Theorem 3: ``P* = 1/N`` and ``t* = max(row sums, col sums) / N``."""
+    d2 = np.asarray(d2, dtype=np.float64)
+    m = d2.shape[0]
+    p = np.full((m, m, num_rails), 1.0 / num_rails)
+    t_star = max(d2.sum(axis=1).max(), d2.sum(axis=0).max()) / num_rails
+    return p, float(t_star)
+
+
+def optimal_completion_time(d2: np.ndarray, num_rails: int, rate: float) -> float:
+    """Theorem 2 with P* plugged in: ``T* = t*/R2`` in seconds."""
+    _, t_star = closed_form_opt(d2, num_rails)
+    return t_star / rate
+
+
+def loads_from_allocation(d2: np.ndarray, p: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Paper eqs. (4)–(5): send loads ``S[k,n]`` and recv loads ``R[f,n]``."""
+    d2 = np.asarray(d2, dtype=np.float64)
+    s = np.einsum("kf,kfn->kn", d2, p)
+    r = np.einsum("kf,kfn->fn", d2, p)
+    return s, r

@@ -1,0 +1,193 @@
+"""LPT (Longest Processing Time first) schedulers — paper §IV-F, Algorithm 2.
+
+Two interchangeable implementations:
+
+* :func:`lpt_schedule` — host/numpy, a line-by-line transcription of
+  Algorithm 2 (sort descending, break ties by source id, greedily assign to
+  the least-loaded rail, maintain ``LoadState[N]``).
+* :func:`lpt_schedule_jax` — device version in pure ``jax.lax`` (sort +
+  ``lax.scan`` over flows with an argmin inner step) so the scheduler can be
+  jitted into a training step. Produces identical assignments to the host
+  version for identical tie-breaking keys.
+
+Both return the assignment vector, the final per-rail loads, and the load
+MSE against the uniform target (paper eq. 6 / Algorithm 2 step 6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "LptResult",
+    "lpt_schedule",
+    "lpt_schedule_jax",
+    "round_robin_schedule",
+    "random_schedule",
+    "load_mse",
+    "normalized_load_mse",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LptResult:
+    """Outcome of a scheduling pass.
+
+    Attributes:
+      assignment: ``(F,)`` int — rail index per flow (original flow order).
+      loads: ``(N,)`` float — final per-rail cumulative load (LoadState).
+      order: ``(F,)`` int — the descending-weight processing order used.
+      mse: mean squared error of ``loads`` vs the uniform target (eq. 6).
+    """
+
+    assignment: np.ndarray
+    loads: np.ndarray
+    order: np.ndarray
+    mse: float
+
+
+def load_mse(loads: np.ndarray, target: np.ndarray | float | None = None) -> float:
+    """Paper eq. (6): ``MSE = (1/N) * sum_j (L_j - T_opt)^2``."""
+    loads = np.asarray(loads, dtype=np.float64)
+    if target is None:
+        target = loads.mean()
+    return float(np.mean((loads - np.asarray(target, dtype=np.float64)) ** 2))
+
+
+def normalized_load_mse(loads: np.ndarray) -> float:
+    """MSE normalized to [0, 1]: 0 = perfectly uniform (paper §VI-A metric).
+
+    Normalizes by the worst case where the entire load sits on one rail.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    total = loads.sum()
+    n = loads.size
+    if total <= 0:
+        return 0.0
+    worst = np.zeros(n)
+    worst[0] = total
+    denom = load_mse(worst, total / n)
+    return float(load_mse(loads) / denom) if denom > 0 else 0.0
+
+
+def lpt_schedule(
+    weights: np.ndarray,
+    num_rails: int,
+    source_ids: np.ndarray | None = None,
+    initial_loads: np.ndarray | None = None,
+) -> LptResult:
+    """Algorithm 2: LPT assignment of atomic flows to rails.
+
+    Args:
+      weights: ``(F,)`` flow sizes (bytes).
+      num_rails: N, the number of parallel rails / lanes.
+      source_ids: optional ``(F,)`` GPU ids used for tie-breaking (Alg. 2
+        step "Break ties by GPU index"); defaults to the flow index.
+      initial_loads: optional ``(N,)`` starting LoadState (default zeros —
+        the state is reset before each all-to-all round, §V-B).
+    """
+    weights = np.asarray(weights, dtype=np.float64)
+    if weights.ndim != 1:
+        raise ValueError(f"weights must be rank-1, got {weights.shape}")
+    if np.any(weights < 0):
+        raise ValueError("flow weights must be non-negative")
+    f = weights.size
+    if source_ids is None:
+        source_ids = np.arange(f)
+    source_ids = np.asarray(source_ids)
+    if source_ids.shape != (f,):
+        raise ValueError("source_ids must match weights shape")
+    loads = (
+        np.zeros(num_rails, dtype=np.float64)
+        if initial_loads is None
+        else np.asarray(initial_loads, dtype=np.float64).copy()
+    )
+    if loads.shape != (num_rails,):
+        raise ValueError("initial_loads must be (num_rails,)")
+
+    # Step 2: sort by descending weight, ties by source GPU index.
+    order = np.lexsort((source_ids, -weights))
+    assignment = np.empty(f, dtype=np.int64)
+    # Step 3: iterative allocation to the currently least-loaded rail.
+    for i in order:
+        j = int(np.argmin(loads))  # ties -> lowest rail index (np.argmin)
+        assignment[i] = j
+        loads[j] += weights[i]
+    return LptResult(
+        assignment=assignment,
+        loads=loads,
+        order=order,
+        mse=load_mse(loads),
+    )
+
+
+def _lpt_scan(weights_sorted: jnp.ndarray, initial_loads: jnp.ndarray):
+    """Greedy least-loaded assignment over pre-sorted weights via lax.scan."""
+
+    def step(loads, w):
+        j = jnp.argmin(loads)
+        loads = loads.at[j].add(w)
+        return loads, j
+
+    return jax.lax.scan(step, initial_loads, weights_sorted)
+
+
+def lpt_schedule_jax(
+    weights: jnp.ndarray,
+    num_rails: int,
+    initial_loads: jnp.ndarray | None = None,
+):
+    """Device LPT: jit-friendly Algorithm 2 on a ``jax.lax`` substrate.
+
+    Args:
+      weights: ``(F,)`` flow sizes (any float dtype; promoted to f32).
+      num_rails: static N.
+      initial_loads: optional ``(N,)`` starting LoadState.
+
+    Returns:
+      ``(assignment, loads, mse)`` — assignment is in original flow order.
+    """
+    weights = jnp.asarray(weights, dtype=jnp.float32)
+    f = weights.shape[0]
+    if initial_loads is None:
+        initial_loads = jnp.zeros((num_rails,), dtype=jnp.float32)
+    # Descending sort; jnp.argsort is stable, so equal weights keep index
+    # order — matching the host tie-break (source_ids == arange).
+    order = jnp.argsort(-weights, stable=True)
+    loads, assignment_sorted = _lpt_scan(weights[order], initial_loads)
+    # Scatter assignments back to original flow order.
+    assignment = jnp.zeros((f,), dtype=jnp.int32).at[order].set(
+        assignment_sorted.astype(jnp.int32)
+    )
+    mse = jnp.mean((loads - jnp.mean(loads)) ** 2)
+    return assignment, loads, mse
+
+
+def round_robin_schedule(weights: np.ndarray, num_rails: int) -> LptResult:
+    """Topology-blind baseline: flow i -> rail i mod N (static hashing)."""
+    weights = np.asarray(weights, dtype=np.float64)
+    f = weights.size
+    assignment = np.arange(f, dtype=np.int64) % num_rails
+    loads = np.zeros(num_rails, dtype=np.float64)
+    np.add.at(loads, assignment, weights)
+    return LptResult(
+        assignment=assignment, loads=loads, order=np.arange(f), mse=load_mse(loads)
+    )
+
+
+def random_schedule(weights: np.ndarray, num_rails: int, seed: int = 0) -> LptResult:
+    """REPS-style baseline: uniform random spraying of chunks over rails."""
+    weights = np.asarray(weights, dtype=np.float64)
+    f = weights.size
+    rng = np.random.default_rng(seed)
+    assignment = rng.integers(0, num_rails, size=f)
+    loads = np.zeros(num_rails, dtype=np.float64)
+    np.add.at(loads, assignment, weights)
+    return LptResult(
+        assignment=assignment, loads=loads, order=np.arange(f), mse=load_mse(loads)
+    )

@@ -1,0 +1,201 @@
+"""Flow splitting and the chunk→rail spray plan (paper §V).
+
+The paper's pipeline is *split → LPT-schedule → spray*:
+
+1. **Flow splitting** (§V-A "Flow Splitting and Atomicity"): large messages
+   are cut into fixed-size atomic chunks (32 KB default on the wire; here the
+   chunk is a configurable byte size, or a token block for MoE dispatch).
+   Splitting directly controls ``w_max`` and hence the Theorem-4 bound.
+2. **LPT scheduling** (§V-B): each sender independently assigns its atomic
+   chunks to the N rails with the LPT greedy rule over ``LoadState[N]``.
+3. **Spraying**: the transport layer transmits each chunk on its assigned
+   rail (here: the rail stream of :mod:`repro.core.rails_all_to_all`, or a
+   netsim NIC).
+
+This module is host-side planning shared by the netsim and the JAX
+collective. Everything is deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .lpt import LptResult, load_mse, lpt_schedule, random_schedule, round_robin_schedule
+
+__all__ = [
+    "AtomicFlow",
+    "SprayPlan",
+    "split_message",
+    "split_traffic_row",
+    "build_spray_plan",
+    "build_all_plans",
+    "plan_quality",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AtomicFlow:
+    """One indivisible chunk: ``src_domain -> dst_domain`` of ``size`` bytes.
+
+    ``src_gpu`` tags the originating GPU for Algorithm-2 tie-breaking;
+    ``flow_id`` identifies the parent (pre-split) message; ``seq`` orders the
+    chunks of one parent for reassembly.
+    """
+
+    src_domain: int
+    dst_domain: int
+    size: float
+    src_gpu: int = 0
+    flow_id: int = 0
+    seq: int = 0
+
+
+@dataclasses.dataclass
+class SprayPlan:
+    """Per-sender plan: chunk → rail assignment plus predicted loads."""
+
+    src_domain: int
+    flows: list[AtomicFlow]
+    assignment: np.ndarray  # (F,) rail index per flow
+    loads: np.ndarray  # (N,) predicted per-rail send bytes
+    mse: float
+    w_max: float
+    policy: str
+
+    def rail_chunks(self, rail: int) -> list[AtomicFlow]:
+        return [f for f, a in zip(self.flows, self.assignment) if a == rail]
+
+    def bound_holds(self) -> bool:
+        """Theorem 4: MSE <= w_max^2 (only guaranteed for the LPT policy)."""
+        return bool(self.mse <= self.w_max**2 + 1e-9)
+
+
+def split_message(
+    size: float,
+    chunk_bytes: float,
+    src_domain: int,
+    dst_domain: int,
+    src_gpu: int = 0,
+    flow_id: int = 0,
+) -> list[AtomicFlow]:
+    """Split one message into atomic chunks of at most ``chunk_bytes``."""
+    if size <= 0:
+        return []
+    if chunk_bytes <= 0:
+        raise ValueError("chunk_bytes must be positive")
+    n_full, rem = divmod(size, chunk_bytes)
+    chunks = [chunk_bytes] * int(n_full)
+    if rem > 1e-12:
+        chunks.append(rem)
+    return [
+        AtomicFlow(src_domain, dst_domain, s, src_gpu=src_gpu, flow_id=flow_id, seq=i)
+        for i, s in enumerate(chunks)
+    ]
+
+
+def split_traffic_row(
+    d1_row: np.ndarray,
+    src_domain: int,
+    chunk_bytes: float,
+) -> list[AtomicFlow]:
+    """Split all of one domain's egress (``D1[src]``, shape ``(N, M, N)``).
+
+    Each GPU-to-GPU demand becomes its own message before chunking, matching
+    Algorithm 2's "receive atomic flows from each local GPU".
+    """
+    n_src, m, n_dst = d1_row.shape
+    flows: list[AtomicFlow] = []
+    fid = 0
+    for g in range(n_src):
+        for f in range(m):
+            if f == src_domain:
+                continue  # intra-domain traffic stays on NVLink (Thm 1)
+            for gd in range(n_dst):
+                size = float(d1_row[g, f, gd])
+                if size > 0:
+                    flows.extend(
+                        split_message(size, chunk_bytes, src_domain, f, g, fid)
+                    )
+                    fid += 1
+    return flows
+
+
+def build_spray_plan(
+    flows: list[AtomicFlow],
+    num_rails: int,
+    src_domain: int,
+    policy: str = "lpt",
+    seed: int = 0,
+) -> SprayPlan:
+    """Assign atomic flows to rails under the chosen policy.
+
+    Policies: ``lpt`` (the paper), ``round_robin`` (static), ``random``
+    (REPS-style spray). All are *local* — they use only the sender's own
+    flows, which Theorem 3 shows is sufficient for global optimality.
+    """
+    weights = np.array([f.size for f in flows], dtype=np.float64)
+    src_ids = np.array([f.src_gpu for f in flows], dtype=np.int64)
+    if policy == "lpt":
+        res: LptResult = lpt_schedule(weights, num_rails, source_ids=src_ids)
+    elif policy == "round_robin":
+        res = round_robin_schedule(weights, num_rails)
+    elif policy == "random":
+        res = random_schedule(weights, num_rails, seed=seed)
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+    w_max = float(weights.max()) if weights.size else 0.0
+    return SprayPlan(
+        src_domain=src_domain,
+        flows=flows,
+        assignment=res.assignment,
+        loads=res.loads,
+        mse=res.mse,
+        w_max=w_max,
+        policy=policy,
+    )
+
+
+def build_all_plans(
+    d1: np.ndarray,
+    chunk_bytes: float,
+    policy: str = "lpt",
+    seed: int = 0,
+) -> list[SprayPlan]:
+    """Fully distributed planning: one independent SprayPlan per sender domain.
+
+    This is the paper's core operational claim (Theorem 3): each node
+    schedules *only its own* sending load, with no cross-node coordination,
+    yet the union of plans is globally near-optimal.
+    """
+    m = d1.shape[0]
+    n = d1.shape[1]
+    plans = []
+    for k in range(m):
+        flows = split_traffic_row(d1[k], k, chunk_bytes)
+        plans.append(build_spray_plan(flows, n, k, policy=policy, seed=seed + k))
+    return plans
+
+
+def plan_quality(plans: list[SprayPlan], num_rails: int) -> dict:
+    """Aggregate send/recv rail loads implied by a set of per-sender plans.
+
+    Returns global max send/recv load (the Theorem-2 objective), per-domain
+    MSEs, and the receive-side loads reconstructed from the one-to-one rail
+    mapping (chunk on rail n arrives on the destination's NIC n — §IV-E).
+    """
+    m = len(plans)
+    send = np.zeros((m, num_rails))
+    recv = np.zeros((m, num_rails))
+    for plan in plans:
+        send[plan.src_domain] = plan.loads
+        for f, a in zip(plan.flows, plan.assignment):
+            recv[f.dst_domain, a] += f.size
+    return {
+        "send_loads": send,
+        "recv_loads": recv,
+        "max_load": float(max(send.max(), recv.max())),
+        "send_mse": [load_mse(send[k]) for k in range(m)],
+        "recv_mse": [load_mse(recv[k]) for k in range(m)],
+    }

@@ -1,0 +1,260 @@
+"""RailS-scheduled all-to-all collectives in JAX (shard_map + ppermute).
+
+TPU adaptation of the paper's split→LPT→spray pipeline (DESIGN.md §3):
+
+* A **rail** is an independent collective stream: a chain of ring
+  ``ppermute`` steps over the expert-parallel mesh axis. Different rails are
+  data-independent op chains, so XLA's async collective scheduler can overlap
+  them (and, on hardware, different ring offsets occupy different ICI hops).
+* An **atomic chunk** is a fixed token-block slice of one peer's payload
+  (``tokens_per_chunk × d_model``), the unit the LPT planner assigns.
+* The **LPT plan** is computed on host (SPMD requires every device to run
+  the same ppermute schedule). Weights come either from a uniform model
+  (static shapes — the Theorem-3 ``P*=1/N`` regime) or from the MoE gating
+  count matrix (the paper's "known traffic matrix" premise); the per-offset
+  cost is the bottleneck sender of that ring step.
+
+Three transports, all numerically identical to ``jax.lax.all_to_all``:
+
+* :func:`dense_all_to_all` — monolithic baseline (one XLA all-to-all).
+* :func:`rails_all_to_all` — N-rail LPT-scheduled ring decomposition.
+* :func:`spray_all_to_all` — continuous Theorem-3 spray: the feature dim is
+  split into N equal rail slices, one all-to-all per rail (``P*=1/N``).
+
+Layout convention (standard MoE dispatch): per-device input ``x`` has shape
+``(E, T, D)`` — row ``e`` is the block destined for the device at index ``e``
+of ``axis_name``; output row ``e`` is the block received from device ``e``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .lpt import lpt_schedule
+
+__all__ = [
+    "RailSchedule",
+    "build_rail_schedule",
+    "dense_all_to_all",
+    "ring_all_to_all",
+    "rails_all_to_all",
+    "spray_all_to_all",
+    "rails_dispatch",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RailSchedule:
+    """Static chunk→rail plan for one all-to-all round.
+
+    ``entries[r]`` lists ``(offset, chunk)`` pairs assigned to rail ``r``;
+    ``offset`` ∈ [1, E) is the ring shift, ``chunk`` ∈ [0, C) the token block.
+    """
+
+    num_devices: int
+    num_rails: int
+    num_chunks: int
+    entries: tuple[tuple[tuple[int, int], ...], ...]
+    loads: tuple[float, ...]
+    mse: float
+    w_max: float
+
+    def num_transfers(self) -> int:
+        return sum(len(e) for e in self.entries)
+
+    def bound_holds(self) -> bool:
+        return self.mse <= self.w_max**2 + 1e-9
+
+
+def build_rail_schedule(
+    num_devices: int,
+    num_rails: int,
+    num_chunks: int = 1,
+    counts: np.ndarray | None = None,
+    bytes_per_token: float = 1.0,
+) -> RailSchedule:
+    """LPT-plan the ``(E-1) * C`` atomic transfers onto N rails.
+
+    Args:
+      num_devices: E, size of the expert-parallel axis.
+      num_rails: N parallel rail streams.
+      num_chunks: C token-block chunks per peer payload (flow splitting).
+      counts: optional ``(E, E)`` token-count matrix (``counts[i, j]`` tokens
+        from device i to device j). Per-offset weight is the *bottleneck*
+        sender of that ring step: ``w_s = max_i counts[i, (i+s) % E]`` —
+        every device participates in a ppermute step, so the step costs its
+        heaviest payload. ``None`` means the uniform/static-shape model.
+      bytes_per_token: scales counts into bytes for reporting.
+    """
+    e, n, c = num_devices, num_rails, num_chunks
+    if e < 2:
+        raise ValueError("need at least 2 devices for an all-to-all")
+    if n < 1 or c < 1:
+        raise ValueError("num_rails and num_chunks must be >= 1")
+    offsets = list(range(1, e))
+    flows = [(s, k) for s in offsets for k in range(c)]
+    if counts is not None:
+        counts = np.asarray(counts, dtype=np.float64)
+        if counts.shape != (e, e):
+            raise ValueError(f"counts must be ({e},{e}), got {counts.shape}")
+        idx = np.arange(e)
+        w_offset = {
+            s: float(counts[idx, (idx + s) % e].max()) * bytes_per_token
+            for s in offsets
+        }
+    else:
+        w_offset = {s: 1.0 * bytes_per_token for s in offsets}
+    weights = np.array([w_offset[s] / c for (s, k) in flows])
+    res = lpt_schedule(weights, n)
+    entries: list[list[tuple[int, int]]] = [[] for _ in range(n)]
+    for flow, rail in zip(flows, res.assignment):
+        entries[int(rail)].append(flow)
+    return RailSchedule(
+        num_devices=e,
+        num_rails=n,
+        num_chunks=c,
+        entries=tuple(tuple(es) for es in entries),
+        loads=tuple(float(v) for v in res.loads),
+        mse=float(res.mse),
+        w_max=float(weights.max()) if weights.size else 0.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Transports (to be called inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def dense_all_to_all(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Baseline: one monolithic XLA all-to-all (tiled, dim-0 blocks)."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+
+def _self_block(x: jnp.ndarray, axis_name: str) -> tuple[jnp.ndarray, jnp.ndarray]:
+    e = x.shape[0]
+    j = jax.lax.axis_index(axis_name)
+    out = jnp.zeros_like(x)
+    mine = jax.lax.dynamic_index_in_dim(x, j, axis=0, keepdims=True)
+    out = jax.lax.dynamic_update_slice_in_dim(out, mine, j, axis=0)
+    return out, j
+
+
+def ring_all_to_all(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Single-stream ring decomposition: E-1 sequential ppermute steps.
+
+    Equivalent to ``dense_all_to_all``; exists as the 1-rail reference of the
+    rail decomposition (and as the paper's "single NIC path" strawman).
+    """
+    e = x.shape[0]
+    out, j = _self_block(x, axis_name)
+    for s in range(1, e):
+        perm = [(i, (i + s) % e) for i in range(e)]
+        send = jnp.take(x, (j + s) % e, axis=0)
+        recv = jax.lax.ppermute(send[None], axis_name, perm)
+        out = jax.lax.dynamic_update_slice_in_dim(out, recv, (j - s) % e, axis=0)
+    return out
+
+
+def rails_all_to_all(
+    x: jnp.ndarray,
+    axis_name: str,
+    schedule: RailSchedule,
+) -> jnp.ndarray:
+    """N-rail LPT-scheduled all-to-all (the paper's technique, on TPU).
+
+    Each rail executes its LPT-assigned ``(offset, chunk)`` transfers as an
+    independent chain of ppermutes on disjoint token-block chunks; the N
+    chains have no data dependencies between them, so they overlap. The
+    self-block never leaves the device (Theorem 1: intra-domain traffic does
+    not cross rails).
+    """
+    e, t, *_ = x.shape
+    if schedule.num_devices != e:
+        raise ValueError(
+            f"schedule built for E={schedule.num_devices}, payload has E={e}"
+        )
+    c = schedule.num_chunks
+    if t % c != 0:
+        raise ValueError(f"tokens per peer ({t}) not divisible by chunks ({c})")
+    tc = t // c
+    out, j = _self_block(x, axis_name)
+
+    rail_outputs = []
+    for rail_entries in schedule.entries:
+        # Each rail contributes a partial output holding only its chunks.
+        partial_out = jnp.zeros_like(x)
+        for s, k in rail_entries:
+            perm = [(i, (i + s) % e) for i in range(e)]
+            blk = jnp.take(x, (j + s) % e, axis=0)  # (T, D...)
+            chunk = jax.lax.dynamic_slice_in_dim(blk, k * tc, tc, axis=0)
+            recv = jax.lax.ppermute(chunk[None], axis_name, perm)  # (1, tc, D...)
+            src = (j - s) % e
+            partial_out = jax.lax.dynamic_update_slice(
+                partial_out,
+                recv.astype(partial_out.dtype),
+                (src, k * tc) + (0,) * (x.ndim - 2),
+            )
+        rail_outputs.append(partial_out)
+    for po in rail_outputs:
+        out = out + po
+    return out
+
+
+def spray_all_to_all(
+    x: jnp.ndarray,
+    axis_name: str,
+    num_rails: int,
+) -> jnp.ndarray:
+    """Continuous Theorem-3 spray: ``P* = 1/N`` along the feature dimension.
+
+    The trailing dim is cut into N equal rail slices and each slice moves in
+    its own all-to-all — every (src, dst) flow is divided exactly 1/N per
+    rail, the closed-form optimum for arbitrarily divisible traffic. The N
+    collectives are independent and overlap.
+    """
+    d = x.shape[-1]
+    if d % num_rails != 0:
+        raise ValueError(f"feature dim {d} not divisible by num_rails {num_rails}")
+    slices = jnp.split(x, num_rails, axis=-1)
+    moved = [
+        jax.lax.all_to_all(s, axis_name, split_axis=0, concat_axis=0, tiled=True)
+        for s in slices
+    ]
+    return jnp.concatenate(moved, axis=-1)
+
+
+def rails_dispatch(
+    x: jnp.ndarray,
+    axis_name: str,
+    mode: str = "dense",
+    num_rails: int = 4,
+    num_chunks: int = 1,
+    counts: np.ndarray | None = None,
+) -> jnp.ndarray:
+    """Uniform entry point used by the MoE layer's dispatch/combine.
+
+    Modes: ``dense`` (baseline single all-to-all), ``ring`` (1-stream ring),
+    ``rails`` (LPT-scheduled N-rail ring — the paper), ``spray``
+    (continuous 1/N feature spray — Theorem 3's closed form).
+    """
+    if mode == "dense":
+        return dense_all_to_all(x, axis_name)
+    if mode == "ring":
+        return ring_all_to_all(x, axis_name)
+    if mode == "rails":
+        sched = build_rail_schedule(
+            num_devices=x.shape[0],
+            num_rails=num_rails,
+            num_chunks=num_chunks,
+            counts=counts,
+        )
+        return rails_all_to_all(x, axis_name, sched)
+    if mode == "spray":
+        return spray_all_to_all(x, axis_name, num_rails)
+    raise ValueError(f"unknown dispatch mode {mode!r}")

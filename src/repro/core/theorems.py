@@ -1,0 +1,131 @@
+"""Executable forms of the paper's Theorems 1–4 (§IV).
+
+These are used as invariants by the tests, by the netsim (to report the
+theoretical optimum alongside measured CCT), and by the roofline tooling
+(lower bounds for collective time).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .lp import closed_form_opt, loads_from_allocation
+
+__all__ = [
+    "rail_graph",
+    "theorem1_capacity",
+    "theorem1_maxflow_check",
+    "theorem2_lower_bound",
+    "theorem2_optimal_time",
+    "theorem3_check_symmetry",
+    "theorem4_mse_bound",
+    "lpt_makespan_bound",
+]
+
+
+def theorem1_capacity(num_rails: int, r1: float, r2: float) -> float:
+    """Theorem 1: ``Cap_{k->f} = N * R2`` provided ``R1 > R2``."""
+    if not r1 > r2:
+        raise ValueError(
+            f"Theorem 1 requires R1 > R2 (intra-domain faster); got R1={r1}, R2={r2}"
+        )
+    return num_rails * r2
+
+
+def rail_graph(num_domains: int, num_rails: int, r1: float, r2: float):
+    """Directed capacitated graph of the Rail topology (proof of Thm 1).
+
+    Nodes: ``("gpu", d, n)``, ``("nic", d, n)``, ``("leaf", n)``.
+    Edges: GPU<->NIC and full intra-domain GPU mesh at rate R1; NIC<->leaf at
+    rate R2. Returns a networkx DiGraph with ``capacity`` attributes.
+    """
+    import networkx as nx
+
+    g = nx.DiGraph()
+    for d in range(num_domains):
+        for n in range(num_rails):
+            g.add_edge(("gpu", d, n), ("nic", d, n), capacity=r1)
+            g.add_edge(("nic", d, n), ("gpu", d, n), capacity=r1)
+            g.add_edge(("nic", d, n), ("leaf", n), capacity=r2)
+            g.add_edge(("leaf", n), ("nic", d, n), capacity=r2)
+        # Intra-domain all-to-all fabric (NVLink analogue) at R1.
+        for a in range(num_rails):
+            for b in range(num_rails):
+                if a != b:
+                    g.add_edge(("gpu", d, a), ("gpu", d, b), capacity=r1)
+    return g
+
+
+def theorem1_maxflow_check(
+    num_domains: int, num_rails: int, r1: float, r2: float
+) -> float:
+    """Compute the max flow domain k->f on the explicit graph; must equal N*R2."""
+    import networkx as nx
+
+    g = rail_graph(num_domains, num_rails, r1, r2)
+    # Contract domain 0 to super-source, domain 1 to super-sink.
+    g.add_node("s")
+    g.add_node("t")
+    for n in range(num_rails):
+        g.add_edge("s", ("gpu", 0, n), capacity=float("inf"))
+        g.add_edge(("gpu", 1, n), "t", capacity=float("inf"))
+    value, _ = nx.maximum_flow(g, "s", "t")
+    return float(value)
+
+
+def theorem2_lower_bound(d2: np.ndarray, p: np.ndarray, r2: float) -> float:
+    """Eq. 22: any schedule with allocation P takes at least max(S,R)/R2."""
+    s, r = loads_from_allocation(d2, p)
+    return float(max(s.max(), r.max()) / r2)
+
+
+def theorem2_optimal_time(d2: np.ndarray, num_rails: int, r2: float) -> float:
+    """Eq. 20 with the Theorem-3 optimum: ``T* = max(row,col)/N/R2``."""
+    _, t_star = closed_form_opt(d2, num_rails)
+    return float(t_star / r2)
+
+
+def theorem3_check_symmetry(
+    d2: np.ndarray, num_rails: int, atol: float = 1e-9
+) -> dict:
+    """Verify: with ``P*=1/N``, send loads AND recv loads are both uniform.
+
+    Returns the send/recv load matrices and their max deviation from the
+    per-domain uniform targets (eqs. 25–26). Deviations must be ~0.
+    """
+    d2 = np.asarray(d2, dtype=np.float64)
+    m = d2.shape[0]
+    p = np.full((m, m, num_rails), 1.0 / num_rails)
+    s, r = loads_from_allocation(d2, p)
+    send_target = d2.sum(axis=1, keepdims=True) / num_rails
+    recv_target = d2.sum(axis=0)[:, None] / num_rails
+    send_dev = float(np.abs(s - send_target).max())
+    recv_dev = float(np.abs(r - recv_target).max())
+    ok = send_dev <= atol and recv_dev <= atol
+    return {
+        "send_loads": s,
+        "recv_loads": r,
+        "send_dev": send_dev,
+        "recv_dev": recv_dev,
+        "uniform": ok,
+    }
+
+
+def theorem4_mse_bound(
+    loads: np.ndarray, w_max: float, target: float | None = None
+) -> tuple[float, float, bool]:
+    """Theorem 4: LPT load MSE vs uniform target is bounded by ``w_max**2``.
+
+    Returns ``(mse, bound, holds)``.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    if target is None:
+        target = float(loads.mean())
+    mse = float(np.mean((loads - target) ** 2))
+    bound = float(w_max) ** 2
+    return mse, bound, mse <= bound + 1e-9
+
+
+def lpt_makespan_bound(num_rails: int) -> float:
+    """Graham's LPT approximation ratio (eq. 39): ``4/3 - 1/(3N)``."""
+    return 4.0 / 3.0 - 1.0 / (3.0 * num_rails)

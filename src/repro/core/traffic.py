@@ -1,0 +1,341 @@
+"""Traffic matrices and MoE workload generators (paper §IV-A, §VI-A).
+
+The paper describes communication demand at two levels:
+
+* ``D1`` — GPU-to-GPU traffic: shape ``(M, N, M, N)`` where ``D1[d, n, f, m]``
+  is bytes from GPU ``(d, n)`` to GPU ``(f, m)``.
+* ``D2`` — domain-to-domain traffic: shape ``(M, M)``,
+  ``D2[d, f] = sum_{n,m} D1[d, n, f, m]`` (paper eq. 1).
+
+Workload generators mirror Table I of the paper:
+
+==============  ============  =========================
+type            token input   gating
+==============  ============  =========================
+uniform         uniform       uniform
+sparse          uniform       Top-K (column sparsity)
+sender-skewed   Zipf          uniform
+receiver-skewed uniform       Zipf
+real workload   uniform       training-trace phases
+==============  ============  =========================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+__all__ = [
+    "TrafficMatrix",
+    "aggregate_domains",
+    "uniform_workload",
+    "sparse_topk_workload",
+    "sender_skew_workload",
+    "receiver_skew_workload",
+    "mixtral_trace_workload",
+    "moe_gating_traffic",
+    "WORKLOADS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMatrix:
+    """All-to-all demand at GPU and domain granularity.
+
+    Attributes:
+      d1: ``(M, N, M, N)`` GPU-to-GPU bytes.
+      d2: ``(M, M)`` domain-to-domain bytes (eq. 1 aggregate of ``d1``).
+      name: workload tag for reporting.
+    """
+
+    d1: np.ndarray
+    d2: np.ndarray
+    name: str = "custom"
+
+    @property
+    def num_domains(self) -> int:
+        return self.d1.shape[0]
+
+    @property
+    def num_rails(self) -> int:
+        return self.d1.shape[1]
+
+    def total_bytes(self) -> float:
+        return float(self.d1.sum())
+
+    def domain_send_totals(self) -> np.ndarray:
+        """Total egress bytes per source domain: ``sum_f D2[k, f]``."""
+        return self.d2.sum(axis=1)
+
+    def domain_recv_totals(self) -> np.ndarray:
+        """Total ingress bytes per destination domain: ``sum_k D2[k, f]``."""
+        return self.d2.sum(axis=0)
+
+    def validate(self) -> None:
+        if self.d1.ndim != 4:
+            raise ValueError(f"d1 must be rank-4 (M,N,M,N), got {self.d1.shape}")
+        m, n, m2, n2 = self.d1.shape
+        if (m, n) != (m2, n2):
+            raise ValueError(f"d1 must be (M,N,M,N) symmetric in shape, got {self.d1.shape}")
+        if self.d2.shape != (m, m):
+            raise ValueError(f"d2 shape {self.d2.shape} != ({m},{m})")
+        if np.any(self.d1 < 0):
+            raise ValueError("negative traffic")
+        if not np.allclose(self.d2, aggregate_domains(self.d1)):
+            raise ValueError("d2 is not the domain aggregate of d1 (eq. 1 violated)")
+
+
+def aggregate_domains(d1: np.ndarray) -> np.ndarray:
+    """Paper eq. (1): ``D2[d,f] = sum_{n,m} D1[d,n,f,m]``."""
+    return d1.sum(axis=(1, 3))
+
+
+def _make(d1: np.ndarray, name: str) -> TrafficMatrix:
+    tm = TrafficMatrix(d1=d1, d2=aggregate_domains(d1), name=name)
+    tm.validate()
+    return tm
+
+
+# ---------------------------------------------------------------------------
+# Synthetic workloads (paper §VI-A, Table I)
+# ---------------------------------------------------------------------------
+
+
+def uniform_workload(
+    num_domains: int,
+    num_rails: int,
+    bytes_per_pair: float = 1.0,
+    include_self: bool = False,
+) -> TrafficMatrix:
+    """Every sender GPU sends equal data to every receiver GPU."""
+    m, n = num_domains, num_rails
+    d1 = np.full((m, n, m, n), bytes_per_pair, dtype=np.float64)
+    if not include_self:
+        for d in range(m):
+            d1[d, :, d, :] = 0.0
+    return _make(d1, "uniform")
+
+
+def sparse_topk_workload(
+    num_domains: int,
+    num_rails: int,
+    sparsity: float,
+    top_k: int = 2,
+    bytes_per_pair: float = 1.0,
+    seed: int = 0,
+    concentrate: str = "gpu",
+) -> TrafficMatrix:
+    """Top-K expert-selection matrix with column-wise sparsity (paper §VI-C).
+
+    ``sparsity`` is the fraction of receiver domains that are *inactive*
+    (carry no expert traffic). The surviving active receivers split the total
+    demand; each sender routes to ``top_k`` of the active receivers, so higher
+    sparsity concentrates proportionally more traffic on fewer domains —
+    the hot-expert regime of the paper. ``sparsity=0`` is the fully dense
+    Top-K pattern.
+
+    ``concentrate='gpu'`` (default) lands each hot expert's traffic on one
+    GPU of the active domain (experts live on specific GPUs — this is what
+    creates single-NIC bottlenecks for topology-blind policies);
+    ``concentrate='domain'`` spreads it evenly over the domain's GPUs.
+    """
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity must be in [0,1), got {sparsity}")
+    m, n = num_domains, num_rails
+    rng = np.random.default_rng(seed)
+    n_active = max(top_k, int(round(m * (1.0 - sparsity))))
+    active = rng.choice(m, size=n_active, replace=False)
+    expert_gpu = {int(f): int(rng.integers(n)) for f in active}
+    # Preserve total demand of the dense-uniform workload so that CCTs are
+    # comparable across sparsity levels (the paper normalizes this way).
+    total_per_sender = bytes_per_pair * (m - 1) * n * n
+    d1 = np.zeros((m, n, m, n), dtype=np.float64)
+    for d in range(m):
+        choices = [f for f in active if f != d]
+        if not choices:
+            continue
+        targets = rng.choice(choices, size=min(top_k, len(choices)), replace=False)
+        per_target = total_per_sender / len(targets)
+        for f in targets:
+            if concentrate == "gpu":
+                # All of the expert's ingress lands on the expert's GPU.
+                d1[d, :, f, expert_gpu[int(f)]] += per_target / n
+            else:
+                d1[d, :, f, :] += per_target / (n * n)
+    return _make(d1, f"sparse-{sparsity:g}")
+
+
+def _zipf_weights(m: int, alpha: float) -> np.ndarray:
+    ranks = np.arange(1, m + 1, dtype=np.float64)
+    w = ranks ** (-alpha)
+    return w / w.sum()
+
+
+def sender_skew_workload(
+    num_domains: int,
+    num_rails: int,
+    alpha: float = 1.2,
+    total_bytes: float | None = None,
+    seed: int = 0,
+) -> TrafficMatrix:
+    """Zipf token input: a few hotspot *sender GPUs* carry most traffic (§VI-D).
+
+    The Zipf is applied at GPU granularity (M*N senders): uneven input makes
+    some expert GPUs far busier than their siblings, so policies pinned to
+    the source GPU's NIC (ECMP/PLB) develop high sender-side MSE while
+    multi-NIC schemes stay balanced (paper Fig. 10b).
+    """
+    m, n = num_domains, num_rails
+    rng = np.random.default_rng(seed)
+    weights = _zipf_weights(m * n, alpha)
+    rng.shuffle(weights)
+    weights = weights.reshape(m, n)
+    if total_bytes is None:
+        total_bytes = float(m * (m - 1) * n * n)
+    d1 = np.zeros((m, n, m, n), dtype=np.float64)
+    for d in range(m):
+        others = [f for f in range(m) if f != d]
+        for g in range(n):
+            per_pair = total_bytes * weights[d, g] / (len(others) * n)
+            for f in others:
+                d1[d, g, f, :] = per_pair / n
+    return _make(d1, "sender-skew")
+
+
+def receiver_skew_workload(
+    num_domains: int,
+    num_rails: int,
+    alpha: float = 1.2,
+    total_bytes: float | None = None,
+    seed: int = 0,
+) -> TrafficMatrix:
+    """Zipf gating: many senders target a few hot *expert GPUs* — incast (§VI-E).
+
+    Zipf at GPU granularity: a hot expert lives on one GPU, so its ingress
+    concentrates on a single NIC for delivery-pinned policies, while RailS
+    sprays across the domain's N rails and forwards intra-domain (Fig. 11c).
+    """
+    m, n = num_domains, num_rails
+    rng = np.random.default_rng(seed)
+    weights = _zipf_weights(m * n, alpha)
+    rng.shuffle(weights)
+    weights = weights.reshape(m, n)
+    if total_bytes is None:
+        total_bytes = float(m * (m - 1) * n * n)
+    d1 = np.zeros((m, n, m, n), dtype=np.float64)
+    for f in range(m):
+        others = [d for d in range(m) if d != f]
+        for gd in range(n):
+            per_pair = total_bytes * weights[f, gd] / (len(others) * n)
+            for d in others:
+                d1[d, :, f, gd] = per_pair / n
+    return _make(d1, "receiver-skew")
+
+
+# ---------------------------------------------------------------------------
+# Mixtral-style training trace (paper §VI-F)
+# ---------------------------------------------------------------------------
+
+#: Per-expert payload (bytes) by training phase, from the paper's §VI-F
+#: description: ~100 MB at Start growing to 256 MB at Stable.
+MIXTRAL_PHASE_BYTES = {
+    "start": 100e6,
+    "early": 160e6,
+    "mid": 208e6,
+    "stable": 256e6,
+}
+
+
+def mixtral_trace_workload(
+    num_domains: int,
+    num_rails: int,
+    phase: str = "stable",
+    mode: str = "dense",
+    num_experts: int = 8,
+    top_k: int = 2,
+    seed: int = 0,
+    popularity_alpha: float = 0.8,
+    noise_sigma: float = 1.0,
+) -> TrafficMatrix:
+    """Replay of the Mixtral 8x7B trace pattern (paper Figs. 12–13).
+
+    ``mode='dense'``: each expert's payload is spread over the expert
+    domain's GPUs (parallel exchange). ``mode='sparse'``: each expert's
+    payload is aggregated on a single GPU of the domain (the paper's sparse
+    setup — this is what creates single-NIC receiver bottlenecks for
+    topology-blind policies).
+
+    Training-based gating is not uniform (paper Fig. 2d): experts have a
+    Zipf(``popularity_alpha``) popularity profile and per-(sender, expert)
+    token counts carry lognormal(``noise_sigma``) variability. Totals are
+    renormalized so every phase moves the same bytes as the paper's trace.
+    """
+    if phase not in MIXTRAL_PHASE_BYTES:
+        raise ValueError(f"unknown phase {phase!r}; choose {sorted(MIXTRAL_PHASE_BYTES)}")
+    if mode not in ("dense", "sparse"):
+        raise ValueError(f"mode must be dense|sparse, got {mode!r}")
+    m, n = num_domains, num_rails
+    rng = np.random.default_rng(seed)
+    # Experts are placed round-robin on domains; token input stays uniform
+    # while the gating popularity and per-pair variability skew the matrix.
+    expert_domain = np.arange(num_experts) % m
+    popularity = _zipf_weights(num_experts, popularity_alpha)
+    rng.shuffle(popularity)
+    total_bytes = MIXTRAL_PHASE_BYTES[phase] * num_experts * (top_k / num_experts)
+    d1 = np.zeros((m, n, m, n), dtype=np.float64)
+    for e in range(num_experts):
+        f = expert_domain[e]
+        senders = [d for d in range(m) if d != f]
+        expert_total = total_bytes * popularity[e]
+        noise = rng.lognormal(0.0, noise_sigma, size=(len(senders), n))
+        noise /= noise.sum()
+        if mode == "dense":
+            for i, d in enumerate(senders):
+                for g in range(n):
+                    d1[d, g, f, :] += expert_total * noise[i, g] / n
+        else:
+            gpu = int(rng.integers(n))  # aggregate on one GPU of the domain
+            for i, d in enumerate(senders):
+                for g in range(n):
+                    d1[d, g, f, gpu] += expert_total * noise[i, g]
+    return _make(d1, f"mixtral-{mode}-{phase}")
+
+
+# ---------------------------------------------------------------------------
+# From MoE gating decisions (the framework's own traffic source)
+# ---------------------------------------------------------------------------
+
+
+def moe_gating_traffic(
+    counts: np.ndarray,
+    bytes_per_token: float,
+    num_rails: int,
+) -> TrafficMatrix:
+    """Build a TrafficMatrix from MoE gating counts.
+
+    Args:
+      counts: ``(M, M)`` token counts — ``counts[k, f]`` tokens routed from
+        expert-parallel shard ``k`` to shard ``f`` (gating output; the paper's
+        "known traffic matrix" premise).
+      bytes_per_token: payload bytes per routed token (``d_model * itemsize``).
+      num_rails: rails per domain (spread evenly over GPU pairs).
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    if counts.ndim != 2 or counts.shape[0] != counts.shape[1]:
+        raise ValueError(f"counts must be (M,M), got {counts.shape}")
+    m = counts.shape[0]
+    n = num_rails
+    d2 = counts * bytes_per_token
+    d1 = np.broadcast_to(d2[:, None, :, None], (m, n, m, n)) / (n * n)
+    return _make(np.ascontiguousarray(d1), "moe-gating")
+
+
+WORKLOADS: dict[str, Callable[..., TrafficMatrix]] = {
+    "uniform": uniform_workload,
+    "sparse": sparse_topk_workload,
+    "sender_skew": sender_skew_workload,
+    "receiver_skew": receiver_skew_workload,
+    "mixtral": mixtral_trace_workload,
+}

@@ -1,0 +1,5 @@
+"""Deterministic sharded data pipeline."""
+
+from .pipeline import DataConfig, SyntheticTokens, make_batch, pack_documents
+
+__all__ = ["DataConfig", "SyntheticTokens", "make_batch", "pack_documents"]

@@ -1,0 +1,171 @@
+"""Pallas TPU flash-attention kernel (BlockSpec VMEM tiling).
+
+TPU-native design notes (DESIGN.md §3 hardware adaptation):
+
+* Tiles are MXU-aligned: ``block_q x head_dim`` and ``block_k x head_dim``
+  with ``head_dim`` padded to a lane multiple (128) by the caller.
+* The grid is ``(batch*heads, T/block_q, S/block_k)``; the KV dimension is
+  the minor (sequential) axis so the f32 accumulator, running max ``m`` and
+  normalizer ``l`` live in VMEM scratch across KV steps — the online-softmax
+  recurrence never touches HBM.
+* GQA is expressed in the BlockSpec index maps: the K/V index map divides
+  the head id by ``rep = H // Hkv``, so query heads of one group stream the
+  same KV tiles (VMEM reuse instead of materializing repeated KV).
+* Causal / sliding-window masks are applied with ``broadcasted_iota`` over
+  absolute positions; fully-masked tiles still execute (documented trade-off
+  — grid pruning is a possible follow-up, see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    q_offset: int,
+    block_q: int,
+    block_k: int,
+    seq_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32) * scale  # (block_q, hd)
+    k = k_ref[...].astype(jnp.float32)  # (block_k, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_k
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    correction = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * correction + p.sum(axis=-1)
+    v = v_ref[...].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * correction[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-37)[:, None]
+        o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pallas flash attention. Same contract as ``ref.flash_attention_ref``.
+
+    ``q: (B, T, H, hd)``, ``k/v: (B, S, Hkv, hd)`` with ``H % Hkv == 0``.
+    """
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    if scale is None:
+        scale = hd**-0.5
+
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    pad_q = (-t) % block_q
+    pad_k = (-s) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    tq, sk = qp.shape[1], kp.shape[1]
+
+    # (B*H, T, hd) query-major layout; KV stays (B*Hkv, S, hd).
+    q3 = qp.transpose(0, 2, 1, 3).reshape(b * h, tq, hd)
+    k3 = kp.transpose(0, 2, 1, 3).reshape(b * hkv, sk, hd)
+    v3 = vp.transpose(0, 2, 1, 3).reshape(b * hkv, sk, hd)
+
+    grid = (b * h, tq // block_q, sk // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_k=block_k,
+        seq_k=s,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_k, hd), lambda bh, qi, ki, rep=rep: (bh // rep, ki, 0)),
+            pl.BlockSpec((None, block_k, hd), lambda bh, qi, ki, rep=rep: (bh // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    out = out.reshape(b, h, tq, hd).transpose(0, 2, 1, 3)
+    if pad_q:
+        out = out[:, :t]
+    return out

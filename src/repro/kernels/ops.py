@@ -1,0 +1,88 @@
+"""Backend-dispatching jit wrappers for the Pallas kernels.
+
+On TPU the Pallas kernels run natively; everywhere else the pure-jnp oracle
+(ref.py) executes — same semantics, so model code calls these
+unconditionally. ``REPRO_PALLAS=interpret`` forces the Pallas path in
+interpret mode (used by kernel tests), ``REPRO_PALLAS=off`` forces the ref.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .grouped_matmul import grouped_matmul_pallas
+from .ref import flash_attention_ref, grouped_matmul_ref, rmsnorm_ref
+from .rmsnorm import rmsnorm_pallas
+
+__all__ = ["flash_attention", "grouped_matmul", "rmsnorm", "kernel_backend"]
+
+
+def kernel_backend() -> str:
+    mode = os.environ.get("REPRO_PALLAS", "auto")
+    if mode == "interpret":
+        return "interpret"
+    if mode == "off":
+        return "ref"
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return mode
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    backend = kernel_backend()
+    if backend in ("pallas", "interpret"):
+        return flash_attention_pallas(
+            q,
+            k,
+            v,
+            causal=causal,
+            q_offset=q_offset,
+            window=window,
+            softcap=softcap,
+            scale=scale,
+            block_q=block_q,
+            block_k=block_k,
+            interpret=backend == "interpret",
+        )
+    return flash_attention_ref(
+        q,
+        k,
+        v,
+        causal=causal,
+        q_offset=q_offset,
+        window=window,
+        softcap=softcap,
+        scale=scale,
+        block_k=block_k,
+    )
+
+
+def grouped_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    backend = kernel_backend()
+    if backend in ("pallas", "interpret"):
+        return grouped_matmul_pallas(x, w, interpret=backend == "interpret")
+    return grouped_matmul_ref(x, w)
+
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    backend = kernel_backend()
+    if backend in ("pallas", "interpret"):
+        return rmsnorm_pallas(x, weight, eps, interpret=backend == "interpret")
+    return rmsnorm_ref(x, weight, eps)

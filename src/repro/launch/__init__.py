@@ -1,0 +1,21 @@
+"""Launchers: production mesh, dry-run, train/serve drivers.
+
+NOTE: ``dryrun`` sets XLA_FLAGS at import — import it only in a dedicated
+process (the ``python -m repro.launch.dryrun`` entry point).
+"""
+
+from .mesh import make_production_mesh
+from .steps import (
+    abstract_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = [
+    "abstract_train_state",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_production_mesh",
+    "make_train_step",
+]

@@ -1,0 +1,251 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the dry-run (and ONLY the dry-run) needs 512 placeholder devices
+so ``jax.make_mesh`` can build the production meshes. Smoke tests and
+benches see 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+        --shape train_4k --multipod 0 --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+
+Per cell this script:
+  1. builds the production mesh ((16,16) or (2,16,16)) and the arch's view,
+  2. lowers + compiles the step function with explicit in/out shardings,
+  3. prints ``compiled.memory_analysis()`` (proves it fits) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for the roofline),
+  4. parses collective bytes from the compiled HLO,
+  5. writes one JSON blob per cell (consumed by EXPERIMENTS.md tooling).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config, list_archs, supports_shape
+from repro.launch.inputs import batch_specs, cache_specs, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    abstract_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.parallel.mesh_view import build_mesh_context
+from repro.parallel.sharding import opt_state_pspecs, param_pspecs, to_shardings
+from repro.roofline.analysis import HW_V5E, collective_bytes, model_flops, roofline_terms
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def _sds_with(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree,
+        shardings,
+    )
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             overrides: dict | None = None, microbatches: int | None = None) -> dict:
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if microbatches:
+        shape = dataclasses.replace(shape, num_microbatches=microbatches)
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = build_mesh_context(mesh, cfg)
+    n_chips = ctx.total_devices
+
+    params_abs, opt_abs = abstract_train_state(cfg)
+    p_shard = to_shardings(ctx, param_pspecs(cfg, ctx, params_abs))
+    params_sds = _sds_with(params_abs, p_shard)
+
+    if shape.kind == "train":
+        opt_spec = opt_state_pspecs(cfg, ctx, params_abs)
+        o_shard = to_shardings(ctx, opt_spec)
+        opt_sds = _sds_with(opt_abs, o_shard)
+        step = make_train_step(cfg, ctx, shape)
+        batch = batch_specs(cfg, shape, ctx)
+        with ctx.mesh:
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_sds, opt_sds, batch
+            )
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, ctx, shape)
+        batch = batch_specs(cfg, shape, ctx)
+        with ctx.mesh:
+            lowered = jax.jit(step).lower(params_sds, batch)
+    else:  # decode
+        step = make_decode_step(cfg, ctx)
+        batch = batch_specs(cfg, shape, ctx)
+        cache = cache_specs(cfg, shape, ctx)
+        pos = jax.ShapeDtypeStruct((), np.int32)
+        with ctx.mesh:
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                params_sds, cache, batch, pos
+            )
+    t_lower = time.time() - t0
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll_raw = collective_bytes(hlo)
+    # Loop-corrected per-device costs (cost_analysis counts while bodies
+    # once — see roofline/hlo_cost.py).
+    walked = analyze_hlo(hlo)
+
+    dev_flops = float(walked.flops)
+    dev_bytes = float(walked.hbm_bytes)
+    dev_coll = float(walked.collective_bytes)
+    terms = roofline_terms(dev_flops, dev_bytes, dev_coll)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else (
+        shape.seq_len if shape.kind == "prefill" else 1))
+    mf = model_flops(cfg.active_param_count(), tokens,
+                     "train" if shape.kind == "train" else "infer")
+    useful_ratio = mf / (dev_flops * n_chips) if dev_flops else 0.0
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "chips": n_chips,
+        "mesh_view": {a: int(ctx.mesh.shape[a]) for a in ctx.mesh.axis_names},
+        "dispatch_mode": cfg.dispatch_mode if cfg.is_moe else None,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_estimate_gib": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3),
+        },
+        "cost": {
+            "device_flops": dev_flops,
+            "device_dot_flops": float(walked.dot_flops),
+            "device_elementwise_flops": float(walked.elementwise_flops),
+            "device_bytes": dev_bytes,
+            "global_flops": dev_flops * n_chips,
+            "raw_cost_analysis_flops": float(cost.get("flops", 0.0)),
+        },
+        "collectives": {k: float(v) for k, v in walked.collective.items()},
+        "collective_bytes_total": dev_coll,
+        "collective_op_counts": walked.collective_ops,
+        "collectives_raw_unlooped": {
+            k: v for k, v in coll_raw.items() if k != "op_counts"
+        },
+        "roofline": terms,
+        "model_flops": mf,
+        "useful_flops_ratio": round(useful_ratio, 4),
+        "hw": HW_V5E,
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {'multipod' if multi_pod else 'pod'}] "
+              f"compile={t_compile:.1f}s peak={result['memory']['peak_estimate_gib']}GiB "
+              f"flops/dev={dev_flops:.3e} coll/dev={dev_coll:.3e}B "
+              f"dominant={terms['dominant']} bound={terms['bound_s']*1e3:.2f}ms "
+              f"useful={useful_ratio:.2f}")
+        print("  memory_analysis:", mem)
+    result["_hlo_text"] = hlo
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multipod", type=int, default=0, choices=(0, 1))
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--tag", type=str, default=None, help="output file tag suffix")
+    ap.add_argument("--mb", type=int, default=None, help="override microbatches")
+    ap.add_argument(
+        "--set", action="append", default=[],
+        help="config override field=value (repeatable), e.g. --set dispatch_mode=dense",
+    )
+    args = ap.parse_args()
+
+    overrides: dict = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            import ast
+
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape, bool(args.multipod))]
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+        if args.tag:
+            tag += f"__{args.tag}"
+        path = outdir / f"{tag}.json"
+        if path.exists():
+            print(f"[{tag}] cached, skipping")
+            continue
+        try:
+            result = run_cell(arch, shape, mp, overrides=overrides or None,
+                              microbatches=args.mb)
+        except Exception as e:  # noqa: BLE001 — record the failure, keep going
+            traceback.print_exc()
+            result = {"arch": arch, "shape": shape, "multi_pod": mp,
+                      "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        hlo_text = result.pop("_hlo_text", None)
+        if hlo_text is not None:
+            import zstandard
+
+            (outdir / f"{tag}.hlo.zst").write_bytes(
+                zstandard.ZstdCompressor(level=6).compress(hlo_text.encode())
+            )
+        path.write_text(json.dumps(result, indent=2))
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

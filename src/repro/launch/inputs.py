@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run contract).
+
+``input_specs`` returns weak-type-correct, shardable stand-ins — no device
+allocation anywhere. For training that's ``{tokens, labels}``; for serving
+the request batch (+ the KV/state caches for decode).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models import init_cache
+from ..parallel.mesh_view import MeshContext
+from ..parallel.sharding import batch_pspecs, cache_pspecs, to_shardings
+
+__all__ = ["batch_specs", "cache_specs", "input_specs"]
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, ctx: MeshContext) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        t = 1
+    specs: dict[str, Any] = {"tokens": _sds((b, t), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = _sds((b, t), jnp.int32)
+    if cfg.use_mrope:
+        specs["positions"] = _sds((b, 3, t), jnp.int32)
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        specs["embeds"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    shardings = to_shardings(ctx, batch_pspecs(cfg, ctx, shape))
+    return {
+        k: _sds(v.shape, v.dtype, shardings.get(k)) for k, v in specs.items()
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, ctx: MeshContext):
+    """Decode caches as ShapeDtypeStructs (shapes via eval_shape, no alloc)."""
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    shardings = to_shardings(ctx, cache_pspecs(cfg, ctx, cache_shape))
+    return jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), cache_shape, shardings
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, ctx: MeshContext) -> dict:
+    """All inputs for the step function of this (arch x shape) cell."""
+    out: dict[str, Any] = {"batch": batch_specs(cfg, shape, ctx)}
+    if shape.kind == "decode":
+        out["cache"] = cache_specs(cfg, shape, ctx)
+        out["pos"] = _sds((), jnp.int32)
+    return out

@@ -1,0 +1,23 @@
+"""Production meshes (pinned by the multi-pod dry-run contract).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "PRODUCTION_SHAPES"]
+
+PRODUCTION_SHAPES = {
+    False: ((16, 16), ("data", "model")),
+    True: ((2, 16, 16), ("pod", "data", "model")),
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape, axes = PRODUCTION_SHAPES[multi_pod]
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,91 @@
+"""Serving driver: batched prefill + autoregressive decode.
+
+Small-scale runnable (CPU, reduced config) and production-mesh lowering
+share the same step functions. Requests are batched; decode is a jit'd
+single-token step donated in place.
+
+Example:
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.launch.train import make_local_mesh
+from repro.models import init_cache, init_params
+from repro.parallel.mesh_view import build_mesh_context
+from repro.parallel.sharding import param_shardings
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_local_mesh()
+    ctx = build_mesh_context(mesh, cfg)
+    max_len = args.prompt_len + args.gen
+
+    key = jax.random.PRNGKey(args.seed)
+    with ctx.mesh:
+        params = init_params(cfg, key)
+        params = jax.tree.map(jax.device_put, params, param_shardings(cfg, ctx, params))
+        decode = jax.jit(make_decode_step(cfg, ctx), donate_argnums=(1,))
+
+        rng = np.random.default_rng(args.seed)
+        prompts = rng.integers(2, cfg.vocab_size, size=(args.batch, args.prompt_len))
+        cache = init_cache(cfg, args.batch, max_len)
+
+        # Prefill via repeated decode steps (token-at-a-time priming keeps
+        # one compiled program; a fused prefill path exists for the dry-run).
+        t0 = time.time()
+        logits = None
+        for pos in range(args.prompt_len):
+            batch = {"tokens": jnp.asarray(prompts[:, pos : pos + 1], jnp.int32)}
+            logits, cache = decode(params, cache, batch, jnp.int32(pos))
+        t_prefill = time.time() - t0
+
+        generated = []
+        t1 = time.time()
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        for i in range(args.gen):
+            generated.append(np.asarray(tok))
+            logits, cache = decode(
+                params, cache, {"tokens": tok}, jnp.int32(args.prompt_len + i)
+            )
+            if args.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / args.temperature)[:, None]
+            else:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        t_gen = time.time() - t1
+
+    out_tokens = np.concatenate(generated, axis=1)
+    tput = args.batch * args.gen / t_gen if t_gen > 0 else 0.0
+    print(f"prefill {args.prompt_len} tok x{args.batch}: {t_prefill:.2f}s")
+    print(f"decode {args.gen} tok x{args.batch}: {t_gen:.2f}s  ({tput:.1f} tok/s)")
+    print("sample:", out_tokens[0][:12])
+    return {"tokens": out_tokens, "tput": tput}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Architecture zoo: pure-JAX model definitions for the assigned archs."""
+
+from .moe import EpInfo, moe_apply, moe_init
+from .transformer import decode_fn, init_cache, init_params, loss_fn, prefill_fn
+
+__all__ = [
+    "EpInfo",
+    "decode_fn",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "moe_apply",
+    "moe_init",
+    "prefill_fn",
+]

@@ -1,0 +1,208 @@
+"""Shared model building blocks (pure JAX, params as pytrees of arrays).
+
+Conventions:
+* Parameters are nested dicts of ``jnp.ndarray``; init functions take an
+  explicit PRNG key and return the pytree. Everything works under
+  ``jax.eval_shape`` (the dry-run never allocates).
+* Compute dtype is the config dtype (bf16 by default); normalizations and
+  softmax statistics accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+
+__all__ = [
+    "dense_init",
+    "rmsnorm_init",
+    "rmsnorm",
+    "embedding_init",
+    "rope_angles",
+    "apply_rope",
+    "apply_mrope",
+    "mlp_init",
+    "mlp_apply",
+    "chunked_cross_entropy",
+    "soft_cap",
+]
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    if scale is None:
+        scale = d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(
+        dtype
+    )
+
+
+def rmsnorm_init(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    return ops.rmsnorm(x, w, eps)
+
+
+def embedding_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * d**-0.5).astype(
+        dtype
+    )
+
+
+def soft_cap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    """``positions (..., T) -> angles (..., T, head_dim//2)`` in fp32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    return positions[..., None].astype(jnp.float32) * freq
+
+
+def _rotate(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x1, x2) of the last dim by ``angles``.
+
+    ``x: (B, T, H, hd)``, ``angles: (B, T, hd//2)`` (broadcast over heads).
+    """
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """Standard RoPE. ``x: (B, T, H, hd)``, ``positions: (B, T)``."""
+    angles = rope_angles(positions, x.shape[-1], theta)  # (B, T, hd/2)
+    return _rotate(x, angles)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    sections: tuple,
+) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): the rotary spectrum is split into
+    ``sections`` frequency bands, each driven by its own position stream
+    (temporal / height / width). ``positions: (B, 3, T)``; ``sum(sections)
+    == head_dim // 2``.
+    """
+    half = x.shape[-1] // 2
+    if sum(sections) != half:
+        raise ValueError(f"mrope sections {sections} must sum to head_dim/2={half}")
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    parts = []
+    start = 0
+    for i, width in enumerate(sections):
+        pos_i = positions[:, i, :].astype(jnp.float32)  # (B, T)
+        parts.append(pos_i[..., None] * freq[start : start + width])
+        start += width
+    angles = jnp.concatenate(parts, axis=-1)  # (B, T, hd/2)
+    return _rotate(x, angles)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    gate = jnp.einsum("btd,df->btf", x, params["w_gate"])
+    up = jnp.einsum("btd,df->btf", x, params["w_up"])
+    a = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+    return jnp.einsum("btf,fd->btd", a * up, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Chunked vocab cross-entropy — never materializes (tokens, vocab) logits
+# ---------------------------------------------------------------------------
+
+
+def chunked_cross_entropy(
+    hidden: jnp.ndarray,
+    w_vocab: jnp.ndarray,
+    labels: jnp.ndarray,
+    chunk: int = 2048,
+    final_softcap: Optional[float] = None,
+    shard_fn=None,
+) -> jnp.ndarray:
+    """Mean NLL over tokens, computed in token chunks.
+
+    Args:
+      hidden: ``(B, T, D)`` final hidden states.
+      w_vocab: ``(D, V)`` output projection (tied embedding transpose or
+        untied lm_head).
+      labels: ``(B, T)`` int32 targets; ``-1`` marks padding (ignored).
+      chunk: tokens per chunk; peak live logits are ``chunk x V``.
+      shard_fn: optional activation-constraint hook — applied to each logits
+        chunk (kind='logits') so the vocab dim stays model-sharded; the gold
+        logit is extracted with an iota mask (not a gather) so the whole
+        chunk partitions elementwise over the sharded vocab dim.
+    """
+    b, t, d = hidden.shape
+    n = b * t
+    h = hidden.reshape(n, d)
+    y = labels.reshape(n)
+    chunk = min(chunk, n)
+    pad = (-n) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad), constant_values=-1)
+    n_chunks = h.shape[0] // chunk
+    h = h.reshape(n_chunks, chunk, d)
+    y = y.reshape(n_chunks, chunk)
+    v = w_vocab.shape[1]
+
+    def body(carry, inputs):
+        loss_sum, count = carry
+        hc, yc = inputs
+        logits = jnp.einsum("cd,dv->cv", hc, w_vocab).astype(jnp.float32)
+        logits = soft_cap(logits, final_softcap)
+        if shard_fn is not None:
+            logits = shard_fn(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold_mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, v), 1) == jnp.maximum(
+            yc, 0
+        )[:, None]
+        gold = jnp.sum(jnp.where(gold_mask, logits, 0.0), axis=-1)
+        valid = (yc >= 0).astype(jnp.float32)
+        loss_sum = loss_sum + jnp.sum((lse - gold) * valid)
+        count = count + jnp.sum(valid)
+        return (loss_sum, count), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (h, y)
+    )
+    return loss_sum / jnp.maximum(count, 1.0)

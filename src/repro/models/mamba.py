@@ -1,0 +1,152 @@
+"""Mamba2-style selective state-space block (zamba2's mixer).
+
+Simplified SSD recurrence with multi-head state:
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * (B_t ⊗ x_t)      h: (nh, hd, ds)
+    y_t = C_t · h_t + D * x_t
+    out = out_proj( rmsnorm(y * silu(z)) )
+
+Train/prefill runs the recurrence as a ``lax.scan`` over time (O(T) state,
+sub-quadratic — this is what qualifies the hybrid archs for long_500k);
+decode is a single-step state update (O(1) per token).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+__all__ = ["mamba_init", "mamba_forward", "mamba_decode", "init_mamba_cache"]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.mamba_expand * cfg.d_model
+    nh = d_in // cfg.mamba_head_dim
+    return d_in, nh, cfg.mamba_head_dim, cfg.ssm_state
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in, nh, hd, ds = _dims(cfg)
+    conv_ch = d_in + 2 * ds
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * ds + nh, dtype),
+        "conv_w": (
+            jax.random.normal(ks[1], (cfg.conv_width, conv_ch), dtype=jnp.float32)
+            * cfg.conv_width**-0.5
+        ).astype(dtype),
+        "a_log": jnp.zeros((nh,), dtype=jnp.float32),
+        "d_skip": jnp.ones((nh,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((nh,), dtype=jnp.float32),
+        "norm_w": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(ks[3], d_in, d, dtype),
+    }
+
+
+def _split_proj(params, cfg: ModelConfig, x):
+    d_in, nh, hd, ds = _dims(cfg)
+    proj = jnp.einsum("btd,dk->btk", x, params["in_proj"])
+    xs, z, b_c, c_c, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + ds, 2 * d_in + 2 * ds], axis=-1
+    )
+    return xs, z, b_c, c_c, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. ``x: (B, T, C)``, ``w: (W, C)``.
+
+    ``state``: previous ``W-1`` inputs ``(B, W-1, C)`` for decode; returns
+    ``(y, new_state)``.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : width - 1])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+W-1, C)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1) :]
+    return jax.nn.silu(y), new_state
+
+
+def _ssm_step(h, inputs, a):
+    """One recurrence step. ``h: (B, nh, hd, ds)``."""
+    x_h, b_t, c_t, dt_t = inputs  # (B,nh,hd), (B,ds), (B,ds), (B,nh)
+    decay = jnp.exp(dt_t * a)  # (B, nh); a < 0
+    h = h * decay[..., None, None] + (
+        dt_t[..., None, None] * x_h[..., None] * b_t[:, None, None, :]
+    )
+    y = jnp.einsum("bnhs,bs->bnh", h, c_t)
+    return h, y
+
+
+def mamba_forward(params: dict, cfg: ModelConfig, x: jnp.ndarray, h0=None, conv0=None):
+    """``x: (B, T, D)`` -> ``(out, (h_T, conv_state))``."""
+    b, t, d = x.shape
+    d_in, nh, hd, ds = _dims(cfg)
+    xs, z, b_c, c_c, dt = _split_proj(params, cfg, x)
+    conv_in = jnp.concatenate([xs, b_c, c_c], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"], conv0)
+    xs, b_c, c_c = jnp.split(conv_out, [d_in, d_in + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])  # (nh,)
+
+    x_heads = xs.reshape(b, t, nh, hd).astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, ds), dtype=jnp.float32)
+
+    def step(h, ins):
+        return _ssm_step(h, ins, a)
+
+    inputs = (
+        x_heads.transpose(1, 0, 2, 3),
+        b_c.astype(jnp.float32).transpose(1, 0, 2),
+        c_c.astype(jnp.float32).transpose(1, 0, 2),
+        dt.transpose(1, 0, 2),
+    )
+    # Chunked remat scan: the backward pass of a plain T-step scan stores
+    # the (B, nh, hd, ds) state at every step — O(T) memory. Scanning over
+    # sqrt-sized chunks with a checkpointed inner scan stores only chunk
+    # boundaries (O(T/chunk)) and recomputes inside — this is what keeps
+    # train_4k on the SSM/hybrid archs inside the HBM budget.
+    chunk = min(128, t)
+    if t % chunk == 0 and t > chunk:
+        nc = t // chunk
+        chunked = jax.tree.map(
+            lambda a_: a_.reshape(nc, chunk, *a_.shape[1:]), inputs
+        )
+
+        @jax.checkpoint
+        def chunk_body(h, ins):
+            h2, ys = jax.lax.scan(step, h, ins)
+            return h2, ys
+
+        h_f, ys = jax.lax.scan(chunk_body, h0, chunked)
+        ys = ys.reshape(t, b, nh, hd)
+    else:
+        h_f, ys = jax.lax.scan(step, h0, inputs)
+    ys = ys.transpose(1, 0, 2, 3)  # (B, T, nh, hd)
+    ys = ys + params["d_skip"][None, None, :, None] * x_heads
+    y = ys.reshape(b, t, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"], cfg.rms_eps)
+    out = jnp.einsum("btk,kd->btd", y, params["out_proj"])
+    return out, (h_f, conv_state)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_in, nh, hd, ds = _dims(cfg)
+    conv_ch = d_in + 2 * ds
+    return {
+        "h": jnp.zeros((batch, nh, hd, ds), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype=dtype),
+    }
+
+
+def mamba_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict):
+    """One-token step. ``x: (B, 1, D)`` -> ``(out, new_cache)``."""
+    out, (h, conv) = mamba_forward(params, cfg, x, h0=cache["h"], conv0=cache["conv"])
+    return out, {"h": h, "conv": conv}

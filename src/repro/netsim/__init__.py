@@ -1,0 +1,25 @@
+"""Discrete-event rail-fabric simulator — the paper's evaluation substrate.
+
+The paper evaluates RailS in a Mininet/SoftRoCE datacenter emulation; this
+package provides the deterministic equivalent: an explicit rail topology
+(`topology`), a chunk-granularity FIFO queueing engine (`events`), the five
+policies of §VI-A (`balancers`), and the paper's metrics (`metrics`).
+`simulate.run_collective` is the benchmark entry point.
+"""
+
+from .balancers import (
+    POLICIES,
+    EcmpPolicy,
+    MinRttPolicy,
+    PlbPolicy,
+    Policy,
+    RailSPolicy,
+    RepsPolicy,
+    make_policy,
+)
+from .events import ChunkJob, Engine, SimResult
+from .metrics import CollectiveMetrics, compute_metrics
+from .simulate import build_jobs, run_collective, run_policy_suite
+from .topology import Link, RailTopology
+
+__all__ = [k for k in dir() if not k.startswith("_")]

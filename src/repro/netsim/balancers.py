@@ -1,0 +1,215 @@
+"""Load-balancing policies (paper §VI-A baselines + RailS).
+
+Each policy answers one question per atomic chunk: *which path does this
+chunk take?* The structural differences the paper identifies are encoded
+explicitly:
+
+* **ECMP** — per-flow static hash; the source NIC is pinned to the source
+  GPU's NIC (no intra-domain forwarding), the (dst-rail, spine) pair is
+  hashed. Topology-blind; elephant flows collide (Challenge 1/2).
+* **PLB** — ECMP start, but a flow re-hashes its (dst-rail, spine) choice
+  when its chunks experience queueing beyond a threshold (flowlet repath).
+  Still pinned to the source NIC — host-level rehashing cannot move a flow
+  off its NIC in a rail fabric, which is why PLB cannot fix NIC imbalance.
+* **MinRTT** — MPTCP-style multipath: one subflow per rail (direct paths,
+  any local NIC reachable over NVLink). Each chunk goes to the subflow with
+  the smallest estimated RTT: fresh local up-link backlog + *stale* remote
+  backlog. Reactive; herds under incast when the stale signal flips.
+* **REPS** — per-chunk spraying across rails, recycling entropy away from
+  congestion: uniform random over rails whose stale path estimate is not
+  flagged congested. Near-perfect *sender* balance; receiver-side it can
+  only react after the fact (paper Fig. 11).
+* **RailS** — the paper: LPT plan per sender domain over its atomic chunks
+  (local info only), direct rail paths, proactive. Uniform send ⇒ uniform
+  receive by Theorem 3; no probes, no feedback.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.lpt import lpt_schedule
+from .events import ChunkJob, Engine
+from .topology import RailTopology
+
+__all__ = [
+    "Policy",
+    "EcmpPolicy",
+    "PlbPolicy",
+    "MinRttPolicy",
+    "RepsPolicy",
+    "RailSPolicy",
+    "make_policy",
+    "POLICIES",
+]
+
+
+class Policy:
+    name = "base"
+
+    def __init__(self, topo: RailTopology, seed: int = 0):
+        self.topo = topo
+        self.rng = np.random.default_rng(seed)
+
+    def prepare(self, jobs_by_sender: dict[tuple[int, int], list[ChunkJob]]) -> None:
+        """Hook for proactive policies (RailS plans here)."""
+
+    def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
+        raise NotImplementedError
+
+
+class EcmpPolicy(Policy):
+    """RoCE reality: the QP endpoints are pinned — src NIC is the source
+    GPU's, dst NIC is the destination GPU's (GPUDirect affinity). ECMP only
+    hashes the *spine* choice between the two leaves (same-rail pairs go
+    direct). This is the paper's "fixed NIC-leaf bindings" critique."""
+
+    name = "ecmp"
+
+    def __init__(self, topo: RailTopology, seed: int = 0):
+        super().__init__(topo, seed)
+        self._flow_spine: dict[int, int] = {}
+
+    @staticmethod
+    def _mix(x: int) -> int:
+        # splitmix64 finalizer — a real switch hash, avoids modular aliasing.
+        x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        return x ^ (x >> 31)
+
+    def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
+        spine = self._flow_spine.get(job.flow_id)
+        if spine is None:
+            spine = self._mix(job.flow_id) % self.topo.num_spines
+            self._flow_spine[job.flow_id] = spine
+        return self.topo.spine_path(
+            job.src_domain, job.dst_domain, job.src_gpu, job.dst_gpu, spine
+        )
+
+
+class PlbPolicy(Policy):
+    """PLB rehashes the IPv6 flow label on congestion — which can move a
+    flow across *spines*, but never off its NIC endpoints. In a rail fabric
+    the NICs are the bottleneck, so PLB's repath authority is structurally
+    insufficient (paper §VI-D/E)."""
+
+    name = "plb"
+
+    def __init__(self, topo: RailTopology, seed: int = 0, threshold: float = 4.0):
+        super().__init__(topo, seed)
+        self.threshold = threshold  # backlog multiple of one chunk's service
+        self._flow_spine: dict[int, int] = {}
+
+    def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
+        spine = self._flow_spine.get(job.flow_id)
+        if spine is None:
+            spine = int(self.rng.integers(self.topo.num_spines))
+        path = self.topo.spine_path(
+            job.src_domain, job.dst_domain, job.src_gpu, job.dst_gpu, spine
+        )
+        # Congestion check: if current backlog along the path exceeds
+        # threshold x this chunk's own service time, repath (flowlet gap).
+        service = job.size / self.topo.r2
+        if eng.path_delay(path, job.src_domain) > self.threshold * service:
+            spine = int(self.rng.integers(self.topo.num_spines))
+            path = self.topo.spine_path(
+                job.src_domain, job.dst_domain, job.src_gpu, job.dst_gpu, spine
+            )
+        self._flow_spine[job.flow_id] = spine
+        return path
+
+
+class MinRttPolicy(Policy):
+    """MPTCP-style multipath: one subflow per *source* NIC (bandwidth
+    aggregation across the sender's rails), each chunk on the subflow with
+    the smallest estimated RTT. Delivery is still pinned to the destination
+    GPU's NIC — transport-level multipath cannot exploit parallel reception
+    (paper §VI-F: "they fail to leverage parallel reception")."""
+
+    name = "minrtt"
+
+    def _subflow(self, job: ChunkJob, src_rail: int) -> list[str]:
+        spine = (src_rail * 7 + job.dst_gpu) % self.topo.num_spines
+        return self.topo.spine_path(
+            job.src_domain, job.dst_domain, src_rail, job.dst_gpu, spine
+        )
+
+    def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
+        best_path, best = None, float("inf")
+        for rail in range(self.topo.n):
+            path = self._subflow(job, rail)
+            est = eng.path_delay(path, job.src_domain)
+            if est < best:
+                best, best_path = est, path
+        assert best_path is not None
+        return best_path
+
+
+class RepsPolicy(Policy):
+    """Per-chunk spraying with entropy recycling: chunks spray uniformly
+    across source rails/spines whose (stale) estimate is not flagged
+    congested. Sender side this is near-perfect; receiver side delivery is
+    pinned to the destination GPU's NIC, so incast hotspots remain."""
+
+    name = "reps"
+
+    def __init__(self, topo: RailTopology, seed: int = 0, congest_factor: float = 2.0):
+        super().__init__(topo, seed)
+        self.congest_factor = congest_factor
+
+    def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
+        ests, paths = [], []
+        for rail in range(self.topo.n):
+            spine = int(self.rng.integers(self.topo.num_spines))
+            path = self.topo.spine_path(
+                job.src_domain, job.dst_domain, rail, job.dst_gpu, spine
+            )
+            paths.append(path)
+            ests.append(eng.path_delay(path, job.src_domain))
+        arr = np.asarray(ests)
+        mean = arr.mean() if arr.size else 0.0
+        good = [r for r in range(self.topo.n) if arr[r] <= self.congest_factor * max(mean, 1e-12)]
+        pool = good if good else list(range(self.topo.n))
+        return paths[int(self.rng.choice(pool))]
+
+
+class RailSPolicy(Policy):
+    """The paper: per-domain LPT over atomic chunks, direct rails only."""
+
+    name = "rails"
+
+    def __init__(self, topo: RailTopology, seed: int = 0):
+        super().__init__(topo, seed)
+        self._assignment: dict[int, int] = {}  # chunk_id -> rail
+
+    def prepare(self, jobs_by_sender: dict[tuple[int, int], list[ChunkJob]]) -> None:
+        # Algorithm 2: collect all atomic flows of each source *domain*
+        # (intra-domain NVLink forwarding pools the GPUs), LPT-assign to the
+        # domain's N NICs using only local information.
+        by_domain: dict[int, list[ChunkJob]] = {}
+        for (_d, _g), jobs in jobs_by_sender.items():
+            for j in jobs:
+                by_domain.setdefault(j.src_domain, []).append(j)
+        for _domain, jobs in by_domain.items():
+            weights = np.array([j.size for j in jobs])
+            src_ids = np.array([j.src_gpu for j in jobs])
+            res = lpt_schedule(weights, self.topo.n, source_ids=src_ids)
+            for j, rail in zip(jobs, res.assignment):
+                self._assignment[j.chunk_id] = int(rail)
+
+    def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
+        rail = self._assignment[job.chunk_id]
+        return self.topo.rail_path(job.src_domain, job.dst_domain, rail)
+
+
+POLICIES = {
+    p.name: p for p in (EcmpPolicy, PlbPolicy, MinRttPolicy, RepsPolicy, RailSPolicy)
+}
+
+
+def make_policy(name: str, topo: RailTopology, seed: int = 0) -> Policy:
+    try:
+        return POLICIES[name](topo, seed=seed)
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; choose {sorted(POLICIES)}") from None

@@ -1,0 +1,182 @@
+"""Discrete-event queueing engine for the rail fabric.
+
+Two phases, mirroring how a real deployment separates *control* (path
+decisions from imperfect signals) from *data* (what the fabric actually
+does):
+
+**Assignment phase.** Senders are visited round-robin (an all-to-all is a
+single synchronized burst); the policy assigns each atomic chunk a path.
+Reactive policies estimate congestion from per-link *assigned-bytes*
+counters — their own domain's up-links fresh, everything remote through a
+stale snapshot refreshed every ``probe_every`` decisions (RTT-delayed
+signals; the staleness is what makes reactive schemes herd under incast,
+paper §VI-E). RailS ignores the estimates entirely: its plan is proactive
+(Theorem 3 + LPT).
+
+**Simulation phase.** A proper discrete-event simulation: every link is a
+FIFO server (rate ``R`` bytes/s); chunks enter their first-hop queue at
+t=0 in assignment order, are serviced in arrival order, and hop to the next
+link after ``hop_latency``. Store-and-forward at chunk granularity —
+pipelining across chunks of the same flow arises naturally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from .topology import RailTopology
+
+__all__ = ["ChunkJob", "SimResult", "Engine"]
+
+
+@dataclasses.dataclass
+class ChunkJob:
+    """One atomic chunk to be transferred."""
+
+    chunk_id: int
+    flow_id: int
+    src_domain: int
+    src_gpu: int
+    dst_domain: int
+    dst_gpu: int
+    size: float
+    # Filled by the engine:
+    path: list[str] | None = None
+    start_time: float = 0.0
+    finish_time: float = 0.0
+
+
+@dataclasses.dataclass
+class SimResult:
+    jobs: list[ChunkJob]
+    link_bytes: dict[str, float]
+    makespan: float
+    flow_cct: dict[int, float]  # per parent-flow completion time
+
+    def cct_percentiles(self, qs=(50.0, 80.0, 95.0, 99.0)) -> dict[str, float]:
+        vals = np.array(sorted(self.flow_cct.values()))
+        out = {"mean": float(vals.mean())}
+        for q in qs:
+            out[f"p{int(q)}"] = float(np.percentile(vals, q))
+        out["max"] = float(vals.max())
+        return out
+
+
+class Engine:
+    def __init__(
+        self,
+        topo: RailTopology,
+        hop_latency: float = 1e-6,
+        probe_every: int = 64,
+        seed: int = 0,
+    ):
+        self.topo = topo
+        self.hop_latency = hop_latency
+        self.probe_every = probe_every
+        self.rng = np.random.default_rng(seed)
+        self.assigned_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
+        self._snapshot: dict[str, float] = dict(self.assigned_bytes)
+        self.link_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
+        self._decisions = 0
+
+    # -- state the policies may query (assignment-phase estimates) ----------
+
+    def queue_delay(self, link: str, now: float = 0.0, fresh: bool = True) -> float:
+        """Estimated seconds of backlog on ``link`` from assigned bytes."""
+        src = self.assigned_bytes if fresh else self._snapshot
+        return src[link] / self.topo.links[link].rate
+
+    def path_delay(self, path: list[str], src_domain: int, now: float = 0.0) -> float:
+        """Estimated waiting along a path: fresh for the sender's own
+        up-links, stale snapshot for everything remote."""
+        total = 0.0
+        for link in path:
+            fresh = link.startswith("up:") and link.split(":")[1] == str(src_domain)
+            total += self.queue_delay(link, now, fresh=fresh)
+        return total
+
+    def _commit(self, job: ChunkJob, path: list[str]) -> None:
+        job.path = path
+        for link in path:
+            self.assigned_bytes[link] += job.size
+        self._decisions += 1
+        if self._decisions % self.probe_every == 0:
+            self._snapshot = dict(self.assigned_bytes)
+
+    # -- orchestration --------------------------------------------------------
+
+    def run(self, jobs_by_sender: dict[tuple[int, int], list[ChunkJob]], policy) -> SimResult:
+        # Phase 1: round-robin assignment.
+        queues = {k: list(v) for k, v in jobs_by_sender.items() if v}
+        order = sorted(queues)
+        all_jobs: list[ChunkJob] = []
+        while queues:
+            for key in list(order):
+                q = queues.get(key)
+                if not q:
+                    queues.pop(key, None)
+                    continue
+                job = q.pop(0)
+                self._commit(job, policy.choose_path(self, job))
+                all_jobs.append(job)
+            order = [k for k in order if k in queues]
+        # Phase 2: discrete-event FIFO simulation.
+        self._simulate(all_jobs)
+        flow_cct: dict[int, float] = {}
+        for j in all_jobs:
+            flow_cct[j.flow_id] = max(flow_cct.get(j.flow_id, 0.0), j.finish_time)
+        makespan = max((j.finish_time for j in all_jobs), default=0.0)
+        return SimResult(
+            jobs=all_jobs,
+            link_bytes=dict(self.link_bytes),
+            makespan=makespan,
+            flow_cct=flow_cct,
+        )
+
+    def _simulate(self, jobs: list[ChunkJob]) -> None:
+        """Heap-driven DES: links are FIFO servers, service in arrival order."""
+        link_queue: dict[str, list] = {k: [] for k in self.topo.links}  # heap of (arr, seq, job_idx, hop)
+        link_busy: dict[str, bool] = {k: False for k in self.topo.links}
+        events: list = []  # heap of (time, seq, kind, link, job_idx, hop)
+        seq = 0
+
+        def arrive(t: float, job_idx: int, hop: int):
+            nonlocal seq
+            job = jobs[job_idx]
+            assert job.path is not None
+            link = job.path[hop]
+            heapq.heappush(link_queue[link], (t, seq, job_idx, hop))
+            seq += 1
+            maybe_start(link, t)
+
+        def maybe_start(link: str, t: float):
+            nonlocal seq
+            if link_busy[link] or not link_queue[link]:
+                return
+            arr, _s, job_idx, hop = heapq.heappop(link_queue[link])
+            job = jobs[job_idx]
+            link_busy[link] = True
+            if hop == 0:
+                job.start_time = t
+            finish = t + job.size / self.topo.links[link].rate
+            self.link_bytes[link] += job.size
+            heapq.heappush(events, (finish, seq, "done", link, job_idx, hop))
+            seq += 1
+
+        # All chunks hit their first-hop queue at t=0, in assignment order.
+        for i, _job in enumerate(jobs):
+            arrive(0.0, i, 0)
+
+        while events:
+            t, _s, _kind, link, job_idx, hop = heapq.heappop(events)
+            job = jobs[job_idx]
+            link_busy[link] = False
+            assert job.path is not None
+            if hop + 1 < len(job.path):
+                arrive(t + self.hop_latency, job_idx, hop + 1)
+            else:
+                job.finish_time = t
+            maybe_start(link, t)

@@ -1,0 +1,98 @@
+"""Evaluation metrics (paper §VI-A).
+
+* **CCT** — collective completion time: mean / p80 / p95 / p99 / max over
+  parent flows (p99 ≈ total transfer completion in the paper).
+* **BusBw** — effective bus bandwidth: ``total_bytes / makespan`` normalized
+  by the Theorem-1 aggregate capacity actually available to one domain.
+* **NIC TX/RX volumes** — per-(domain, rail) bytes on up/down links.
+* **Normalized load MSE** — per-domain NIC-load MSE on a 0–1 scale
+  (0 = perfectly uniform), paper eq. 6 + §VI-A normalization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.lpt import normalized_load_mse
+from .events import SimResult
+from .topology import RailTopology
+
+__all__ = ["CollectiveMetrics", "compute_metrics"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveMetrics:
+    policy: str
+    workload: str
+    makespan: float
+    cct: dict  # mean/p50/p80/p95/p99/max
+    bus_bw: float  # bytes/sec achieved
+    bus_bw_frac: float  # fraction of N*R2 aggregate (one domain's share)
+    nic_tx: np.ndarray  # (M, N) bytes sent per NIC
+    nic_rx: np.ndarray  # (M, N) bytes received per NIC
+    send_mse: float  # worst per-domain normalized MSE (TX)
+    recv_mse: float  # worst per-domain normalized MSE (RX)
+    opt_time: float  # Theorem-2 lower bound for this workload
+    opt_ratio: float  # makespan / opt_time (1.0 = optimal)
+
+    def row(self) -> dict:
+        return {
+            "policy": self.policy,
+            "workload": self.workload,
+            "makespan_s": self.makespan,
+            "cct_mean_s": self.cct["mean"],
+            "cct_p99_s": self.cct["p99"],
+            "busbw_gbps": self.bus_bw * 8 / 1e9,
+            "busbw_frac": self.bus_bw_frac,
+            "send_mse": self.send_mse,
+            "recv_mse": self.recv_mse,
+            "opt_ratio": self.opt_ratio,
+        }
+
+
+def compute_metrics(
+    result: SimResult,
+    topo: RailTopology,
+    workload_name: str,
+    policy_name: str,
+    opt_time: float,
+) -> CollectiveMetrics:
+    m, n = topo.m, topo.n
+    nic_tx = np.zeros((m, n))
+    nic_rx = np.zeros((m, n))
+    for name, volume in result.link_bytes.items():
+        kind, d, r = name.split(":")[0], *name.split(":")[1:]
+        if kind == "up":
+            nic_tx[int(d), int(r)] += volume
+        elif kind == "down":
+            nic_rx[int(d), int(r)] += volume
+    total_bytes = nic_tx.sum()
+    makespan = result.makespan
+    bus_bw = total_bytes / makespan if makespan > 0 else 0.0
+    # Theorem 1: one domain's aggregate is N*R2; the full fabric carries
+    # M domains concurrently, so normalize by M*N*R2 for the fabric view.
+    bus_bw_frac = bus_bw / (m * n * topo.r2)
+    send_mse = max(
+        (normalized_load_mse(nic_tx[d]) for d in range(m) if nic_tx[d].sum() > 0),
+        default=0.0,
+    )
+    recv_mse = max(
+        (normalized_load_mse(nic_rx[d]) for d in range(m) if nic_rx[d].sum() > 0),
+        default=0.0,
+    )
+    return CollectiveMetrics(
+        policy=policy_name,
+        workload=workload_name,
+        makespan=makespan,
+        cct=result.cct_percentiles(),
+        bus_bw=bus_bw,
+        bus_bw_frac=bus_bw_frac,
+        nic_tx=nic_tx,
+        nic_rx=nic_rx,
+        send_mse=send_mse,
+        recv_mse=recv_mse,
+        opt_time=opt_time,
+        opt_ratio=makespan / opt_time if opt_time > 0 else float("inf"),
+    )

@@ -1,0 +1,85 @@
+"""Top-level simulation driver: traffic matrix -> policy -> metrics.
+
+``run_collective`` is the single entry point the benchmarks use; it mirrors
+the paper's experiment loop: build atomic chunks from ``D1`` (flow
+splitting), hand them to a policy (which may plan proactively), run the
+queueing engine, and score with §VI-A metrics against the Theorem-2 optimum.
+"""
+
+from __future__ import annotations
+
+from ..core.plan import split_message
+from ..core.theorems import theorem2_optimal_time
+from ..core.traffic import TrafficMatrix
+from .balancers import make_policy
+from .events import ChunkJob, Engine
+from .metrics import CollectiveMetrics, compute_metrics
+from .topology import RailTopology
+
+__all__ = ["build_jobs", "run_collective", "run_policy_suite"]
+
+
+def build_jobs(
+    tm: TrafficMatrix, chunk_bytes: float
+) -> dict[tuple[int, int], list[ChunkJob]]:
+    """Flow-split D1 into atomic ChunkJobs, grouped by source GPU."""
+    m, n = tm.num_domains, tm.num_rails
+    jobs: dict[tuple[int, int], list[ChunkJob]] = {}
+    chunk_id = 0
+    flow_id = 0
+    for d in range(m):
+        for g in range(n):
+            sender_jobs: list[ChunkJob] = []
+            for f in range(m):
+                if f == d:
+                    continue  # intra-domain stays on NVLink (Theorem 1)
+                for gd in range(n):
+                    size = float(tm.d1[d, g, f, gd])
+                    if size <= 0:
+                        continue
+                    for part in split_message(size, chunk_bytes, d, f, g, flow_id):
+                        sender_jobs.append(
+                            ChunkJob(
+                                chunk_id=chunk_id,
+                                flow_id=flow_id,
+                                src_domain=d,
+                                src_gpu=g,
+                                dst_domain=f,
+                                dst_gpu=gd,
+                                size=part.size,
+                            )
+                        )
+                        chunk_id += 1
+                    flow_id += 1
+            if sender_jobs:
+                jobs[(d, g)] = sender_jobs
+    return jobs
+
+
+def run_collective(
+    tm: TrafficMatrix,
+    policy_name: str,
+    r1: float = 400e9,
+    r2: float = 50e9,
+    chunk_bytes: float = 4 * 2**20,
+    seed: int = 0,
+    probe_every: int = 64,
+) -> CollectiveMetrics:
+    """Simulate one all-to-all under one policy; return §VI-A metrics."""
+    topo = RailTopology(tm.num_domains, tm.num_rails, r1=r1, r2=r2)
+    jobs = build_jobs(tm, chunk_bytes)
+    policy = make_policy(policy_name, topo, seed=seed)
+    policy.prepare(jobs)
+    engine = Engine(topo, probe_every=probe_every, seed=seed)
+    result = engine.run(jobs, policy)
+    opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
+    return compute_metrics(result, topo, tm.name, policy_name, opt)
+
+
+def run_policy_suite(
+    tm: TrafficMatrix,
+    policies: tuple[str, ...] = ("ecmp", "minrtt", "plb", "reps", "rails"),
+    **kwargs,
+) -> dict[str, CollectiveMetrics]:
+    """Run every policy on the same workload (the paper's comparison grid)."""
+    return {p: run_collective(tm, p, **kwargs) for p in policies}

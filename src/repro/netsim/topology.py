@@ -1,0 +1,107 @@
+"""Rail-optimized datacenter topology model (paper §III-A, Fig. 3).
+
+M domains × N NICs. NIC ``(d, n)`` connects to leaf switch ``S_n`` at rate
+``R2``; leaves connect to a spine layer (for ECMP cross-rail paths); GPUs
+inside a domain interconnect at rate ``R1 > R2`` (NVLink analogue — per
+Theorem 1 it never bottlenecks, so intra-domain hops are modeled as free).
+
+A *path* is the ordered list of serialization resources (links) a chunk
+occupies. Two path families exist, matching the paper's Challenge 1:
+
+* **rail-direct**: ``NIC(src,n) → S_n → NIC(dst,n)`` — same rail index n on
+  both sides (the one-to-one mapping RailS exploits).
+* **spine**: ``NIC(src,n) → S_n → spine_p → S_m → NIC(dst,m)`` — crosses
+  rails via the spine; this is what ECMP hashing uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Link", "RailTopology"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """A unidirectional serialization resource with rate in bytes/sec."""
+
+    name: str
+    rate: float
+
+
+class RailTopology:
+    """Explicit link inventory + path construction for the rail fabric."""
+
+    def __init__(
+        self,
+        num_domains: int,
+        num_rails: int,
+        r1: float = 400e9,
+        r2: float = 50e9,
+        num_spines: int = None,  # type: ignore[assignment]
+        spine_rate: float = None,  # type: ignore[assignment]
+    ):
+        if num_spines is None:
+            # Non-blocking spine: each leaf has M NIC-facing ports at R2, so
+            # it needs M spine uplinks at R2 for full bisection.
+            num_spines = num_domains
+        if spine_rate is None:
+            spine_rate = r2
+        if not r1 > r2:
+            raise ValueError("Theorem 1 premise requires R1 > R2")
+        self.m = num_domains
+        self.n = num_rails
+        self.r1 = r1
+        self.r2 = r2
+        self.num_spines = num_spines
+        self.links: dict[str, Link] = {}
+        for d in range(self.m):
+            for n in range(self.n):
+                self._add(f"up:{d}:{n}", r2)  # NIC(d,n) -> leaf S_n
+                self._add(f"down:{d}:{n}", r2)  # leaf S_n -> NIC(d,n)
+        for n in range(self.n):
+            for p in range(num_spines):
+                self._add(f"l2s:{n}:{p}", spine_rate)  # leaf S_n -> spine p
+                self._add(f"s2l:{p}:{n}", spine_rate)  # spine p -> leaf S_n
+
+    def _add(self, name: str, rate: float) -> None:
+        self.links[name] = Link(name, rate)
+
+    # -- path families ------------------------------------------------------
+
+    def rail_path(self, src_domain: int, dst_domain: int, rail: int) -> list[str]:
+        """Direct rail path: single-hop through leaf S_rail (Theorem 1)."""
+        return [f"up:{src_domain}:{rail}", f"down:{dst_domain}:{rail}"]
+
+    def spine_path(
+        self,
+        src_domain: int,
+        dst_domain: int,
+        src_rail: int,
+        dst_rail: int,
+        spine: int,
+    ) -> list[str]:
+        """Cross-rail path through the spine layer (what ECMP hashes over)."""
+        if src_rail == dst_rail:
+            return self.rail_path(src_domain, dst_domain, src_rail)
+        return [
+            f"up:{src_domain}:{src_rail}",
+            f"l2s:{src_rail}:{spine}",
+            f"s2l:{spine}:{dst_rail}",
+            f"down:{dst_domain}:{dst_rail}",
+        ]
+
+    def all_paths(self, src_domain: int, dst_domain: int) -> list[list[str]]:
+        """Every simple path (N rail-direct + N*(N-1)*num_spines spine)."""
+        paths = [self.rail_path(src_domain, dst_domain, n) for n in range(self.n)]
+        for sn in range(self.n):
+            for dn in range(self.n):
+                if sn == dn:
+                    continue
+                for p in range(self.num_spines):
+                    paths.append(self.spine_path(src_domain, dst_domain, sn, dn, p))
+        return paths
+
+    def capacity(self, src_domain: int, dst_domain: int) -> float:
+        """Theorem 1: N * R2."""
+        return self.n * self.r2

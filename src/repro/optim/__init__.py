@@ -1,0 +1,17 @@
+"""Optimizer substrate: AdamW, LR schedules, gradient compression."""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .compress import compressed_psum, dequantize_int8, ef_init, quantize_int8
+from .schedule import constant, warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "compressed_psum",
+    "constant",
+    "dequantize_int8",
+    "ef_init",
+    "quantize_int8",
+    "warmup_cosine",
+]

@@ -1,0 +1,74 @@
+"""AdamW in pure JAX (pytree-structured, sharding-transparent).
+
+bf16 parameters with fp32 first/second moments (no separate fp32 master —
+moments carry the precision; update math in fp32). State pytrees mirror the
+parameter tree, so parameter PartitionSpecs apply verbatim to the moments —
+ZeRO-style optimizer-state sharding falls out of the param sharding rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float | Callable[[jnp.ndarray], jnp.ndarray] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def _global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads: Any, state: dict, params: Any, cfg: AdamWConfig
+) -> tuple[Any, dict, dict]:
+    """Returns ``(new_params, new_state, stats)``."""
+    count = state["count"] + 1
+    lr = cfg.learning_rate(count) if callable(cfg.learning_rate) else cfg.learning_rate
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        m_hat = m_new / (1 - cfg.b1**count)
+        v_hat = v_new / (1 - cfg.b2**count)
+        step = m_hat / (jnp.sqrt(v_hat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    stats = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, {"m": new_m, "v": new_v, "count": count}, stats

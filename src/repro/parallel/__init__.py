@@ -1,0 +1,26 @@
+"""Distribution layer: mesh views, sharding rules, pipeline parallelism."""
+
+from .mesh_view import MeshContext, build_mesh_context
+from .sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    fit_axes,
+    make_shard_fn,
+    opt_state_pspecs,
+    param_pspecs,
+    param_shardings,
+    to_shardings,
+)
+
+__all__ = [
+    "MeshContext",
+    "batch_pspecs",
+    "build_mesh_context",
+    "cache_pspecs",
+    "fit_axes",
+    "make_shard_fn",
+    "opt_state_pspecs",
+    "param_pspecs",
+    "param_shardings",
+    "to_shardings",
+]

@@ -1,0 +1,107 @@
+"""Mesh views: per-arch axis factorization of the pinned production mesh.
+
+The dry-run contract pins the device meshes to ``(16, 16)`` axes
+``("data", "model")`` and ``(2, 16, 16)`` axes ``("pod", "data", "model")``.
+Architectures need finer axes — MoE wants an ``expert`` axis whose size
+divides ``num_experts``. A *mesh view* re-labels the same device array
+(same device order, so sharding layouts compose with the production mesh's
+NamedShardings inside one jit):
+
+    model(16) -> expert(ep) x tp(16/ep),   ep = gcd-style largest divisor
+    pod stays an outer pure-DP axis (params replicated across pods,
+    gradients all-reduced over DCN — where RailS planning / compression
+    applies).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models.moe import EpInfo
+
+__all__ = ["MeshContext", "build_mesh_context"]
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Mesh  # the view mesh used by all internal shardings
+    has_pod: bool
+    data_size: int
+    ep: int
+    tp: int
+    batch_axes: tuple  # axes to shard batch-like dims over
+    fsdp_axes: tuple  # axes to shard parameter storage over
+    model_axes: tuple  # axes to shard model (heads/ffn/vocab) dims over
+    expert_axis: Optional[str]  # the manual axis for MoE dispatch
+
+    @property
+    def ep_info(self) -> Optional[EpInfo]:
+        if self.expert_axis is None:
+            return None
+        return EpInfo(self.mesh, self.expert_axis, self.ep)
+
+    @property
+    def total_devices(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.mesh.axis_names]))
+
+
+def _expert_factor(num_experts: int, model_size: int) -> int:
+    """Largest ep <= model_size with ep | model_size and ep | num_experts."""
+    best = 1
+    for ep in range(1, model_size + 1):
+        if model_size % ep == 0 and num_experts % ep == 0:
+            best = ep
+    return best
+
+
+def build_mesh_context(production_mesh: Mesh, cfg: ModelConfig) -> MeshContext:
+    axis_names = production_mesh.axis_names
+    has_pod = "pod" in axis_names
+    data_size = production_mesh.shape["data"]
+    model_size = production_mesh.shape["model"]
+    devices = production_mesh.devices  # ndarray in production layout
+
+    if cfg.is_moe:
+        ep = _expert_factor(cfg.num_experts, model_size)
+        tp = model_size // ep
+        if has_pod:
+            pod = production_mesh.shape["pod"]
+            dev = devices.reshape(pod, data_size, ep, tp)
+            names = ("pod", "data", "expert", "tp")
+        else:
+            dev = devices.reshape(data_size, ep, tp)
+            names = ("data", "expert", "tp")
+        mesh = Mesh(dev, names)
+        return MeshContext(
+            mesh=mesh,
+            has_pod=has_pod,
+            data_size=data_size,
+            ep=ep,
+            tp=tp,
+            batch_axes=(("pod", "data") if has_pod else ("data",)),
+            fsdp_axes=("data",),
+            model_axes=("expert", "tp"),
+            expert_axis="expert",
+        )
+
+    # Dense / ssm / hybrid / audio: model axis stays whole ("tp" == model).
+    mesh = Mesh(devices, axis_names)
+    return MeshContext(
+        mesh=mesh,
+        has_pod=has_pod,
+        data_size=data_size,
+        ep=1,
+        tp=model_size,
+        batch_axes=(("pod", "data") if has_pod else ("data",)),
+        fsdp_axes=("data",),
+        model_axes=("model",),
+        expert_axis=None,
+    )

@@ -1,0 +1,187 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs per arch.
+
+Name-based rules over the parameter tree (DESIGN.md §4.2):
+
+* in-projections  ``(d_in, d_out)`` -> ``P(fsdp, model)``
+* out-projections ``(d_model_side, d_out)`` -> ``P(model, fsdp)``
+* embeddings      ``(V, D)`` -> ``P(model, fsdp)`` (vocab over model)
+* MoE experts     ``(E, D, F)`` -> ``P(expert, fsdp, tp)`` (w_down mirrored)
+* norms/scalars   replicated
+
+Every rule passes through :func:`fit_axes`, which drops axes that do not
+divide the dimension (e.g. 8 KV heads on a 16-wide model axis fall back to
+replication) — this is what makes one rule set serve all 10 architectures
+on the pinned production meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from .mesh_view import MeshContext
+
+__all__ = [
+    "fit_axes",
+    "param_pspecs",
+    "param_shardings",
+    "make_shard_fn",
+    "batch_pspecs",
+    "cache_pspecs",
+    "opt_state_pspecs",
+    "to_shardings",
+]
+
+_IN_PROJ = {"wq", "wk", "wv", "w_gate", "w_up", "w_ff1", "w_gates", "in_proj", "router"}
+_OUT_PROJ = {"wo", "w_down", "out_proj", "w_ff2"}
+_EMBED = {"embed", "lm_head", "enc_pos"}
+
+
+def fit_axes(dim: int, axes: tuple, ctx: MeshContext):
+    """Largest prefix of ``axes`` whose mesh-size product divides ``dim``."""
+    sizes = {a: ctx.mesh.shape[a] for a in ctx.mesh.axis_names}
+    for end in range(len(axes), 0, -1):
+        cand = axes[:end]
+        prod = int(np.prod([sizes[a] for a in cand]))
+        if dim % prod == 0 and prod > 1:
+            return cand if len(cand) > 1 else cand[0]
+    return None
+
+
+def _path_keys(path) -> list[str]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "name"):
+            keys.append(str(p.name))
+    return keys
+
+
+def _rule_for(keys: list[str], shape: tuple, cfg: ModelConfig, ctx: MeshContext):
+    name = keys[-1] if keys else ""
+    stacked = "blocks" in keys and not any(k.startswith("shared") for k in keys)
+    base = shape[1:] if stacked else shape
+    lead = (None,) if stacked else ()
+
+    def spec(*entries):
+        return P(*lead, *entries)
+
+    is_expert_w = cfg.is_moe and "moe" in keys and len(base) == 3
+    if is_expert_w:
+        e_ax = fit_axes(base[0], ("expert",), ctx)
+        if name in ("w_gate", "w_up"):
+            return spec(e_ax, fit_axes(base[1], ctx.fsdp_axes, ctx), fit_axes(base[2], ("tp",), ctx))
+        if name == "w_down":
+            return spec(e_ax, fit_axes(base[1], ("tp",), ctx), fit_axes(base[2], ctx.fsdp_axes, ctx))
+    if name in _EMBED and len(base) == 2:
+        return spec(fit_axes(base[0], ctx.model_axes, ctx), fit_axes(base[1], ctx.fsdp_axes, ctx))
+    if name in _IN_PROJ and len(base) == 2:
+        return spec(fit_axes(base[0], ctx.fsdp_axes, ctx), fit_axes(base[1], ctx.model_axes, ctx))
+    if name in _OUT_PROJ and len(base) == 2:
+        return spec(fit_axes(base[0], ctx.model_axes, ctx), fit_axes(base[1], ctx.fsdp_axes, ctx))
+    if name == "conv_w" and len(base) == 2:
+        return spec(None, fit_axes(base[1], ctx.model_axes, ctx))
+    # norms, gate biases, scalars: replicate (tiny).
+    return spec(*([None] * len(base)))
+
+
+def param_pspecs(cfg: ModelConfig, ctx: MeshContext, params_tree: Any) -> Any:
+    def rule(path, leaf):
+        return _rule_for(_path_keys(path), leaf.shape, cfg, ctx)
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def to_shardings(ctx: MeshContext, pspec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_shardings(cfg: ModelConfig, ctx: MeshContext, params_tree: Any) -> Any:
+    return to_shardings(ctx, param_pspecs(cfg, ctx, params_tree))
+
+
+def opt_state_pspecs(cfg: ModelConfig, ctx: MeshContext, params_tree: Any) -> dict:
+    ps = param_pspecs(cfg, ctx, params_tree)
+    return {"m": ps, "v": ps, "count": P()}
+
+
+def make_shard_fn(ctx: MeshContext):
+    """Activation constraint hook for the model code ('resid' boundaries).
+
+    Residuals ``(B, T, D)`` shard batch over the batch axes AND sequence
+    over the model axes (Megatron-style sequence-parallel activations) —
+    without the T sharding, activations replicate model_axes-fold and blow
+    the per-device memory budget.
+    """
+
+    def shard_fn(x, kind=None):
+        if x.ndim < 2:
+            return x
+        if kind == "logits":
+            # (tokens_chunk, V): tokens over batch axes, vocab over model.
+            spec = P(
+                fit_axes(x.shape[0], ctx.batch_axes, ctx),
+                fit_axes(x.shape[1], ctx.model_axes, ctx),
+            )
+            return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+        b_ax = fit_axes(x.shape[0], ctx.batch_axes, ctx)
+        if x.ndim >= 3:
+            t_ax = fit_axes(x.shape[1], ctx.model_axes, ctx)
+            if b_ax is None and t_ax is None:
+                # tiny batch + tiny seq (decode): shard T over batch axes.
+                t_ax = fit_axes(x.shape[1], ctx.batch_axes, ctx)
+            spec = P(b_ax, t_ax, *([None] * (x.ndim - 2)))
+        else:
+            spec = P(b_ax, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+    return shard_fn
+
+
+def batch_pspecs(cfg: ModelConfig, ctx: MeshContext, shape: ShapeSpec) -> dict:
+    b = shape.global_batch
+    b_ax = fit_axes(b, ctx.batch_axes, ctx)
+    specs = {"tokens": P(b_ax, None)}
+    if shape.kind == "train":
+        specs["labels"] = P(b_ax, None)
+    if cfg.use_mrope:
+        specs["positions"] = P(b_ax, None, None)
+    if cfg.is_encoder_decoder:
+        specs["embeds"] = P(b_ax, None, fit_axes(cfg.d_model, ctx.model_axes, ctx))
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, ctx: MeshContext, cache_tree: Any) -> Any:
+    """Decode-cache rules: batch over batch axes when divisible, else the
+    sequence dim over the model axes (sequence-parallel cache)."""
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        # stacked caches: (L, B, ...) — dim0 is the layer/scan dim.
+        entries: list = [None]
+        b = shape[1] if len(shape) > 1 else 0
+        b_ax = fit_axes(b, ctx.batch_axes, ctx) if len(shape) > 1 else None
+        entries.append(b_ax)
+        for i, d in enumerate(shape[2:], start=2):
+            if i == 2 and len(shape) >= 4 and b_ax is None:
+                # batch unshardable (long-context decode, B=1): spread the
+                # sequence dim over EVERY axis that divides it.
+                all_axes = tuple(ctx.batch_axes) + tuple(ctx.model_axes)
+                entries.append(fit_axes(d, all_axes, ctx))
+            elif i == 2 and len(shape) >= 5:
+                entries.append(fit_axes(d, ctx.model_axes, ctx))  # seq dim
+            else:
+                entries.append(None)
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)

@@ -1,0 +1,5 @@
+"""Roofline tooling: cost_analysis + HLO collective-bytes parsing."""
+
+from .analysis import HW_V5E, collective_bytes, model_flops, roofline_terms
+
+__all__ = ["HW_V5E", "collective_bytes", "model_flops", "roofline_terms"]

@@ -1,0 +1,130 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Per (arch x shape x mesh) cell we derive three roofline terms, in seconds,
+for TPU v5e hardware constants:
+
+    compute    = device_FLOPs / peak_FLOP/s          (197 TF/s bf16)
+    memory     = device_bytes / HBM_bw               (819 GB/s)
+    collective = device_collective_bytes / link_bw   (~50 GB/s/link ICI)
+
+``compiled.cost_analysis()`` is evaluated on the post-SPMD per-device
+module, so its FLOPs/bytes are per-chip; global figures are ``x chips``.
+Collective bytes are not in cost_analysis — :func:`collective_bytes`
+parses the compiled HLO and sums the *result* bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (a consistent
+payload upper bound; convention recorded in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW_V5E", "collective_bytes", "roofline_terms", "model_flops"]
+
+HW_V5E = {
+    "peak_flops": 197e12,  # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op, by type.
+
+    Handles both sync ops and async ``-start`` forms (the ``-done`` halves
+    carry no payload shape of their own in post-opt HLO and are skipped via
+    the tuple-shape heuristic: ``-start`` results are tuples; we count the
+    final element group once per op line).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue
+        b = _shape_bytes(shape_str)
+        if "-start(" in line:
+            # start-op results are (operand, result[, ...]) tuples; halve to
+            # count the payload once.
+            b //= 2
+        out[op] += b
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["op_counts"] = counts
+    return out
+
+
+def roofline_terms(
+    device_flops: float,
+    device_bytes: float,
+    device_collective_bytes: float,
+    hw: dict = HW_V5E,
+) -> dict:
+    compute = device_flops / hw["peak_flops"]
+    memory = device_bytes / hw["hbm_bw"]
+    collective = device_collective_bytes / hw["ici_bw"]
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dominant = max(terms, key=lambda k: terms[k])
+    terms["dominant"] = dominant
+    terms["bound_s"] = terms[dominant]
+    return terms
+
+
+def model_flops(
+    active_params: int, tokens: int, kind: str = "train"
+) -> float:
+    """``6 * N_active * D`` for training; ``2 * N_active * D`` for inference."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active_params * tokens

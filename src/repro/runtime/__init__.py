@@ -1,0 +1,17 @@
+"""Distributed runtime: fault tolerance, elastic scaling, stragglers."""
+
+from .elastic import ElasticPlan, plan_remesh, scale_batch
+from .fault_tolerance import HeartbeatRegistry, NodeState, TrainingSupervisor
+from .straggler import StragglerDetector, degraded_rail_schedule, speculative_dispatch
+
+__all__ = [
+    "ElasticPlan",
+    "HeartbeatRegistry",
+    "NodeState",
+    "StragglerDetector",
+    "TrainingSupervisor",
+    "degraded_rail_schedule",
+    "plan_remesh",
+    "scale_batch",
+    "speculative_dispatch",
+]

@@ -1,0 +1,69 @@
+"""Elastic scaling: re-mesh plans when the device count changes.
+
+When nodes leave (failure) or join (scale-up), the framework recomputes the
+mesh factorization, derives new PartitionSpecs from the same rules, and
+reshards the checkpointed state. Because checkpoints are stored as full
+logical arrays (host-side npz, see checkpoint/), resharding is just loading
+under new shardings — the plan below records what changes so the launcher
+can decide whether a restart is worth it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["ElasticPlan", "plan_remesh", "scale_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_devices: int
+    new_devices: int
+    new_data: int
+    new_model: int
+    batch_scale: float  # keep tokens/device constant
+    feasible: bool
+    reason: str = ""
+
+
+def _factor(n: int, prefer_model: int) -> Optional[tuple[int, int]]:
+    """Factor n into (data, model) keeping model as close to prefer_model
+    as possible (model parallelism degree is dictated by memory, not DP)."""
+    best = None
+    for model in range(min(prefer_model, n), 0, -1):
+        if n % model == 0:
+            best = (n // model, model)
+            break
+    return best
+
+
+def plan_remesh(
+    old_data: int, old_model: int, new_devices: int, min_model: int = 1
+) -> ElasticPlan:
+    old_devices = old_data * old_model
+    fac = _factor(new_devices, old_model)
+    if fac is None or fac[1] < min_model:
+        return ElasticPlan(
+            old_devices, new_devices, 0, 0, 0.0, False,
+            f"cannot keep model>={min_model} with {new_devices} devices",
+        )
+    data, model = fac
+    return ElasticPlan(
+        old_devices=old_devices,
+        new_devices=new_devices,
+        new_data=data,
+        new_model=model,
+        batch_scale=(data * model) / old_devices,
+        feasible=True,
+    )
+
+
+def scale_batch(global_batch: int, plan: ElasticPlan, multiple: int = 1) -> int:
+    """Rescale the global batch to keep per-device tokens ~constant."""
+    raw = int(round(global_batch * plan.batch_scale))
+    raw = max(multiple, (raw // multiple) * multiple)
+    # data-parallel divisibility
+    while raw % plan.new_data:
+        raw += multiple
+    return raw

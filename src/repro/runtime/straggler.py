@@ -1,0 +1,81 @@
+"""Straggler mitigation.
+
+Two mechanisms, matching DESIGN.md §4.3:
+
+1. **Deadline + backup dispatch** (speculative redundancy): per-step
+   deadline derived from a running latency percentile; work units that miss
+   it are re-dispatched to a healthy spare, first completion wins.
+2. **LPT rebalancing of degraded rails** — the paper's own scheduler doubles
+   as straggler mitigation: a rail (lane/NIC) observed slow gets its
+   LoadState pre-charged so the LPT greedy assigns it proportionally less.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.lpt import lpt_schedule
+
+__all__ = ["StragglerDetector", "degraded_rail_schedule", "speculative_dispatch"]
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """EWMA latency tracker with a percentile-style deadline multiplier."""
+
+    alpha: float = 0.2
+    multiplier: float = 2.0
+    ewma: float = 0.0
+    steps: int = 0
+
+    def observe(self, latency: float) -> None:
+        self.ewma = latency if self.steps == 0 else (
+            self.alpha * latency + (1 - self.alpha) * self.ewma
+        )
+        self.steps += 1
+
+    @property
+    def deadline(self) -> float:
+        return self.multiplier * self.ewma if self.steps else float("inf")
+
+    def is_straggler(self, latency: float) -> bool:
+        return self.steps > 0 and latency > self.deadline
+
+
+def degraded_rail_schedule(
+    weights: np.ndarray, num_rails: int, rail_speeds: np.ndarray
+):
+    """LPT with speed-aware pre-charging (the paper's scheduler as
+    straggler mitigation).
+
+    ``rail_speeds[j]`` in (0, 1]: a rail at speed s behaves like a rail with
+    ``(1/s - 1) * mean_load`` of pre-existing load, so LPT routes around it.
+    Returns the LptResult plus the *time* each rail finishes (load/speed).
+    """
+    rail_speeds = np.asarray(rail_speeds, dtype=np.float64)
+    total = float(np.sum(weights))
+    # Ideal per-rail load proportional to speed.
+    speed_share = rail_speeds / rail_speeds.sum()
+    pre = (total / rail_speeds.sum()) * (1.0 - rail_speeds)
+    res = lpt_schedule(np.asarray(weights), num_rails, initial_loads=pre)
+    real_loads = res.loads - pre
+    finish = real_loads / rail_speeds
+    return res, real_loads, finish, speed_share * total
+
+
+def speculative_dispatch(
+    unit_latencies: dict[int, float],
+    detector: StragglerDetector,
+    backup_latency: float,
+) -> dict[int, float]:
+    """First-completion-wins backup dispatch for units past the deadline."""
+    out = {}
+    for unit, lat in unit_latencies.items():
+        if detector.is_straggler(lat):
+            out[unit] = min(lat, detector.deadline + backup_latency)
+        else:
+            out[unit] = lat
+        detector.observe(out[unit])
+    return out

@@ -1,0 +1,83 @@
+"""Checkpointing: roundtrip, atomic commit, async writer, GC."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer, latest_step, restore, save
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.bfloat16),
+                   "b": jnp.asarray(rng.normal(size=(4,)), jnp.float32)},
+        "opt": {"m": jnp.zeros((8, 4)), "count": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save(tmp_path, 42, tree)
+    restored, step = restore(tmp_path, tree)
+    assert step == 42
+    for a, b in zip(_leaves(tree), _leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _leaves(t):
+    return jax.tree.leaves(t)
+
+
+def test_latest_step_and_multiple(tmp_path):
+    tree = _tree()
+    for s in (10, 20, 30):
+        save(tmp_path, s, tree)
+    assert latest_step(tmp_path) == 30
+    _, step = restore(tmp_path, tree)
+    assert step == 30
+    _, step = restore(tmp_path, tree, step=20)
+    assert step == 20
+
+
+def test_atomic_commit_no_tmp_left(tmp_path):
+    save(tmp_path, 5, _tree())
+    assert not list(tmp_path.glob("*.tmp"))
+    assert (tmp_path / "step_00000005" / "manifest.json").exists()
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    save(tmp_path, 1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        restore(tmp_path, {"w": jnp.zeros((2, 2))})
+
+
+def test_restore_missing_dir(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore(tmp_path / "nothing", {"w": jnp.zeros(2)})
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        ck.save_async(s, tree)
+    ck.wait()
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in tmp_path.iterdir() if p.is_dir()
+    )
+    assert steps == [3, 4]  # GC kept last 2
+    restored, step = restore(tmp_path, tree)
+    assert step == 4
+
+
+def test_manifest_contents(tmp_path):
+    save(tmp_path, 9, _tree())
+    manifest = json.loads((tmp_path / "step_00000009" / "manifest.json").read_text())
+    assert manifest["step"] == 9
+    assert "params/w" in manifest["leaves"]
+    assert manifest["leaves"]["params/w"]["dtype"] == "bfloat16"

@@ -1,0 +1,84 @@
+"""While-loop-aware HLO cost walker (roofline substrate)."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline.analysis import collective_bytes, model_flops, roofline_terms
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_multiplied():
+    def scanned(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=17)
+        return y
+
+    c = analyze_hlo(_compiled_text(scanned, jax.ShapeDtypeStruct((256, 256), jnp.float32)))
+    expect = 17 * 2 * 256**3
+    assert abs(c.dot_flops - expect) / expect < 1e-6
+
+
+def test_nested_scans():
+    def nested(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ c2, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    c = analyze_hlo(_compiled_text(nested, jax.ShapeDtypeStruct((128, 128), jnp.float32)))
+    expect = 15 * 2 * 128**3
+    assert abs(c.dot_flops - expect) / expect < 1e-6
+
+
+def test_plain_matmul_exact():
+    def f(a, b):
+        return a @ b
+
+    c = analyze_hlo(
+        _compiled_text(
+            f,
+            jax.ShapeDtypeStruct((64, 32), jnp.float32),
+            jax.ShapeDtypeStruct((32, 48), jnp.float32),
+        )
+    )
+    assert c.dot_flops == 2 * 64 * 32 * 48
+
+
+def test_elementwise_counted():
+    def f(x):
+        return jnp.tanh(x) + x * 2.0
+
+    c = analyze_hlo(_compiled_text(f, jax.ShapeDtypeStruct((1000,), jnp.float32)))
+    assert c.elementwise_flops >= 1000  # at least the fused body ops
+
+
+def test_collective_parser_on_text():
+    fake = """
+  %all-reduce.1 = f32[1024]{0} all-reduce(%x), replica_groups={}
+  %ag = bf16[2048,16]{1,0} all-gather(%y), dimensions={0}
+  %done = f32[8]{0} all-reduce-done(%s)
+"""
+    res = collective_bytes(fake)
+    assert res["all-reduce"] == 4096
+    assert res["all-gather"] == 2048 * 16 * 2
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12, 819e9 * 2, 0.0)  # 1s compute, 2s memory
+    assert t["dominant"] == "memory_s"
+    assert abs(t["bound_s"] - 2.0) < 1e-9
+
+
+def test_model_flops():
+    assert model_flops(1e9, 1e6, "train") == 6e15
+    assert model_flops(1e9, 1, "infer") == 2e9

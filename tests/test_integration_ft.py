@@ -1,0 +1,13 @@
+"""Integration: fault-tolerant training end-to-end (the examples/ path)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "examples"))
+
+
+def test_fault_tolerant_train_recovers_bitwise():
+    import fault_tolerant_train
+
+    # main() asserts: >=1 restart AND zero diverging loss steps.
+    fault_tolerant_train.main()

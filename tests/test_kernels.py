@@ -1,0 +1,107 @@
+"""Pallas kernel sweeps: interpret-mode vs pure-jnp oracle (ref.py)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.ref import flash_attention_ref, grouped_matmul_ref, rmsnorm_ref
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+def _naive_attention(q, k, v, causal=True, q_offset=0, window=None, softcap=None):
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, t, hkv, rep, hd) * hd**-0.5
+    scores = jnp.einsum("bthrd,bshd->bhrts", qf, k.astype(jnp.float32))
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qp = q_offset + jnp.arange(t)
+    kp = jnp.arange(s)
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window:
+        mask &= qp[:, None] - kp[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrts,bshd->bthrd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, hd).astype(q.dtype)
+
+
+FLASH_CASES = [
+    # (b, t, s, h, hkv, hd, kwargs)
+    (2, 64, 64, 4, 2, 32, {}),
+    (1, 32, 96, 4, 4, 64, {"q_offset": 64}),
+    (2, 64, 64, 8, 2, 32, {"window": 17}),
+    (1, 64, 64, 2, 1, 32, {"causal": False}),
+    (2, 64, 64, 4, 2, 32, {"softcap": 30.0}),
+    (1, 1, 40, 4, 2, 32, {"q_offset": 39}),  # decode
+    (1, 50, 50, 2, 2, 16, {}),  # non-multiple-of-block sizes
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(case, dtype):
+    b, t, s, h, hkv, hd, kw = case
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, t, h, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), dtype)
+    got = flash_attention_pallas(q, k, v, block_q=32, block_k=32, interpret=True, **kw)
+    want = flash_attention_ref(q, k, v, block_k=48, **kw)
+    oracle = _naive_attention(q, k, v, **kw)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), oracle.astype(jnp.float32), atol=tol, rtol=tol
+    )
+    np.testing.assert_allclose(
+        want.astype(jnp.float32), oracle.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+GMM_CASES = [(1, 64, 32, 48), (4, 100, 64, 72), (8, 33, 17, 129)]
+
+
+@pytest.mark.parametrize("g,n,k,m", GMM_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_matches_oracle(g, n, k, m, dtype):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(g, n, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(g, k, m)), dtype)
+    got = grouped_matmul_pallas(x, w, block_n=32, block_m=32, block_k=32, interpret=True)
+    want = grouped_matmul_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("shape", [(7, 64), (3, 5, 128), (256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_oracle(shape, dtype):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    w = jnp.asarray(rng.normal(size=shape[-1:]), dtype)
+    got = rmsnorm_pallas(x, w, 1e-6, block_rows=16, interpret=True)
+    want = rmsnorm_ref(x, w, 1e-6)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_ops_dispatch_env(monkeypatch):
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_PALLAS", "off")
+    assert ops.kernel_backend() == "ref"
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    assert ops.kernel_backend() == "interpret"
+    monkeypatch.setenv("REPRO_PALLAS", "auto")
+    assert ops.kernel_backend() in ("ref", "pallas")

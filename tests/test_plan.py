@@ -1,0 +1,68 @@
+"""Flow splitting + spray plans (paper §V) — incl. hypothesis properties."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import closed_form_opt
+from repro.core.plan import (
+    build_all_plans,
+    build_spray_plan,
+    plan_quality,
+    split_message,
+    split_traffic_row,
+)
+from repro.core.traffic import sparse_topk_workload, uniform_workload
+
+
+@settings(max_examples=100, deadline=None)
+@given(size=st.floats(0.1, 1e4), chunk=st.floats(5.0, 1e4))
+def test_split_conserves_bytes_and_caps_wmax(size, chunk):
+    # ranges bounded so size/chunk (= number of atomic flows) stays ~2000
+    flows = split_message(size, chunk, 0, 1)
+    np.testing.assert_allclose(sum(f.size for f in flows), size, rtol=1e-9)
+    assert all(f.size <= chunk + 1e-9 for f in flows)
+    # reassembly metadata: seq covers 0..len-1
+    assert sorted(f.seq for f in flows) == list(range(len(flows)))
+
+
+def test_split_traffic_row_skips_intra_domain():
+    tm = uniform_workload(4, 2, bytes_per_pair=8.0, include_self=True)
+    flows = split_traffic_row(tm.d1[1], 1, chunk_bytes=4.0)
+    assert all(f.dst_domain != 1 for f in flows)
+
+
+def test_plan_bound_and_conservation():
+    tm = sparse_topk_workload(6, 4, sparsity=0.4, seed=2)
+    plans = build_all_plans(tm.d1, chunk_bytes=64.0)
+    for plan in plans:
+        assert plan.bound_holds()
+        np.testing.assert_allclose(
+            plan.loads.sum(), sum(f.size for f in plan.flows), rtol=1e-9
+        )
+
+
+def test_distributed_plans_reach_global_optimum():
+    """Theorem 3 operationalized: independent per-sender LPT plans achieve
+    the global min-max optimum when chunks are fine enough."""
+    tm = uniform_workload(6, 4, bytes_per_pair=16.0)
+    plans = build_all_plans(tm.d1, chunk_bytes=4.0)
+    q = plan_quality(plans, 4)
+    _, t_star = closed_form_opt(tm.d2, 4)
+    assert q["max_load"] <= t_star * 1.05  # within 5% of optimum
+
+
+def test_finer_chunks_improve_balance():
+    tm = sparse_topk_workload(6, 4, sparsity=0.5, seed=7)
+    coarse = plan_quality(build_all_plans(tm.d1, chunk_bytes=1e9), 4)
+    fine = plan_quality(build_all_plans(tm.d1, chunk_bytes=16.0), 4)
+    assert fine["max_load"] <= coarse["max_load"] + 1e-9
+
+
+def test_policy_comparison_lpt_best():
+    tm = sparse_topk_workload(6, 4, sparsity=0.5, seed=3)
+    flows = split_traffic_row(tm.d1[0], 0, chunk_bytes=32.0)
+    lpt = build_spray_plan(flows, 4, 0, policy="lpt")
+    rr = build_spray_plan(flows, 4, 0, policy="round_robin")
+    rnd = build_spray_plan(flows, 4, 0, policy="random")
+    assert lpt.loads.max() <= rr.loads.max() + 1e-9
+    assert lpt.loads.max() <= rnd.loads.max() + 1e-9

@@ -1,0 +1,105 @@
+"""Runtime: failure detection, restart determinism, elastic, stragglers."""
+
+import numpy as np
+
+from repro.runtime import (
+    HeartbeatRegistry,
+    NodeState,
+    StragglerDetector,
+    TrainingSupervisor,
+    degraded_rail_schedule,
+    plan_remesh,
+    scale_batch,
+    speculative_dispatch,
+)
+
+
+def test_heartbeat_detection():
+    reg = HeartbeatRegistry(4, deadline=30.0, suspect_after=10.0)
+    for n in range(4):
+        reg.beat(n, 0.0)
+    assert reg.sweep(5.0) == []
+    # node 2 goes silent
+    for n in (0, 1, 3):
+        reg.beat(n, 20.0)
+    assert reg.nodes[2].state is NodeState.HEALTHY
+    reg.sweep(20.0)
+    assert reg.nodes[2].state is NodeState.SUSPECT
+    failed = reg.sweep(40.0)
+    assert failed == [2]
+    assert reg.healthy() == [0, 1, 3]
+    gen = reg.generation
+    reg.revive(2, 41.0)
+    assert reg.generation == gen + 1
+    assert 2 in reg.healthy()
+
+
+def test_supervisor_restart_replay_deterministic():
+    """A failure mid-run restarts from the checkpoint and replays to the
+    exact same final state (deterministic step-keyed data)."""
+    store = {}
+
+    def save_fn(step, state):
+        store["last"] = (step, state)
+
+    def restore_fn():
+        step, state = store["last"]
+        return state, step
+
+    def step_fn(state, step):
+        return state + (step + 1)  # deterministic function of step
+
+    def run(failure_at):
+        reg = HeartbeatRegistry(2, deadline=1.0)
+        sup = TrainingSupervisor(reg, save_fn, restore_fn, checkpoint_every=5)
+        # One-shot injector: the replacement node does not re-fail (a
+        # stateless injector would crash-loop — the supervisor's
+        # max_restarts guard exists for exactly that pathology).
+        fired = []
+
+        def inj(s):
+            if failure_at and s == failure_at and not fired:
+                fired.append(s)
+                return 1
+            return None
+
+        state, step = sup.run(0, step_fn, steps=20,
+                              failure_injector=inj if failure_at else None)
+        return state, sup.restarts
+
+    clean, r0 = run(None)
+    failed, r1 = run(12)
+    assert r0 == 0 and r1 >= 1
+    assert clean == failed  # bitwise-identical result despite the failure
+
+
+def test_elastic_plans():
+    plan = plan_remesh(old_data=16, old_model=16, new_devices=240)
+    assert plan.feasible
+    assert plan.new_data * plan.new_model == 240
+    assert plan.new_model == 16  # keeps model degree when possible
+    assert scale_batch(256, plan, multiple=8) % plan.new_data == 0
+    bad = plan_remesh(16, 16, new_devices=7, min_model=8)
+    assert not bad.feasible
+
+
+def test_degraded_rail_gets_less_load():
+    """The paper's LPT doubles as straggler mitigation: a rail at 50% speed
+    receives about half the share, equalizing finish times."""
+    rng = np.random.default_rng(0)
+    w = rng.exponential(1.0, 400)
+    speeds = np.array([1.0, 1.0, 0.5, 1.0])
+    res, real_loads, finish, ideal = degraded_rail_schedule(w, 4, speeds)
+    assert real_loads[2] < real_loads[0] * 0.7
+    # finish times roughly equalized (within one max-weight)
+    assert finish.max() - finish.min() <= 3 * w.max() / speeds.min()
+
+
+def test_straggler_detector_and_speculation():
+    det = StragglerDetector(multiplier=2.0)
+    for lat in (1.0, 1.1, 0.9, 1.0):
+        det.observe(lat)
+    assert not det.is_straggler(1.5)
+    assert det.is_straggler(10.0)
+    lat = speculative_dispatch({0: 1.0, 1: 50.0}, det, backup_latency=1.0)
+    assert lat[1] < 50.0  # backup won

@@ -1,0 +1,71 @@
+"""Executable Theorems 1-4 (paper §IV)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import closed_form_opt, loads_from_allocation
+from repro.core.theorems import (
+    theorem1_capacity,
+    theorem1_maxflow_check,
+    theorem2_lower_bound,
+    theorem2_optimal_time,
+    theorem3_check_symmetry,
+)
+
+
+@pytest.mark.parametrize("m,n", [(2, 2), (3, 4), (4, 8)])
+def test_theorem1_maxflow_equals_n_r2(m, n):
+    """Max flow on the explicit rail graph == N * R2 (Theorem 1)."""
+    r1, r2 = 10.0, 1.0
+    assert theorem1_maxflow_check(m, n, r1, r2) == pytest.approx(
+        theorem1_capacity(n, r1, r2)
+    )
+
+
+def test_theorem1_requires_r1_gt_r2():
+    with pytest.raises(ValueError):
+        theorem1_capacity(4, 1.0, 1.0)
+
+
+def test_theorem1_intra_domain_bottleneck():
+    """If R1 < R2 the max-flow drops below N*R2 — the premise matters."""
+    # With slow intra-domain fabric the GPU->NIC edges throttle the flow.
+    val = theorem1_maxflow_check(2, 4, r1=0.5, r2=1.0)
+    assert val < 4.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=st.integers(2, 6), n=st.integers(2, 8), seed=st.integers(0, 99))
+def test_theorem3_symmetry_property(m, n, seed):
+    """Uniform send => uniform receive for any traffic matrix (Theorem 3)."""
+    rng = np.random.default_rng(seed)
+    d2 = rng.uniform(0, 100, (m, m))
+    np.fill_diagonal(d2, 0)
+    res = theorem3_check_symmetry(d2, n)
+    assert res["uniform"], res
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=st.integers(2, 5), n=st.integers(2, 6), seed=st.integers(0, 99))
+def test_theorem2_uniform_attains_lower_bound(m, n, seed):
+    """P*=1/N attains the Theorem-2 min-max lower bound exactly."""
+    rng = np.random.default_rng(seed)
+    d2 = rng.uniform(0, 50, (m, m))
+    np.fill_diagonal(d2, 0)
+    p_star, _ = closed_form_opt(d2, n)
+    t_opt = theorem2_optimal_time(d2, n, r2=1.0)
+    t_of_pstar = theorem2_lower_bound(d2, p_star, r2=1.0)
+    np.testing.assert_allclose(t_of_pstar, t_opt, rtol=1e-12)
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=st.integers(2, 4), n=st.integers(2, 5), seed=st.integers(0, 99))
+def test_theorem2_any_allocation_is_no_better(m, n, seed):
+    """No (random) allocation beats the closed-form optimum."""
+    rng = np.random.default_rng(seed)
+    d2 = rng.uniform(0, 50, (m, m))
+    np.fill_diagonal(d2, 0)
+    p = rng.dirichlet(np.ones(n), size=(m, m))  # random valid allocation
+    t_opt = theorem2_optimal_time(d2, n, r2=1.0)
+    assert theorem2_lower_bound(d2, p, r2=1.0) >= t_opt - 1e-9

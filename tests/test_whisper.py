@@ -1,0 +1,76 @@
+"""Whisper (enc-dec) specifics: cross-attention, prefill/decode parity."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import decode_fn, init_cache, init_params
+from repro.models.transformer import _whisper_encode, forward_hidden, logits_last
+from repro.models.attention import attn_forward
+
+CFG = get_config("whisper-small").reduced()
+
+
+def _batch(b=1, t=6):
+    k = jax.random.PRNGKey(0)
+    return {
+        "tokens": jax.random.randint(k, (b, t), 0, CFG.vocab_size),
+        "embeds": (jax.random.normal(k, (b, CFG.encoder_seq, CFG.d_model)) * 0.2).astype(jnp.bfloat16),
+    }
+
+
+def test_encoder_is_non_causal():
+    """Encoder output at position 0 must depend on later frames."""
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    batch = _batch()
+    mem_a = _whisper_encode(params, CFG, batch, lambda x, k=None: x)
+    batch2 = {**batch, "embeds": batch["embeds"].at[:, -1].set(9.0)}
+    mem_b = _whisper_encode(params, CFG, batch2, lambda x, k=None: x)
+    assert not np.allclose(
+        np.asarray(mem_a[:, 0], np.float32), np.asarray(mem_b[:, 0], np.float32)
+    )
+
+
+def test_decoder_attends_to_encoder():
+    """Changing audio frames changes decoder logits (cross-attn is live)."""
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    batch = _batch()
+    h1, _, _ = forward_hidden(params, CFG, batch)
+    batch2 = {**batch, "embeds": batch["embeds"] * -1.0}
+    h2, _, _ = forward_hidden(params, CFG, batch2)
+    l1 = logits_last(params, CFG, h1)
+    l2 = logits_last(params, CFG, h2)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_whisper_decode_matches_forward():
+    """Teacher-forced decode == full forward for the enc-dec family."""
+    params = init_params(CFG, jax.random.PRNGKey(2))
+    batch = _batch(b=1, t=6)
+    # Build decode cache: cross-kv from the encoder memory, per layer.
+    mem = _whisper_encode(params, CFG, batch, lambda x, k=None: x)
+    cache = init_cache(CFG, 1, 8)
+    dec_p = params["blocks"]["dec"]
+
+    def one_layer_kv(p):
+        b, s, _ = mem.shape
+        hkv, hd = CFG.num_kv_heads, CFG.head_dim
+        k = jnp.einsum("bsd,dk->bsk", mem, p["wk"]).reshape(b, s, hkv, hd)
+        v = jnp.einsum("bsd,dk->bsk", mem, p["wv"]).reshape(b, s, hkv, hd)
+        return k, v
+
+    ks, vs = jax.vmap(one_layer_kv)(dec_p["cross_attn"])
+    cache["cross_kv"] = {"k": ks, "v": vs}
+
+    toks = batch["tokens"]
+    logits = None
+    for pos in range(toks.shape[1]):
+        logits, cache = decode_fn(params, CFG, cache, toks[:, pos : pos + 1], pos)
+    hidden, _, _ = forward_hidden(params, CFG, batch)
+    want = logits_last(params, CFG, hidden)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(want, np.float32),
+        atol=0.15, rtol=0.15,
+    )
