@@ -1,8 +1,16 @@
-"""Shared workload builders for the paper-figure benchmarks."""
+"""Shared workload builders for the paper-figure benchmarks.
+
+``configure(quick=True)`` shrinks the fabric and message sizes so the full
+suite runs as a CI smoke check (seconds, not minutes); the module-level
+scale constants are read at call time by every builder.
+"""
 
 from __future__ import annotations
 
 from repro.core.traffic import (
+    bursty_release_times,
+    drifting_gating_stream,
+    microbatch_stream,
     mixtral_trace_workload,
     receiver_skew_workload,
     sender_skew_workload,
@@ -14,6 +22,21 @@ M, N = 8, 8
 BYTES = 32 * 2**20
 CHUNK = 2 * 2**20
 POLICIES = ("ecmp", "minrtt", "plb", "reps", "rails")
+QUICK = False
+
+
+def configure(quick: bool = False) -> None:
+    """Switch between the paper-scale grid and the CI smoke-check scale."""
+    global M, N, BYTES, CHUNK, QUICK
+    QUICK = quick
+    if quick:
+        M, N = 4, 4
+        BYTES = 8 * 2**20
+        CHUNK = 1 * 2**20
+    else:
+        M, N = 8, 8
+        BYTES = 32 * 2**20
+        CHUNK = 2 * 2**20
 
 
 def uniform():
@@ -34,3 +57,27 @@ def receiver_skew(seed: int = 1):
 
 def mixtral(phase: str, mode: str, seed: int = 2):
     return mixtral_trace_workload(M, N, phase=phase, mode=mode, seed=seed)
+
+
+# -- streaming workloads (bench_online_*) -----------------------------------
+
+
+def micro_stream(num_microbatches: int = 6, seed: int = 1):
+    """One iteration split into noisy micro-batch rounds (same total bytes
+    as the uniform figure workload)."""
+    return microbatch_stream(
+        M, N, num_microbatches, bytes_per_pair=BYTES / num_microbatches, seed=seed
+    )
+
+
+def bursty_releases(num_rounds: int, mean_gap: float, seed: int = 2):
+    return bursty_release_times(num_rounds, mean_gap, burstiness=1.5, seed=seed)
+
+
+def drift_stream(num_rounds: int = 6, seed: int = 3):
+    """Gating counts drifting round-to-round, scaled to the figure totals."""
+    tokens = M * (M - 1) * N * N
+    return drifting_gating_stream(
+        M, N, num_rounds, tokens_per_round=tokens,
+        bytes_per_token=BYTES / (N * N), seed=seed,
+    )

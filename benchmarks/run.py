@@ -1,12 +1,15 @@
-"""Benchmark harness — one entry per paper table/figure.
+"""Benchmark harness — one entry per paper table/figure + online scheduling.
 
 Prints ``name,us_per_call,derived`` CSV rows. ``us_per_call`` is the wall
 time of one simulated collective (or scheduler call); ``derived`` is the
 paper-relevant metric for that figure (normalized BusBw, CCT reduction,
-MSE, speedup, ...).
+MSE, speedup, ...). The ``bench_online_*`` entries exercise the streaming
+control plane (`repro.sched`): bursty micro-batch arrivals, degraded-rail
+feedback, and routing replay under gating drift.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run --only fig7
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke scale
 """
 
 from __future__ import annotations
@@ -18,7 +21,9 @@ import numpy as np
 
 from repro.core.lpt import lpt_schedule
 from repro.core.lp import closed_form_opt, solve_minmax_lp
-from repro.netsim import run_policy_suite
+from repro.core.theorems import theorem2_optimal_time
+from repro.netsim import run_policy_suite, run_streaming_collective
+from repro.sched import run_pipeline
 
 from . import paper_workloads as W
 
@@ -45,7 +50,7 @@ def bench_fig7_9_uniform() -> None:
 
 def bench_fig7_9_sparse() -> None:
     """Figs 7b-e/8/9: sparsity sweep — RailS advantage grows with sparsity."""
-    for sp in (0.6, 0.4, 0.2, 0.0):
+    for sp in (0.6, 0.2) if W.QUICK else (0.6, 0.4, 0.2, 0.0):
         tm = W.sparse(sp)
         res, us = _timed(lambda tm=tm: run_policy_suite(tm, chunk_bytes=W.CHUNK))
         best_other = max(
@@ -100,7 +105,7 @@ def bench_fig12_13_mixtral() -> None:
             # Iteration time == the all-to-all barrier == makespan (the
             # paper's Figs 12b/13b metric); mean over 3 trace seeds.
             cuts_best, cuts_worst, us_tot = [], [], 0.0
-            for seed in (2, 3, 4):
+            for seed in (2,) if W.QUICK else (2, 3, 4):
                 tm = W.mixtral(phase, mode, seed=seed)
                 res, us = _timed(lambda tm=tm: run_policy_suite(tm, chunk_bytes=W.CHUNK))
                 us_tot += us
@@ -117,7 +122,7 @@ def bench_fig12_13_mixtral() -> None:
 def bench_lpt_scheduler() -> None:
     """Algorithm-2 microbenchmark: O(F log F + F N) scheduler cost."""
     rng = np.random.default_rng(0)
-    for f in (100, 1000, 10000):
+    for f in (100, 1000) if W.QUICK else (100, 1000, 10000):
         w = rng.exponential(1.0, f)
         lpt_schedule(w, 8)  # warm
         t0 = time.perf_counter()
@@ -150,6 +155,89 @@ def bench_theorem_bounds() -> None:
         )
 
 
+def bench_online_microbatch() -> None:
+    """Streaming micro-batches with bursty releases: the online regime's
+    headline — proactive rails-online vs the reactive baselines."""
+    rounds = 3 if W.QUICK else 6
+    tms = W.micro_stream(num_microbatches=rounds, seed=1)
+    # Gaps at half each round's optimal drain time: rounds overlap.
+    mean_gap = 0.5 * theorem2_optimal_time(tms[0].d2, W.N, 50e9)
+    releases = W.bursty_releases(rounds, mean_gap, seed=2)
+    stream = list(zip(releases, tms))
+    results, times = {}, {}
+    for pol in ("rails-online", "minrtt", "reps"):
+        res, us = _timed(
+            lambda pol=pol: run_streaming_collective(stream, pol, chunk_bytes=W.CHUNK)
+        )
+        results[pol], times[pol] = res, us
+    rails = results["rails-online"].metrics
+    for pol in ("minrtt", "reps"):
+        m = results[pol].metrics
+        _emit(
+            f"online_microbatch_rails_cct_vs_{pol}",
+            times[pol],
+            f"{rails.makespan / m.makespan:.3f}x_{pol}",
+        )
+    _emit(
+        "online_microbatch_rails_recv_mse",
+        times["rails-online"],
+        f"{rails.recv_mse:.4f}",
+    )
+
+
+def bench_online_degraded() -> None:
+    """Degraded rail: EWMA health feedback pre-charges the online LPT."""
+    rounds = 3 if W.QUICK else 6
+    tms = W.micro_stream(num_microbatches=rounds, seed=3)
+    mean_gap = 0.5 * theorem2_optimal_time(tms[0].d2, W.N, 50e9)
+    releases = W.bursty_releases(rounds, mean_gap, seed=4)
+    stream = list(zip(releases, tms))
+    speeds = [1.0] * (W.N - 1) + [0.4]
+    blind, us_b = _timed(
+        lambda: run_streaming_collective(
+            stream, "rails-online", chunk_bytes=W.CHUNK, rail_speeds=speeds
+        )
+    )
+    fb, us_f = _timed(
+        lambda: run_streaming_collective(
+            stream, "rails-online", chunk_bytes=W.CHUNK, rail_speeds=speeds,
+            feedback=True,
+        )
+    )
+    _emit(
+        "online_degraded_feedback_cct_cut",
+        us_b + us_f,
+        f"{(1 - fb.metrics.makespan / blind.metrics.makespan) * 100:.1f}pct",
+    )
+    slow_share_fb = fb.metrics.nic_tx[:, -1].sum() / fb.metrics.nic_tx.sum()
+    _emit("online_degraded_slow_rail_share", us_f, f"{slow_share_fb:.3f}_of_tx")
+
+
+def bench_online_replay() -> None:
+    """Gating drift: routing replay + overlap pipeline vs no replay."""
+    rounds = 3 if W.QUICK else 6
+    tms = W.drift_stream(num_rounds=rounds, seed=5)
+    speeds = [1.0] * (W.N - 1) + [0.5]
+    kwargs = dict(
+        gap_fraction=0.5, chunk_bytes=W.CHUNK, rail_speeds=speeds, feedback=True
+    )
+    off, us_o = _timed(lambda: run_pipeline(tms, use_replay=False, **kwargs))
+    rep, us_r = _timed(lambda: run_pipeline(tms, use_replay=True, **kwargs))
+    _emit(
+        "online_replay_cct_vs_noreplay",
+        us_o + us_r,
+        f"{rep.makespan / off.makespan:.3f}x_noreplay",
+    )
+    piped, us_p = _timed(
+        lambda: run_pipeline(tms, use_replay=True, compare_sequential=True, **kwargs)
+    )
+    _emit(
+        "online_replay_overlap_speedup",
+        us_p,
+        f"{piped.overlap_speedup:.2f}x_sequential",
+    )
+
+
 BENCHES = {
     "fig7_9_uniform": bench_fig7_9_uniform,
     "fig7_9_sparse": bench_fig7_9_sparse,
@@ -159,13 +247,22 @@ BENCHES = {
     "lpt": bench_lpt_scheduler,
     "lp": bench_lp_solver,
     "thm4": bench_theorem_bounds,
+    "online_microbatch": bench_online_microbatch,
+    "online_degraded": bench_online_degraded,
+    "online_replay": bench_online_replay,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="smaller M x N fabric and fewer repeats (CI smoke check)",
+    )
     args = ap.parse_args()
+    W.configure(quick=args.quick)
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and args.only not in name:

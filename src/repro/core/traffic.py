@@ -36,6 +36,9 @@ __all__ = [
     "receiver_skew_workload",
     "mixtral_trace_workload",
     "moe_gating_traffic",
+    "microbatch_stream",
+    "bursty_release_times",
+    "drifting_gating_stream",
     "WORKLOADS",
 ]
 
@@ -330,6 +333,109 @@ def moe_gating_traffic(
     d2 = counts * bytes_per_token
     d1 = np.broadcast_to(d2[:, None, :, None], (m, n, m, n)) / (n * n)
     return _make(np.ascontiguousarray(d1), "moe-gating")
+
+
+# ---------------------------------------------------------------------------
+# Streaming workloads (the online regime of `repro.sched`)
+# ---------------------------------------------------------------------------
+
+
+def microbatch_stream(
+    num_domains: int,
+    num_rails: int,
+    num_microbatches: int,
+    bytes_per_pair: float = 1.0,
+    noise_sigma: float = 0.75,
+    seed: int = 0,
+) -> list[TrafficMatrix]:
+    """One iteration's all-to-all split into per-micro-batch rounds.
+
+    The iteration total matches ``uniform_workload(bytes_per_pair *
+    num_microbatches)``, but each micro-batch carries lognormal
+    (``noise_sigma``) per-(sender GPU, receiver GPU) variability — the
+    within-iteration imbalance an offline planner never sees because it
+    averages out by the time the full matrix is on the table.
+    """
+    if num_microbatches < 1:
+        raise ValueError("need at least one micro-batch")
+    m, n = num_domains, num_rails
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(num_microbatches):
+        noise = rng.lognormal(0.0, noise_sigma, size=(m, n, m, n))
+        noise /= noise.mean()
+        d1 = bytes_per_pair * noise
+        for d in range(m):
+            d1[d, :, d, :] = 0.0
+        out.append(_make(d1, "microbatch"))
+    return out
+
+
+def bursty_release_times(
+    num_rounds: int,
+    mean_gap: float,
+    burstiness: float = 1.0,
+    seed: int = 0,
+) -> np.ndarray:
+    """Release times with gamma-distributed gaps of CoV ``burstiness``.
+
+    ``burstiness=0`` is a deterministic micro-batch cadence; ``1.0`` is
+    Poisson-like; larger values cluster releases into bursts separated by
+    idle stretches (the incast-prone regime). First release is at t=0.
+    """
+    if num_rounds < 1:
+        raise ValueError("need at least one round")
+    if mean_gap < 0 or burstiness < 0:
+        raise ValueError("mean_gap and burstiness must be >= 0")
+    if num_rounds == 1:
+        return np.zeros(1)
+    rng = np.random.default_rng(seed)
+    if burstiness == 0 or mean_gap == 0:
+        gaps = np.full(num_rounds - 1, mean_gap)
+    else:
+        shape = 1.0 / burstiness**2
+        gaps = rng.gamma(shape, mean_gap / shape, size=num_rounds - 1)
+    return np.concatenate([[0.0], np.cumsum(gaps)])
+
+
+def drifting_gating_stream(
+    num_domains: int,
+    num_rails: int,
+    num_rounds: int,
+    tokens_per_round: float,
+    bytes_per_token: float = 1.0,
+    num_experts: int = 8,
+    popularity_alpha: float = 0.8,
+    drift: float = 0.15,
+    seed: int = 0,
+) -> list[TrafficMatrix]:
+    """Gating counts that random-walk between rounds (paper Fig. 2d drift).
+
+    Expert popularity starts Zipf(``popularity_alpha``) and drifts in log
+    space by ``drift`` per round — adjacent rounds are similar (which is
+    what makes routing replay a usable forecast) while distant rounds can
+    look completely different. Experts sit round-robin on domains; token
+    input stays uniform across senders.
+    """
+    if num_rounds < 1:
+        raise ValueError("need at least one round")
+    m, n = num_domains, num_rails
+    rng = np.random.default_rng(seed)
+    expert_domain = np.arange(num_experts) % m
+    log_pop = np.log(_zipf_weights(num_experts, popularity_alpha))
+    rng.shuffle(log_pop)
+    out = []
+    for _ in range(num_rounds):
+        popularity = np.exp(log_pop)
+        popularity /= popularity.sum()
+        domain_tokens = np.zeros(m)
+        np.add.at(domain_tokens, expert_domain, popularity * tokens_per_round)
+        counts = np.tile(domain_tokens / max(m - 1, 1), (m, 1))
+        np.fill_diagonal(counts, 0.0)
+        tm = moe_gating_traffic(counts, bytes_per_token, n)
+        out.append(TrafficMatrix(d1=tm.d1, d2=tm.d2, name="drifting-gating"))
+        log_pop = log_pop + rng.normal(0.0, drift, size=num_experts)
+    return out
 
 
 WORKLOADS: dict[str, Callable[..., TrafficMatrix]] = {

@@ -6,7 +6,7 @@ touches jax device state.
 
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh as compat_make_mesh
 
 __all__ = ["make_production_mesh", "PRODUCTION_SHAPES"]
 
@@ -18,6 +18,4 @@ PRODUCTION_SHAPES = {
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape, axes = PRODUCTION_SHAPES[multi_pod]
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat_make_mesh(shape, axes)

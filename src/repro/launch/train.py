@@ -24,6 +24,7 @@ from repro.configs import SHAPES, get_config
 from repro.configs.base import ShapeSpec
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_production_mesh
+from repro.compat import make_mesh as compat_make_mesh
 from repro.launch.steps import make_train_step
 from repro.models import init_params
 from repro.optim import AdamWConfig, adamw_init, warmup_cosine
@@ -33,10 +34,7 @@ from repro.parallel.sharding import param_shardings, to_shardings, opt_state_psp
 
 def make_local_mesh():
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat_make_mesh((n, 1), ("data", "model"))
 
 
 def main(argv=None) -> dict:
@@ -54,6 +52,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--sched-replay",
+        action="store_true",
+        help="feed per-iteration MoE gating counts to the repro.sched "
+        "routing-replay planner and log its all-to-all forecast",
+    )
+    ap.add_argument("--sched-domains", type=int, default=8,
+                    help="fabric domains (M) for the --sched-replay planner")
+    ap.add_argument("--sched-rails", type=int, default=8,
+                    help="rails per domain (N) for the --sched-replay planner")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -93,12 +101,33 @@ def main(argv=None) -> dict:
             )
             print(f"restored from step {start_step}")
 
+    # Online-scheduling hook: each iteration's gating counts feed the
+    # routing-replay planner, which forecasts and LPT-plans the *next*
+    # iteration's expert all-to-all (repro.sched control plane).
+    sched_hook = None
+    if args.sched_replay and cfg.num_experts:
+        from repro.sched import GatingFeedbackHook
+
+        sched_hook = GatingFeedbackHook(
+            num_domains=args.sched_domains,
+            num_rails=args.sched_rails,
+            bytes_per_token=float(cfg.d_model * 2),  # bf16 activations
+        )
+
     losses = []
     t0 = time.time()
     with ctx.mesh:
         for step in range(start_step, args.steps):
             batch = {k: jax.numpy.asarray(v) for k, v in data.batch(step).items()}
             params, opt_state, metrics = jit_step(params, opt_state, batch)
+            if sched_hook is not None and "moe_counts" in metrics:
+                plan = sched_hook.on_step(np.asarray(metrics["moe_counts"]))
+                if step % args.log_every == 0:
+                    print(
+                        f"  a2a plan: chunk {plan['chunk_bytes'] / 2**20:.2f}MiB "
+                        f"send_mse {plan['pred_send_mse']:.2e} "
+                        f"opt {plan['opt_time_s'] * 1e3:.2f}ms"
+                    )
             if step % args.log_every == 0 or step == args.steps - 1:
                 loss = float(metrics["loss"])
                 losses.append((step, loss))

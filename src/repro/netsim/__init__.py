@@ -3,14 +3,18 @@
 The paper evaluates RailS in a Mininet/SoftRoCE datacenter emulation; this
 package provides the deterministic equivalent: an explicit rail topology
 (`topology`), a chunk-granularity FIFO queueing engine (`events`), the five
-policies of §VI-A (`balancers`), and the paper's metrics (`metrics`).
-`simulate.run_collective` is the benchmark entry point.
+policies of §VI-A plus the streaming `rails-online` control plane
+(`balancers`), and the paper's metrics (`metrics`).
+`simulate.run_collective` is the offline benchmark entry point;
+`simulate.run_streaming_collective` is its online counterpart (release
+times, rail-health feedback, telemetry observers — see `repro.sched`).
 """
 
 from .balancers import (
     POLICIES,
     EcmpPolicy,
     MinRttPolicy,
+    OnlineRailSPolicy,
     PlbPolicy,
     Policy,
     RailSPolicy,
@@ -19,7 +23,14 @@ from .balancers import (
 )
 from .events import ChunkJob, Engine, SimResult
 from .metrics import CollectiveMetrics, compute_metrics
-from .simulate import build_jobs, run_collective, run_policy_suite
+from .simulate import (
+    StreamingResult,
+    build_jobs,
+    build_streaming_jobs,
+    run_collective,
+    run_policy_suite,
+    run_streaming_collective,
+)
 from .topology import Link, RailTopology
 
 __all__ = [k for k in dir() if not k.startswith("_")]

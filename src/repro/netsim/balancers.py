@@ -22,6 +22,12 @@ explicitly:
 * **RailS** — the paper: LPT plan per sender domain over its atomic chunks
   (local info only), direct rail paths, proactive. Uniform send ⇒ uniform
   receive by Theorem 3; no probes, no feedback.
+* **RailS-online** — the streaming control plane (`repro.sched`): chunks
+  are only revealed at release time, so each arrival batch is LPT-assigned
+  against a *persistent* per-domain LoadState, optionally pre-charged by
+  EWMA rail-health feedback and a routing-replay forecast of bytes still
+  to come. With every chunk released at t=0 and no feedback it reproduces
+  RailS exactly (the offline-parity anchor).
 """
 
 from __future__ import annotations
@@ -29,6 +35,8 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.lpt import lpt_schedule
+from ..sched.feedback import speed_precharge
+from ..sched.online import windowed_lpt_schedule
 from .events import ChunkJob, Engine
 from .topology import RailTopology
 
@@ -39,6 +47,7 @@ __all__ = [
     "MinRttPolicy",
     "RepsPolicy",
     "RailSPolicy",
+    "OnlineRailSPolicy",
     "make_policy",
     "POLICIES",
 ]
@@ -56,6 +65,33 @@ class Policy:
 
     def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
         raise NotImplementedError
+
+    def assign_batch(
+        self,
+        eng: Engine,
+        batch_by_sender: dict[tuple[int, int], list[ChunkJob]],
+        now: float = 0.0,
+    ) -> list[ChunkJob]:
+        """Assign one release batch; returns jobs in fabric-entry order.
+
+        Senders are visited round-robin (an all-to-all burst is symmetric);
+        reactive policies decide chunk-by-chunk via :meth:`choose_path`,
+        planners override this to schedule the whole batch jointly.
+        """
+        queues = {k: list(v) for k, v in batch_by_sender.items() if v}
+        order = sorted(queues)
+        out: list[ChunkJob] = []
+        while queues:
+            for key in list(order):
+                q = queues.get(key)
+                if not q:
+                    queues.pop(key, None)
+                    continue
+                job = q.pop(0)
+                eng._commit(job, self.choose_path(eng, job))
+                out.append(job)
+            order = [k for k in order if k in queues]
+        return out
 
 
 class EcmpPolicy(Policy):
@@ -203,13 +239,107 @@ class RailSPolicy(Policy):
         return self.topo.rail_path(job.src_domain, job.dst_domain, rail)
 
 
+class OnlineRailSPolicy(Policy):
+    """Streaming RailS: per-batch LPT over a persistent per-domain LoadState.
+
+    Three optional information sources sharpen the plan (all default off so
+    the bare policy is the offline-parity anchor):
+
+    * ``window`` — re-plan granularity inside a release batch: ``None``
+      plans the whole batch at once (equals Algorithm 2 when everything
+      releases together), ``1`` is greedy list scheduling on arrival, and
+      intermediate K bounds decision latency to K chunks.
+    * ``health`` — a ``RailHealthEstimator``; its EWMA speed estimates are
+      folded in as a LoadState pre-charge so byte-LPT approximates
+      time-LPT on degraded rails (`repro.sched.feedback`).
+    * ``replay`` — a ``RoutingReplayState``; its forecast of the domain's
+      *total* iteration egress right-sizes the pre-charge before most
+      chunks have arrived (routing replay from previous gating counts).
+      The pre-charge exists only when ``health`` is set — with nominal
+      speeds it is identically zero, so replay without health is a no-op
+      here (it still drives chunk sizing in the pipeline driver).
+    """
+
+    name = "rails-online"
+
+    def __init__(
+        self,
+        topo: RailTopology,
+        seed: int = 0,
+        window: int | None = None,
+        health=None,
+        replay=None,
+    ):
+        super().__init__(topo, seed)
+        self.window = window
+        self.health = health
+        self.replay = replay
+        self.loads: dict[int, np.ndarray] = {}  # realized bytes per domain rail
+        self._assignment: dict[int, int] = {}  # chunk_id -> rail
+
+    def _initial_loads(self, domain: int, batch_total: float) -> np.ndarray:
+        real = self.loads.setdefault(domain, np.zeros(self.topo.n))
+        if self.health is None:
+            return real.copy()
+        known = real.sum() + batch_total
+        forecast = (
+            self.replay.expected_total(domain) if self.replay is not None else 0.0
+        )
+        # Pre-charge against the larger of what we can see and what the
+        # replay predicts for the full iteration — an undersized total
+        # under-penalizes the slow rail for the chunks yet to come.
+        return real + speed_precharge(max(known, forecast), self.health.speeds())
+
+    def assign_batch(
+        self,
+        eng: Engine,
+        batch_by_sender: dict[tuple[int, int], list[ChunkJob]],
+        now: float = 0.0,
+    ) -> list[ChunkJob]:
+        by_domain: dict[int, list[ChunkJob]] = {}
+        for key in sorted(batch_by_sender):
+            for j in batch_by_sender[key]:
+                by_domain.setdefault(j.src_domain, []).append(j)
+        for domain, jobs in by_domain.items():
+            weights = np.array([j.size for j in jobs])
+            src_ids = np.array([j.src_gpu for j in jobs])
+            initial = self._initial_loads(domain, float(weights.sum()))
+            res = windowed_lpt_schedule(
+                weights,
+                self.topo.n,
+                window=self.window,
+                source_ids=src_ids,
+                initial_loads=initial,
+            )
+            for j, rail in zip(jobs, res.assignment):
+                self._assignment[j.chunk_id] = int(rail)
+                self.loads[domain][int(rail)] += j.size
+        # Fabric-entry order stays the generic round-robin over senders.
+        return super().assign_batch(eng, batch_by_sender, now=now)
+
+    def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
+        rail = self._assignment[job.chunk_id]
+        return self.topo.rail_path(job.src_domain, job.dst_domain, rail)
+
+
 POLICIES = {
-    p.name: p for p in (EcmpPolicy, PlbPolicy, MinRttPolicy, RepsPolicy, RailSPolicy)
+    p.name: p
+    for p in (
+        EcmpPolicy,
+        PlbPolicy,
+        MinRttPolicy,
+        RepsPolicy,
+        RailSPolicy,
+        OnlineRailSPolicy,
+    )
 }
 
 
-def make_policy(name: str, topo: RailTopology, seed: int = 0) -> Policy:
+def make_policy(name: str, topo: RailTopology, seed: int = 0, **kwargs) -> Policy:
+    """Instantiate a policy by name; ``kwargs`` pass through to the policy
+    constructor (e.g. ``window``/``health``/``replay`` for rails-online)."""
     try:
-        return POLICIES[name](topo, seed=seed)
+        cls = POLICIES[name]
     except KeyError:
         raise ValueError(f"unknown policy {name!r}; choose {sorted(POLICIES)}") from None
+    return cls(topo, seed=seed, **kwargs)

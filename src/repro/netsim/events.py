@@ -6,24 +6,35 @@ does):
 
 **Assignment phase.** Senders are visited round-robin (an all-to-all is a
 single synchronized burst); the policy assigns each atomic chunk a path.
-Reactive policies estimate congestion from per-link *assigned-bytes*
-counters — their own domain's up-links fresh, everything remote through a
-stale snapshot refreshed every ``probe_every`` decisions (RTT-delayed
-signals; the staleness is what makes reactive schemes herd under incast,
-paper §VI-E). RailS ignores the estimates entirely: its plan is proactive
-(Theorem 3 + LPT).
+Reactive policies estimate congestion from per-link *backlog* counters
+(assigned minus transmitted bytes) — their own domain's up-links fresh,
+everything remote through a stale snapshot refreshed every ``probe_every``
+decisions (RTT-delayed signals; the staleness is what makes reactive
+schemes herd under incast, paper §VI-E). RailS ignores the estimates
+entirely: its plan is proactive (Theorem 3 + LPT).
 
 **Simulation phase.** A proper discrete-event simulation: every link is a
 FIFO server (rate ``R`` bytes/s); chunks enter their first-hop queue at
-t=0 in assignment order, are serviced in arrival order, and hop to the next
-link after ``hop_latency``. Store-and-forward at chunk granularity —
-pipelining across chunks of the same flow arises naturally.
+their release time (``arrival_time``, t=0 for the classic one-shot
+collective), are serviced in arrival order, and hop to the next link after
+``hop_latency``. Store-and-forward at chunk granularity — pipelining across
+chunks of the same flow arises naturally.
+
+**Streaming mode** (:meth:`Engine.run_streaming`) interleaves the two
+phases: chunks are only revealed to the policy when they are *released*
+(micro-batch boundaries, bursty arrivals), so online policies must decide
+with partial information while earlier chunks are still in flight. The
+engine notifies registered observers of every link-service interval and
+chunk completion — the feed that `repro.sched.feedback` (EWMA rail health)
+and `repro.sched.telemetry` (timelines, Chrome traces) consume.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import itertools
+import math
 
 import numpy as np
 
@@ -34,7 +45,13 @@ __all__ = ["ChunkJob", "SimResult", "Engine"]
 
 @dataclasses.dataclass
 class ChunkJob:
-    """One atomic chunk to be transferred."""
+    """One atomic chunk to be transferred.
+
+    ``arrival_time`` is the release time: the chunk does not exist for
+    either the policy or the fabric before it (0.0 reproduces the one-shot
+    collective). ``round_id`` tags the micro-batch / iteration the chunk
+    belongs to in streaming runs.
+    """
 
     chunk_id: int
     flow_id: int
@@ -43,6 +60,8 @@ class ChunkJob:
     dst_domain: int
     dst_gpu: int
     size: float
+    arrival_time: float = 0.0
+    round_id: int = 0
     # Filled by the engine:
     path: list[str] | None = None
     start_time: float = 0.0
@@ -64,6 +83,75 @@ class SimResult:
         out["max"] = float(vals.max())
         return out
 
+    def round_completion_times(self) -> dict[int, float]:
+        """Finish time of the last chunk of each streaming round."""
+        out: dict[int, float] = {}
+        for j in self.jobs:
+            out[j.round_id] = max(out.get(j.round_id, 0.0), j.finish_time)
+        return out
+
+
+class _FifoNetwork:
+    """Incremental FIFO-server network: inject chunks at any time, advance
+    the event clock piecewise. Extracted from the one-shot simulation so
+    streaming releases can interleave with in-flight service."""
+
+    def __init__(self, engine: "Engine"):
+        self.eng = engine
+        topo = engine.topo
+        self.link_queue: dict[str, list] = {k: [] for k in topo.links}
+        self.link_busy: dict[str, bool] = {k: False for k in topo.links}
+        self.events: list = []  # heap of (finish, seq, job, hop, link, start)
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def inject(self, job: ChunkJob, t: float) -> None:
+        self._arrive(max(t, job.arrival_time), job, 0)
+
+    def _arrive(self, t: float, job: ChunkJob, hop: int) -> None:
+        assert job.path is not None
+        link = job.path[hop]
+        heapq.heappush(self.link_queue[link], (t, next(self._seq), job, hop))
+        self._maybe_start(link, t)
+
+    def _maybe_start(self, link: str, t: float) -> None:
+        if self.link_busy[link] or not self.link_queue[link]:
+            return
+        arr, _s, job, hop = heapq.heappop(self.link_queue[link])
+        self.link_busy[link] = True
+        if hop == 0:
+            job.start_time = t
+        finish = t + job.size / self.eng.topo.links[link].rate
+        self.eng.link_bytes[link] += job.size
+        heapq.heappush(self.events, (finish, next(self._seq), job, hop, link, t))
+
+    def advance_to(self, horizon: float) -> None:
+        """Process all service completions strictly before ``horizon``."""
+        while self.events and self.events[0][0] < horizon:
+            self._step()
+        self.now = max(self.now, horizon)
+
+    def drain(self) -> None:
+        while self.events:
+            self._step()
+
+    def _step(self) -> None:
+        t, _s, job, hop, link, started = heapq.heappop(self.events)
+        self.now = t
+        self.link_busy[link] = False
+        self.eng.transmitted_bytes[link] += job.size
+        # Observers hear about the service interval only once it has
+        # finished — a real controller cannot measure an in-flight
+        # transfer's rate before the transfer completes.
+        self.eng._notify_service(link, started, t, job)
+        assert job.path is not None
+        if hop + 1 < len(job.path):
+            self._arrive(t + self.eng.hop_latency, job, hop + 1)
+        else:
+            job.finish_time = t
+            self.eng._notify_completion(job, t)
+        self._maybe_start(link, t)
+
 
 class Engine:
     def __init__(
@@ -72,22 +160,52 @@ class Engine:
         hop_latency: float = 1e-6,
         probe_every: int = 64,
         seed: int = 0,
+        observers: tuple = (),
     ):
         self.topo = topo
         self.hop_latency = hop_latency
         self.probe_every = probe_every
         self.rng = np.random.default_rng(seed)
         self.assigned_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
+        self.transmitted_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
         self._snapshot: dict[str, float] = dict(self.assigned_bytes)
         self.link_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
         self._decisions = 0
+        # Observers receive (link, start, end, job) service intervals and
+        # (job, t) completions — telemetry and feedback estimators hook here.
+        self.observers: list = list(observers)
+
+    # -- observer fan-out -----------------------------------------------------
+
+    def add_observer(self, obs) -> None:
+        self.observers.append(obs)
+
+    def _notify_service(self, link: str, start: float, end: float, job: ChunkJob) -> None:
+        for obs in self.observers:
+            record = getattr(obs, "record_service", None)
+            if record is not None:
+                record(link, start, end, job)
+
+    def _notify_completion(self, job: ChunkJob, t: float) -> None:
+        for obs in self.observers:
+            record = getattr(obs, "record_completion", None)
+            if record is not None:
+                record(job, t)
 
     # -- state the policies may query (assignment-phase estimates) ----------
 
     def queue_delay(self, link: str, now: float = 0.0, fresh: bool = True) -> float:
-        """Estimated seconds of backlog on ``link`` from assigned bytes."""
-        src = self.assigned_bytes if fresh else self._snapshot
-        return src[link] / self.topo.links[link].rate
+        """Estimated seconds of backlog on ``link``: assigned minus already
+        transmitted bytes. The stale view is the backlog *as of the last
+        snapshot* — both counters frozen together, the way a delayed probe
+        reports a consistent (if old) reading. In the one-shot collective
+        nothing has been transmitted during assignment, so both views
+        equal the assigned-bytes estimate."""
+        if fresh:
+            backlog = self.assigned_bytes[link] - self.transmitted_bytes[link]
+        else:
+            backlog = self._snapshot[link]
+        return max(backlog, 0.0) / self.topo.links[link].rate
 
     def path_delay(self, path: list[str], src_domain: int, now: float = 0.0) -> float:
         """Estimated waiting along a path: fresh for the sender's own
@@ -104,27 +222,55 @@ class Engine:
             self.assigned_bytes[link] += job.size
         self._decisions += 1
         if self._decisions % self.probe_every == 0:
-            self._snapshot = dict(self.assigned_bytes)
+            self._snapshot = {
+                k: self.assigned_bytes[k] - self.transmitted_bytes[k]
+                for k in self.assigned_bytes
+            }
 
     # -- orchestration --------------------------------------------------------
 
     def run(self, jobs_by_sender: dict[tuple[int, int], list[ChunkJob]], policy) -> SimResult:
-        # Phase 1: round-robin assignment.
-        queues = {k: list(v) for k, v in jobs_by_sender.items() if v}
-        order = sorted(queues)
-        all_jobs: list[ChunkJob] = []
-        while queues:
-            for key in list(order):
-                q = queues.get(key)
-                if not q:
-                    queues.pop(key, None)
-                    continue
-                job = q.pop(0)
-                self._commit(job, policy.choose_path(self, job))
-                all_jobs.append(job)
-            order = [k for k in order if k in queues]
+        """One-shot collective: assign everything, then simulate."""
+        # Phase 1: the whole collective is one release batch; the policy's
+        # assign_batch fixes the round-robin fabric-entry order.
+        all_jobs: list[ChunkJob] = policy.assign_batch(self, jobs_by_sender, now=0.0)
         # Phase 2: discrete-event FIFO simulation.
-        self._simulate(all_jobs)
+        net = _FifoNetwork(self)
+        for job in all_jobs:
+            net.inject(job, job.arrival_time)
+        net.drain()
+        return self._result(all_jobs)
+
+    def run_streaming(
+        self, jobs_by_sender: dict[tuple[int, int], list[ChunkJob]], policy
+    ) -> SimResult:
+        """Streaming collective: chunks are revealed at their release time.
+
+        All chunks sharing one release instant form a *batch*: the policy
+        assigns the whole batch at once (so a planner can LPT over it),
+        senders visited round-robin exactly as in the one-shot phase — with
+        every release at t=0 this reproduces :meth:`run` event-for-event.
+        The network is advanced to each release time first, so completion
+        feedback observed by then is available to the policy.
+        """
+        releases: dict[float, dict[tuple[int, int], list[ChunkJob]]] = {}
+        for key, jobs in jobs_by_sender.items():
+            for j in jobs:
+                releases.setdefault(j.arrival_time, {}).setdefault(key, []).append(j)
+        net = _FifoNetwork(self)
+        all_jobs: list[ChunkJob] = []
+        for t in sorted(releases):
+            if not math.isfinite(t):
+                raise ValueError(f"non-finite release time {t!r}")
+            net.advance_to(t)
+            batch = policy.assign_batch(self, releases[t], now=t)
+            for job in batch:
+                all_jobs.append(job)
+                net.inject(job, t)
+        net.drain()
+        return self._result(all_jobs)
+
+    def _result(self, all_jobs: list[ChunkJob]) -> SimResult:
         flow_cct: dict[int, float] = {}
         for j in all_jobs:
             flow_cct[j.flow_id] = max(flow_cct.get(j.flow_id, 0.0), j.finish_time)
@@ -135,48 +281,3 @@ class Engine:
             makespan=makespan,
             flow_cct=flow_cct,
         )
-
-    def _simulate(self, jobs: list[ChunkJob]) -> None:
-        """Heap-driven DES: links are FIFO servers, service in arrival order."""
-        link_queue: dict[str, list] = {k: [] for k in self.topo.links}  # heap of (arr, seq, job_idx, hop)
-        link_busy: dict[str, bool] = {k: False for k in self.topo.links}
-        events: list = []  # heap of (time, seq, kind, link, job_idx, hop)
-        seq = 0
-
-        def arrive(t: float, job_idx: int, hop: int):
-            nonlocal seq
-            job = jobs[job_idx]
-            assert job.path is not None
-            link = job.path[hop]
-            heapq.heappush(link_queue[link], (t, seq, job_idx, hop))
-            seq += 1
-            maybe_start(link, t)
-
-        def maybe_start(link: str, t: float):
-            nonlocal seq
-            if link_busy[link] or not link_queue[link]:
-                return
-            arr, _s, job_idx, hop = heapq.heappop(link_queue[link])
-            job = jobs[job_idx]
-            link_busy[link] = True
-            if hop == 0:
-                job.start_time = t
-            finish = t + job.size / self.topo.links[link].rate
-            self.link_bytes[link] += job.size
-            heapq.heappush(events, (finish, seq, "done", link, job_idx, hop))
-            seq += 1
-
-        # All chunks hit their first-hop queue at t=0, in assignment order.
-        for i, _job in enumerate(jobs):
-            arrive(0.0, i, 0)
-
-        while events:
-            t, _s, _kind, link, job_idx, hop = heapq.heappop(events)
-            job = jobs[job_idx]
-            link_busy[link] = False
-            assert job.path is not None
-            if hop + 1 < len(job.path):
-                arrive(t + self.hop_latency, job_idx, hop + 1)
-            else:
-                job.finish_time = t
-            maybe_start(link, t)

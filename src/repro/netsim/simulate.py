@@ -1,22 +1,43 @@
-"""Top-level simulation driver: traffic matrix -> policy -> metrics.
+"""Top-level simulation drivers: traffic matrix -> policy -> metrics.
 
-``run_collective`` is the single entry point the benchmarks use; it mirrors
-the paper's experiment loop: build atomic chunks from ``D1`` (flow
-splitting), hand them to a policy (which may plan proactively), run the
-queueing engine, and score with §VI-A metrics against the Theorem-2 optimum.
+Two regimes:
+
+* **Offline** (``run_collective``) — the paper's experiment loop: build
+  atomic chunks from ``D1`` (flow splitting), hand them to a policy (which
+  may plan proactively over the full matrix), run the queueing engine, and
+  score with §VI-A metrics against the Theorem-2 optimum.
+* **Streaming** (``run_streaming_collective``) — the online control plane:
+  the workload is a sequence of *rounds* released over time (micro-batch
+  boundaries, bursty gating); chunks are revealed to the policy only at
+  their release instant, rail-health feedback and telemetry observers hook
+  into the engine, and per-round completion times come back alongside the
+  aggregate metrics. A single round released at t=0 with feedback disabled
+  reproduces ``run_collective`` exactly.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
+import numpy as np
+
 from ..core.plan import split_message
 from ..core.theorems import theorem2_optimal_time
 from ..core.traffic import TrafficMatrix
-from .balancers import make_policy
-from .events import ChunkJob, Engine
+from ..sched.feedback import RailHealthEstimator
+from .balancers import POLICIES, OnlineRailSPolicy, Policy, make_policy
+from .events import ChunkJob, Engine, SimResult
 from .metrics import CollectiveMetrics, compute_metrics
 from .topology import RailTopology
 
-__all__ = ["build_jobs", "run_collective", "run_policy_suite"]
+__all__ = [
+    "build_jobs",
+    "build_streaming_jobs",
+    "run_collective",
+    "run_streaming_collective",
+    "run_policy_suite",
+    "StreamingResult",
+]
 
 
 def build_jobs(
@@ -74,6 +95,138 @@ def run_collective(
     result = engine.run(jobs, policy)
     opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
     return compute_metrics(result, topo, tm.name, policy_name, opt)
+
+
+def build_streaming_jobs(
+    rounds: list[tuple[float, TrafficMatrix]], chunk_bytes: float
+) -> dict[tuple[int, int], list[ChunkJob]]:
+    """Flow-split a sequence of ``(release_time, TrafficMatrix)`` rounds.
+
+    Chunk/flow ids stay globally unique across rounds; every chunk carries
+    its round's release as ``arrival_time`` and its round index as
+    ``round_id``.
+    """
+    out: dict[tuple[int, int], list[ChunkJob]] = {}
+    chunk_off = 0
+    flow_off = 0
+    for rnd, (release, tm) in enumerate(rounds):
+        if release < 0:
+            raise ValueError(f"release times must be >= 0, got {release}")
+        per_round = build_jobs(tm, chunk_bytes)
+        max_flow = -1
+        num_chunks = 0
+        for key, jobs in per_round.items():
+            for j in jobs:
+                j.chunk_id += chunk_off
+                j.flow_id += flow_off
+                j.arrival_time = float(release)
+                j.round_id = rnd
+                max_flow = max(max_flow, j.flow_id)
+                num_chunks += 1
+            out.setdefault(key, []).extend(jobs)
+        chunk_off += num_chunks
+        # max() keeps the offset monotone across empty rounds (max_flow
+        # stays -1 there, which must not reset the id space).
+        flow_off = max(flow_off, max_flow + 1)
+    return out
+
+
+@dataclasses.dataclass
+class StreamingResult:
+    """Outcome of one streaming collective."""
+
+    metrics: CollectiveMetrics
+    sim: SimResult
+    round_cct: dict[int, float]  # round_id -> last completion time
+    health: RailHealthEstimator | None = None
+
+    @property
+    def makespan(self) -> float:
+        return self.metrics.makespan
+
+
+def run_streaming_collective(
+    workload: TrafficMatrix | list[tuple[float, TrafficMatrix]],
+    policy_name: str,
+    r1: float = 400e9,
+    r2: float = 50e9,
+    chunk_bytes: float = 4 * 2**20,
+    seed: int = 0,
+    probe_every: int = 64,
+    rail_speeds=None,
+    feedback: bool = False,
+    window: int | None = None,
+    replay=None,
+    recorder=None,
+) -> StreamingResult:
+    """Simulate a streaming all-to-all (chunks released over time).
+
+    Args:
+      workload: a single :class:`TrafficMatrix` (one round at t=0 — the
+        offline-parity case) or a list of ``(release_time, TrafficMatrix)``
+        rounds.
+      policy_name: any registered policy; reactive baselines run unchanged
+        (they always decided chunk-by-chunk), ``rails-online`` engages the
+        online control plane.
+      rail_speeds: optional per-rail degradation factors in (0, 1] — the
+        straggler-rail scenario.
+      feedback: attach a :class:`RailHealthEstimator` to the engine and, for
+        ``rails-online``, fold its speed estimates into the LoadState.
+      window: re-planning window for ``rails-online`` (None = whole batch).
+      replay: optional ``RoutingReplayState`` forecast for ``rails-online``;
+        updated in place with this run's realized per-domain loads.
+      recorder: optional ``repro.sched.telemetry.TraceRecorder``.
+    """
+    if isinstance(workload, TrafficMatrix):
+        rounds = [(0.0, workload)]
+    else:
+        rounds = sorted(workload, key=lambda rt: rt[0])
+    if not rounds:
+        raise ValueError("streaming workload needs at least one round")
+    tm0 = rounds[0][1]
+    m, n = tm0.num_domains, tm0.num_rails
+    for _t, tm in rounds:
+        if (tm.num_domains, tm.num_rails) != (m, n):
+            raise ValueError("all rounds must share one (M, N) fabric shape")
+    topo = RailTopology(m, n, r1=r1, r2=r2, rail_speeds=rail_speeds)
+    jobs = build_streaming_jobs(rounds, chunk_bytes)
+    health = RailHealthEstimator(n, nominal_rate=r2) if feedback else None
+    kwargs: dict = {}
+    if issubclass(POLICIES.get(policy_name, Policy), OnlineRailSPolicy):
+        kwargs = {"window": window, "health": health, "replay": replay}
+    policy = make_policy(policy_name, topo, seed=seed, **kwargs)
+    policy.prepare(jobs)
+    engine = Engine(topo, probe_every=probe_every, seed=seed)
+    if health is not None:
+        engine.add_observer(health)
+    if recorder is not None:
+        engine.add_observer(recorder)
+    result = engine.run_streaming(jobs, policy)
+    # Lower bound: each round cannot beat its own Theorem-2 time after its
+    # release, nor can the union beat the aggregate matrix's bound.
+    d2_total = sum(tm.d2 for _t, tm in rounds)
+    opt = max(
+        [theorem2_optimal_time(d2_total, n, r2)]
+        + [t + theorem2_optimal_time(tm.d2, n, r2) for t, tm in rounds]
+    )
+    name = tm0.name if len(rounds) == 1 else f"stream[{len(rounds)}x{tm0.name}]"
+    metrics = compute_metrics(result, topo, name, policy_name, opt)
+    if replay is not None:
+        sent = {d: 0.0 for d in range(m)}
+        for js in jobs.values():
+            for j in js:
+                sent[j.src_domain] += j.size
+        loads = getattr(policy, "loads", None)
+        replay.update_from_loads(
+            [sent[d] for d in range(m)],
+            [loads.get(d, np.zeros(n)) for d in range(m)] if loads else None,
+        )
+    return StreamingResult(
+        metrics=metrics,
+        sim=result,
+        round_cct=result.round_completion_times(),
+        health=health,
+    )
 
 
 def run_policy_suite(

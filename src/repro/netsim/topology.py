@@ -40,6 +40,7 @@ class RailTopology:
         r2: float = 50e9,
         num_spines: int = None,  # type: ignore[assignment]
         spine_rate: float = None,  # type: ignore[assignment]
+        rail_speeds=None,
     ):
         if num_spines is None:
             # Non-blocking spine: each leaf has M NIC-facing ports at R2, so
@@ -54,11 +55,21 @@ class RailTopology:
         self.r1 = r1
         self.r2 = r2
         self.num_spines = num_spines
+        # Per-rail degradation factors in (0, 1]: rail n's NIC links run at
+        # r2 * rail_speeds[n] (a slow leaf/optics lane — the straggler-rail
+        # scenario repro.sched.feedback learns to route around).
+        if rail_speeds is None:
+            rail_speeds = [1.0] * self.n
+        if len(rail_speeds) != self.n:
+            raise ValueError(f"rail_speeds must have {self.n} entries")
+        if any(not 0.0 < s <= 1.0 for s in rail_speeds):
+            raise ValueError("rail_speeds must lie in (0, 1]")
+        self.rail_speeds = tuple(float(s) for s in rail_speeds)
         self.links: dict[str, Link] = {}
         for d in range(self.m):
             for n in range(self.n):
-                self._add(f"up:{d}:{n}", r2)  # NIC(d,n) -> leaf S_n
-                self._add(f"down:{d}:{n}", r2)  # leaf S_n -> NIC(d,n)
+                self._add(f"up:{d}:{n}", r2 * self.rail_speeds[n])  # NIC(d,n) -> leaf S_n
+                self._add(f"down:{d}:{n}", r2 * self.rail_speeds[n])  # leaf S_n -> NIC(d,n)
         for n in range(self.n):
             for p in range(num_spines):
                 self._add(f"l2s:{n}:{p}", spine_rate)  # leaf S_n -> spine p

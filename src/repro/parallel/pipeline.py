@@ -20,6 +20,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import pvary as compat_pvary
+from ..compat import shard_map as compat_shard_map
+
 __all__ = ["gpipe", "pipeline_loss"]
 
 
@@ -52,8 +55,8 @@ def gpipe(
         mb_shape = xs.shape[1:]
         # carries become device-varying over the stage axis inside the loop;
         # mark the (replicated) initial values accordingly.
-        carry = jax.lax.pvary(jnp.zeros(mb_shape, xs.dtype), (stage_axis,))
-        outputs = jax.lax.pvary(jnp.zeros((n_mb,) + mb_shape, xs.dtype), (stage_axis,))
+        carry = compat_pvary(jnp.zeros(mb_shape, xs.dtype), (stage_axis,))
+        outputs = compat_pvary(jnp.zeros((n_mb,) + mb_shape, xs.dtype), (stage_axis,))
         perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
         def tick(state, t):
@@ -82,7 +85,7 @@ def gpipe(
         )
         return outputs
 
-    return jax.shard_map(
+    return compat_shard_map(
         per_shard,
         mesh=mesh,
         in_specs=(P(stage_axis), P()),

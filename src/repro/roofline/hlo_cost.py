@@ -181,7 +181,10 @@ def _local_cost(ops: list[_Op], shapes: dict[str, str]) -> tuple[HloCost, list[t
             cost.hbm_bytes += rbytes
             continue
         if opcode == "dot":
-            lhs_m = re.search(r"dot\(%([\w\.\-]+)", op.line)
+            # First operand name; newer HLO prints the operand type before
+            # the name ("dot(f32[256,256]{1,0} %lhs, ...)"), older prints
+            # the bare "%lhs" — skip anything up to the first %.
+            lhs_m = re.search(r"dot\([^%)]*%([\w\.\-]+)", op.line)
             contract = 1
             cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
             if lhs_m and cm and lhs_m.group(1) in shapes:

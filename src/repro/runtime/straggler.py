@@ -17,6 +17,7 @@ import dataclasses
 import numpy as np
 
 from ..core.lpt import lpt_schedule
+from ..sched.feedback import speed_precharge
 
 __all__ = ["StragglerDetector", "degraded_rail_schedule", "speculative_dispatch"]
 
@@ -52,13 +53,16 @@ def degraded_rail_schedule(
 
     ``rail_speeds[j]`` in (0, 1]: a rail at speed s behaves like a rail with
     ``(1/s - 1) * mean_load`` of pre-existing load, so LPT routes around it.
+    The pre-charge is the shared :func:`repro.sched.feedback.speed_precharge`
+    formula — the same one the online control plane derives from EWMA
+    health estimates, so offline mitigation and online feedback agree.
     Returns the LptResult plus the *time* each rail finishes (load/speed).
     """
     rail_speeds = np.asarray(rail_speeds, dtype=np.float64)
     total = float(np.sum(weights))
     # Ideal per-rail load proportional to speed.
     speed_share = rail_speeds / rail_speeds.sum()
-    pre = (total / rail_speeds.sum()) * (1.0 - rail_speeds)
+    pre = speed_precharge(total, rail_speeds)
     res = lpt_schedule(np.asarray(weights), num_rails, initial_loads=pre)
     real_loads = res.loads - pre
     finish = real_loads / rail_speeds

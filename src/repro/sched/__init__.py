@@ -1,0 +1,57 @@
+"""Online scheduling control plane (`repro.sched`).
+
+**Offline vs online regimes.** The core reproduction (``core.lpt``,
+``core.plan``, ``netsim.simulate.run_collective``) is *offline*: the full
+traffic matrix is known before the first chunk moves, one LPT plan is
+computed per sender domain, one collective runs. Real MoE training and
+serving are *online*: micro-batches release chunks over time, gating
+counts drift between iterations, and rails degrade mid-run — the
+scheduler must commit chunks with partial, evolving information. This
+package layers that regime on the offline core without changing it:
+
+* :mod:`~repro.sched.online` — online LPT variants: greedy list
+  scheduling on arrival (``window=1``), windowed re-planning every K
+  chunks, and a routing-replay mode that forecasts each domain's egress
+  from previous iterations' gating counts; plus adaptive chunk sizing
+  against the Theorem-4 MSE bound.
+* :mod:`~repro.sched.feedback` — per-rail health estimation: EWMA
+  service rates observed from the fabric pre-charge the LPT LoadState so
+  byte-balanced plans stay *time*-balanced on degraded rails. The same
+  pre-charge formula backs ``runtime.straggler.degraded_rail_schedule``.
+* :mod:`~repro.sched.telemetry` — per-link utilization timelines,
+  per-rail completion histograms, Chrome-trace JSON export.
+* :mod:`~repro.sched.pipeline` — multi-round streaming driver that
+  overlaps round k's tail with round k+1's head.
+
+Entry points: ``netsim.simulate.run_streaming_collective`` (one streaming
+collective, any policy), ``sched.pipeline.run_pipeline`` (overlapped
+multi-round), and the ``rails-online`` policy in ``netsim.balancers``.
+Anchors: with every chunk released at t=0 and feedback disabled, the
+online path reproduces the offline one exactly (tests pin this down).
+"""
+
+from .feedback import RailHealthEstimator, speed_precharge
+from .online import (
+    AdaptiveChunker,
+    GatingFeedbackHook,
+    RoutingReplayState,
+    online_greedy_schedule,
+    windowed_lpt_schedule,
+)
+from .pipeline import PipelineResult, plan_releases, run_pipeline
+from .telemetry import ServiceRecord, TraceRecorder
+
+__all__ = [
+    "AdaptiveChunker",
+    "GatingFeedbackHook",
+    "PipelineResult",
+    "RailHealthEstimator",
+    "RoutingReplayState",
+    "ServiceRecord",
+    "TraceRecorder",
+    "online_greedy_schedule",
+    "plan_releases",
+    "run_pipeline",
+    "speed_precharge",
+    "windowed_lpt_schedule",
+]

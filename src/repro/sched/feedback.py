@@ -1,0 +1,106 @@
+"""Per-rail health estimation from observed completions.
+
+RailS proper is feedback-free (Theorem 3 makes local LPT globally optimal
+*when all rails run at nominal speed*). When a rail degrades — flapping
+optics, a slow leaf, PFC storms — byte-balanced plans are no longer
+time-balanced. This module closes the loop without giving up the proactive
+structure: an EWMA estimator turns observed link-service intervals into
+per-rail *speed* estimates, and those speeds are folded into the LPT greedy
+as a **pre-charge** of the LoadState (a rail at speed ``s`` starts with
+``(1/s - 1)``-proportional phantom load, so the byte-greedy routes around
+it exactly as a time-greedy would).
+
+The same pre-charge formula powers :func:`repro.runtime.straggler.
+degraded_rail_schedule` (one-shot, speeds known a priori) — both paths call
+:func:`speed_precharge`, so offline straggler mitigation and online
+feedback stay consistent by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["speed_precharge", "RailHealthEstimator"]
+
+
+def speed_precharge(total_weight: float, rail_speeds: np.ndarray) -> np.ndarray:
+    """Phantom initial load per rail so byte-LPT approximates time-LPT.
+
+    With per-rail speeds ``s_j`` (1.0 = nominal) and ``W`` total bytes to
+    place, the time-balanced ideal gives rail ``j`` the share
+    ``W * s_j / sum(s)``. Seeding LoadState with
+    ``pre_j = (W / sum(s)) * (1 - s_j)`` makes the byte-greedy's uniform
+    target land each rail at exactly that share: equal *pre + real* loads
+    imply real loads proportional to speed.
+
+    Returns the ``(N,)`` pre-charge vector (all zeros when every speed is
+    1.0, so healthy fabrics are untouched).
+    """
+    rail_speeds = np.asarray(rail_speeds, dtype=np.float64)
+    if np.any(rail_speeds <= 0):
+        raise ValueError("rail speeds must be positive")
+    return (float(total_weight) / rail_speeds.sum()) * (1.0 - rail_speeds)
+
+
+@dataclasses.dataclass
+class RailHealthEstimator:
+    """EWMA service-rate tracker per rail, fed by engine service intervals.
+
+    Plugs into the netsim engine as an observer (``record_service``) and
+    into the online scheduler as a speed source (``speeds`` /
+    ``precharge``). Rates are learned from NIC links only (``up:``/
+    ``down:``); spine hops say nothing about rail lane health.
+
+    Attributes:
+      num_rails: N.
+      nominal_rate: the healthy per-NIC rate R2 (bytes/s).
+      alpha: EWMA smoothing factor for new observations.
+      floor: lower clamp on the speed estimate — keeps a dying rail
+        schedulable (the paper never blackholes a lane, it de-weights it).
+    """
+
+    num_rails: int
+    nominal_rate: float
+    alpha: float = 0.3
+    floor: float = 0.05
+
+    def __post_init__(self) -> None:
+        self._rates = np.full(self.num_rails, float(self.nominal_rate))
+        self._observations = np.zeros(self.num_rails, dtype=np.int64)
+
+    # -- engine observer protocol -------------------------------------------
+
+    def record_service(self, link: str, start: float, end: float, job) -> None:
+        kind, _d, rail = link.split(":")
+        if kind not in ("up", "down"):
+            return
+        duration = end - start
+        if duration <= 0:
+            return
+        j = int(rail)
+        rate = job.size / duration
+        k = self._observations[j]
+        self._rates[j] = rate if k == 0 else (
+            self.alpha * rate + (1 - self.alpha) * self._rates[j]
+        )
+        self._observations[j] = k + 1
+
+    # -- scheduler-facing view ----------------------------------------------
+
+    @property
+    def observations(self) -> np.ndarray:
+        return self._observations.copy()
+
+    def speeds(self) -> np.ndarray:
+        """Per-rail speed estimates in [floor, 1], 1.0 until first observed."""
+        return np.clip(self._rates / self.nominal_rate, self.floor, 1.0)
+
+    def precharge(self, total_weight: float) -> np.ndarray:
+        """LoadState pre-charge for ``total_weight`` pending bytes."""
+        return speed_precharge(total_weight, self.speeds())
+
+    def reset(self) -> None:
+        self._rates[:] = self.nominal_rate
+        self._observations[:] = 0

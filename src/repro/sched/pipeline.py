@@ -1,0 +1,166 @@
+"""Multi-round streaming driver: overlap round k's tail with k+1's head.
+
+Training emits one all-to-all per MoE layer per micro-batch; running them
+back-to-back leaves the fabric idle whenever a round's stragglers drain.
+This driver releases round k+1 a configurable fraction of round k's
+Theorem-2 optimal time after round k — the head of the next round fills
+the tail slack of the current one, and the online policy's persistent
+LoadState keeps the union balanced across round boundaries.
+
+The driver also owns the iteration-scale feedback loops: a
+:class:`~repro.sched.online.RoutingReplayState` warmed from the first
+round (standing in for "the previous training iteration"), and an
+:class:`~repro.sched.online.AdaptiveChunker` that sizes atomic chunks from
+the replayed totals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.theorems import theorem2_optimal_time
+from ..core.traffic import TrafficMatrix
+from .online import AdaptiveChunker, RoutingReplayState
+
+__all__ = ["PipelineResult", "plan_releases", "run_pipeline"]
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    """Outcome of a multi-round streaming run."""
+
+    streaming: object  # netsim.simulate.StreamingResult
+    releases: list[float]
+    round_cct: dict[int, float]  # round -> absolute completion time
+    round_latency: dict[int, float]  # round -> completion minus release
+    sequential_makespan: float | None  # sum of standalone rounds, if computed
+    chunk_bytes: float
+
+    @property
+    def makespan(self) -> float:
+        return self.streaming.metrics.makespan
+
+    @property
+    def overlap_speedup(self) -> float | None:
+        """Sequential-sum over pipelined makespan (>1 = overlap pays)."""
+        if self.sequential_makespan is None or self.makespan <= 0:
+            return None
+        return self.sequential_makespan / self.makespan
+
+
+def plan_releases(
+    tms: list[TrafficMatrix],
+    gap_fraction: float,
+    r2: float,
+) -> list[float]:
+    """Release times: round k+1 starts ``gap_fraction`` of round k's
+    Theorem-2 optimum after round k (1.0 = optimum-paced back-to-back,
+    smaller = deeper overlap, 0.0 = everything at once)."""
+    if not 0.0 <= gap_fraction:
+        raise ValueError("gap_fraction must be >= 0")
+    releases = [0.0]
+    for tm in tms[:-1]:
+        opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
+        releases.append(releases[-1] + gap_fraction * opt)
+    return releases
+
+
+def run_pipeline(
+    tms: list[TrafficMatrix],
+    policy: str = "rails-online",
+    gap_fraction: float = 0.5,
+    chunk_bytes: float | None = None,
+    r1: float = 400e9,
+    r2: float = 50e9,
+    seed: int = 0,
+    rail_speeds=None,
+    feedback: bool = False,
+    window: int | None = None,
+    use_replay: bool = True,
+    recorder=None,
+    compare_sequential: bool = False,
+) -> PipelineResult:
+    """Run a sequence of rounds as one overlapped streaming collective.
+
+    Args:
+      tms: per-round traffic matrices (micro-batches / iterations).
+      chunk_bytes: atomic chunk size; ``None`` lets the
+        :class:`AdaptiveChunker` size it from the replayed totals.
+      use_replay: warm a :class:`RoutingReplayState` covering the whole
+        session (the stand-in for the previous training iteration). The
+        forecast sizes chunks when ``chunk_bytes is None`` and — only
+        together with ``feedback=True`` — right-sizes the health
+        pre-charge before arrivals accumulate; with feedback off and an
+        explicit chunk size it has no scheduling effect.
+      compare_sequential: additionally simulate each round standalone and
+        report the sum of makespans (the no-overlap baseline) — roughly
+        doubles the simulation cost.
+    """
+    # Imported lazily: netsim.simulate pulls in the sched feedback and
+    # telemetry modules, so a module-level import here would be circular.
+    from ..netsim.simulate import run_streaming_collective
+
+    if not tms:
+        raise ValueError("run_pipeline needs at least one round")
+    n = tms[0].num_rails
+    replay = None
+    if use_replay:
+        # The previous training iteration ran the same stream of rounds, so
+        # its replayed forecast covers the *whole* session's egress — that
+        # magnitude is what right-sizes the health pre-charge before most
+        # chunks have arrived.
+        replay = RoutingReplayState(tms[0].num_domains, n)
+        replay.update_from_loads(sum(tm.domain_send_totals() for tm in tms))
+    if chunk_bytes is None:
+        chunker = AdaptiveChunker(chunk_bytes=4 * 2**20)
+        expected = (
+            float(np.max(tms[0].domain_send_totals()))
+            if replay is None
+            else max(replay.expected_total(d) for d in range(tms[0].num_domains))
+        )
+        chunk_bytes = chunker.suggest(expected, n)
+    releases = plan_releases(tms, gap_fraction, r2)
+    rounds = list(zip(releases, tms))
+    streaming = run_streaming_collective(
+        rounds,
+        policy,
+        r1=r1,
+        r2=r2,
+        chunk_bytes=chunk_bytes,
+        seed=seed,
+        rail_speeds=rail_speeds,
+        feedback=feedback,
+        window=window,
+        replay=replay,
+        recorder=recorder,
+    )
+    sequential = None
+    if compare_sequential:
+        sequential = 0.0
+        for i, tm in enumerate(tms):
+            solo = run_streaming_collective(
+                tm,
+                policy,
+                r1=r1,
+                r2=r2,
+                chunk_bytes=chunk_bytes,
+                seed=seed + i,
+                rail_speeds=rail_speeds,
+                feedback=feedback,
+                window=window,
+            )
+            sequential += solo.metrics.makespan
+    round_cct = streaming.round_cct
+    round_latency = {
+        rnd: cct - releases[rnd] for rnd, cct in round_cct.items()
+    }
+    return PipelineResult(
+        streaming=streaming,
+        releases=releases,
+        round_cct=round_cct,
+        round_latency=round_latency,
+        sequential_makespan=sequential,
+        chunk_bytes=chunk_bytes,
+    )

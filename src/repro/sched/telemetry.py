@@ -1,0 +1,192 @@
+"""Telemetry for simulated collectives: timelines, histograms, traces.
+
+The engine reports two event kinds to its observers: a *service interval*
+(one chunk occupying one link for ``[start, end)``) and a *chunk
+completion*. :class:`TraceRecorder` buffers both and derives:
+
+* **per-link utilization timelines** — busy fraction per time bin, the
+  view that makes stragglers and incast collapse visible at a glance;
+* **per-rail completion histograms** — when each rail's chunks finish, the
+  receive-side balance evidence behind the paper's MSE metric;
+* **Chrome-trace JSON export** — open in ``chrome://tracing`` / Perfetto:
+  one row per link, one slice per chunk service.
+
+Everything here is read-only with respect to the simulation: recording
+never perturbs scheduling decisions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+__all__ = ["ServiceRecord", "TraceRecorder"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceRecord:
+    """One chunk's occupancy of one link."""
+
+    link: str
+    start: float
+    end: float
+    size: float
+    chunk_id: int
+    flow_id: int
+    src_domain: int
+    dst_domain: int
+    round_id: int
+
+
+class TraceRecorder:
+    """Engine observer that accumulates service intervals and completions."""
+
+    def __init__(self) -> None:
+        self.services: list[ServiceRecord] = []
+        self.completions: list[tuple[int, int, float]] = []  # (chunk_id, round_id, t)
+        self._completion_rail: list[int] = []  # last-hop rail per completion
+
+    # -- engine observer protocol -------------------------------------------
+
+    def record_service(self, link: str, start: float, end: float, job) -> None:
+        self.services.append(
+            ServiceRecord(
+                link=link,
+                start=start,
+                end=end,
+                size=job.size,
+                chunk_id=job.chunk_id,
+                flow_id=job.flow_id,
+                src_domain=job.src_domain,
+                dst_domain=job.dst_domain,
+                round_id=job.round_id,
+            )
+        )
+
+    def record_completion(self, job, t: float) -> None:
+        self.completions.append((job.chunk_id, job.round_id, t))
+        last = job.path[-1] if job.path else "down:0:0"
+        self._completion_rail.append(int(last.split(":")[2]))
+
+    # -- derived views -------------------------------------------------------
+
+    @property
+    def makespan(self) -> float:
+        return max((s.end for s in self.services), default=0.0)
+
+    def link_utilization(
+        self, num_bins: int = 50, links: list[str] | None = None
+    ) -> tuple[np.ndarray, dict[str, np.ndarray]]:
+        """Busy-fraction timeline per link.
+
+        Returns ``(bin_edges, {link: (num_bins,) busy fraction})`` — edges
+        have ``num_bins + 1`` entries over ``[0, makespan]``.
+        """
+        span = self.makespan
+        edges = np.linspace(0.0, span if span > 0 else 1.0, num_bins + 1)
+        width = edges[1] - edges[0]
+        wanted = None if links is None else set(links)
+        out: dict[str, np.ndarray] = {}
+        for s in self.services:
+            if wanted is not None and s.link not in wanted:
+                continue
+            tl = out.setdefault(s.link, np.zeros(num_bins))
+            lo = int(np.searchsorted(edges, s.start, side="right")) - 1
+            hi = int(np.searchsorted(edges, s.end, side="left"))
+            for b in range(max(lo, 0), min(hi, num_bins)):
+                overlap = min(s.end, edges[b + 1]) - max(s.start, edges[b])
+                if overlap > 0:
+                    tl[b] += overlap / width
+        return edges, out
+
+    def rail_utilization(self, num_rails: int, num_bins: int = 50) -> tuple[np.ndarray, np.ndarray]:
+        """Mean NIC-link busy fraction per rail: ``(edges, (N, num_bins))``."""
+        edges, per_link = self.link_utilization(num_bins=num_bins)
+        agg = np.zeros((num_rails, num_bins))
+        counts = np.zeros(num_rails)
+        for link, tl in per_link.items():
+            kind, _d, rail = link.split(":")
+            if kind in ("up", "down"):
+                agg[int(rail)] += tl
+                counts[int(rail)] += 1
+        nonzero = counts > 0
+        agg[nonzero] /= counts[nonzero, None]
+        return edges, agg
+
+    def rail_completion_histogram(
+        self, num_rails: int, num_bins: int = 20
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Histogram of chunk completion times per delivery rail.
+
+        Returns ``(bin_edges, (N, num_bins) counts)``. A balanced collective
+        shows near-identical rows; a hot rail shows a long right tail.
+        """
+        times = np.array([t for _c, _r, t in self.completions])
+        rails = np.array(self._completion_rail, dtype=np.int64)
+        span = float(times.max()) if times.size else 1.0
+        edges = np.linspace(0.0, span, num_bins + 1)
+        hist = np.zeros((num_rails, num_bins))
+        for rail in range(num_rails):
+            if np.any(rails == rail):
+                hist[rail], _ = np.histogram(times[rails == rail], bins=edges)
+        return edges, hist
+
+    def round_latencies(self) -> dict[int, tuple[float, float]]:
+        """Per streaming round: (first completion, last completion)."""
+        out: dict[int, tuple[float, float]] = {}
+        for _c, rnd, t in self.completions:
+            lo, hi = out.get(rnd, (t, t))
+            out[rnd] = (min(lo, t), max(hi, t))
+        return out
+
+    # -- Chrome trace export -------------------------------------------------
+
+    def to_chrome_trace(self, time_scale: float = 1e6) -> dict:
+        """Trace-event JSON (chrome://tracing / Perfetto).
+
+        Links become threads grouped into processes by link kind; each
+        service interval is a complete ("X") slice. ``time_scale`` converts
+        simulated seconds to trace microseconds.
+        """
+        pids = {"up": 0, "down": 1, "l2s": 2, "s2l": 2}
+        pid_names = {0: "NIC TX (up-links)", 1: "NIC RX (down-links)", 2: "spine"}
+        tids: dict[str, int] = {}
+        events: list[dict] = []
+        for pid, name in pid_names.items():
+            events.append(
+                {"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+                 "args": {"name": name}}
+            )
+        for s in self.services:
+            kind = s.link.split(":")[0]
+            pid = pids.get(kind, 3)
+            if s.link not in tids:
+                tids[s.link] = len(tids)
+                events.append(
+                    {"ph": "M", "name": "thread_name", "pid": pid,
+                     "tid": tids[s.link], "args": {"name": s.link}}
+                )
+            events.append(
+                {
+                    "ph": "X",
+                    "name": f"chunk{s.chunk_id} f{s.flow_id} r{s.round_id}",
+                    "cat": kind,
+                    "pid": pid,
+                    "tid": tids[s.link],
+                    "ts": s.start * time_scale,
+                    "dur": max((s.end - s.start) * time_scale, 1e-3),
+                    "args": {
+                        "bytes": s.size,
+                        "src_domain": s.src_domain,
+                        "dst_domain": s.dst_domain,
+                        "round": s.round_id,
+                    },
+                }
+            )
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def dump_chrome_trace(self, path: str, time_scale: float = 1e6) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(time_scale=time_scale), f)

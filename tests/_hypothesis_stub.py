@@ -1,0 +1,109 @@
+"""Minimal stand-in for `hypothesis` when the real package is absent.
+
+The test suite's property tests use a small surface: ``@given`` with
+``floats`` / ``integers`` / ``lists`` / ``sampled_from`` strategies and
+``@settings(max_examples=..., deadline=...)``. This stub replays each
+property over deterministic pseudo-random samples drawn from the declared
+strategies — far weaker than real Hypothesis (no shrinking, no coverage
+guidance, capped example counts), but it keeps the properties executable
+in environments where dependencies cannot be installed. ``conftest.py``
+installs it into ``sys.modules`` only when the real package is missing;
+CI installs the real thing from requirements.txt.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+#: Hard cap on examples per property — the stub is a smoke check, not a
+#: fuzzer; keep the suite fast even when tests ask for hundreds.
+MAX_EXAMPLES_CAP = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(size)]
+
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            limit = min(
+                getattr(wrapper, "_stub_max_examples", MAX_EXAMPLES_CAP),
+                MAX_EXAMPLES_CAP,
+            )
+            # Deterministic per-test seed so failures reproduce.
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for example in range(limit):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on example {example}: {drawn!r}"
+                    ) from e
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution (real hypothesis does the same).
+        params = [
+            p
+            for p in inspect.signature(fn).parameters.values()
+            if p.name not in strategies
+        ]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def _build_modules():
+    st = types.ModuleType("hypothesis.strategies")
+    st.floats = floats
+    st.integers = integers
+    st.lists = lists
+    st.sampled_from = sampled_from
+    root = types.ModuleType("hypothesis")
+    root.given = given
+    root.settings = settings
+    root.strategies = st
+    root.__stub__ = True
+    return root, st

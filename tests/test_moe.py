@@ -97,8 +97,8 @@ def test_distributed_matches_local(mode):
         x = jax.random.normal(jax.random.PRNGKey(2), (4, 64, cfg.d_model))
         ref, _, ref_counts = moe_apply(params, cfg, x)
 
-        mesh = jax.make_mesh((2, 4), ("data", "expert"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro import compat
+        mesh = compat.make_mesh((2, 4), ("data", "expert"))
         ep = EpInfo(mesh, "expert", 4)
         with mesh:
             out, _, counts = jax.jit(

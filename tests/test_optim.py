@@ -92,10 +92,11 @@ def test_compressed_psum_multidevice():
         from jax.sharding import PartitionSpec as P
         from repro.optim import compressed_psum, ef_init
 
-        mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((4,), ("pod",))
         g = np.random.default_rng(0).normal(size=(4, 64)).astype(np.float32)
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")))
+        @partial(compat.shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")))
         def sync(g_loc, ef_loc):
             gr = {"w": g_loc[0]}
             efr = {"w": ef_loc[0]}

@@ -17,8 +17,8 @@ def test_gpipe_matches_sequential():
         def stage(w, x):
             return jnp.tanh(x @ w)
 
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((4,), ("stage",))
         got = jax.jit(lambda p, x: gpipe(stage, p, x, mesh))(params, xs)
 
         ref = xs
@@ -48,8 +48,8 @@ def test_gpipe_differentiable():
         def stage(w, x):
             return jnp.tanh(x @ w)
 
-        mesh = jax.make_mesh((2,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((2,), ("stage",))
         loss0, grads = jax.value_and_grad(
             lambda p: pipeline_loss(stage, p, xs, ys, mesh)
         )(params)

@@ -42,12 +42,13 @@ def test_all_modes_equal_dense_on_devices():
         from functools import partial
         from repro.core import rails_dispatch, build_rail_schedule, rails_all_to_all
 
-        mesh = jax.make_mesh((8,), ("ep",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((8,), ("ep",))
         E, T, D = 8, 12, 16
         x = np.random.default_rng(0).normal(size=(E*E, T, D)).astype(np.float32)
 
         def run(mode, **kw):
-            @partial(jax.shard_map, mesh=mesh, in_specs=P("ep"), out_specs=P("ep"))
+            @partial(compat.shard_map, mesh=mesh, in_specs=P("ep"), out_specs=P("ep"))
             def f(xl):
                 return rails_dispatch(xl, "ep", mode=mode, **kw)
             return np.asarray(jax.jit(f)(x))
@@ -61,7 +62,7 @@ def test_all_modes_equal_dense_on_devices():
         # counts-planned schedule also exact
         counts = np.random.default_rng(1).integers(1, 50, (E, E))
         sched = build_rail_schedule(E, 4, num_chunks=3, counts=counts)
-        @partial(jax.shard_map, mesh=mesh, in_specs=P("ep"), out_specs=P("ep"))
+        @partial(compat.shard_map, mesh=mesh, in_specs=P("ep"), out_specs=P("ep"))
         def f2(xl):
             return rails_all_to_all(xl, "ep", sched)
         assert np.array_equal(np.asarray(jax.jit(f2)(x)), ref)
@@ -82,8 +83,9 @@ def test_rails_hlo_has_parallel_streams():
         from functools import partial
         from repro.core import rails_dispatch
 
-        mesh = jax.make_mesh((8,), ("ep",), axis_types=(jax.sharding.AxisType.Auto,))
-        @partial(jax.shard_map, mesh=mesh, in_specs=P("ep"), out_specs=P("ep"))
+        from repro import compat
+        mesh = compat.make_mesh((8,), ("ep",))
+        @partial(compat.shard_map, mesh=mesh, in_specs=P("ep"), out_specs=P("ep"))
         def f(xl):
             return rails_dispatch(xl, "ep", mode="rails", num_rails=4, num_chunks=2)
         hlo = jax.jit(f).lower(

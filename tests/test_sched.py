@@ -1,0 +1,302 @@
+"""Online scheduling control plane (`repro.sched`) — anchors + behaviour.
+
+The three acceptance anchors:
+
+1. online LPT over one t=0 window == offline Algorithm 2 (loads identical);
+2. the streaming engine conserves bytes against ``build_jobs`` totals;
+3. degraded-rail feedback shifts load off the slow rail monotonically.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.lpt import lpt_schedule
+from repro.core.traffic import (
+    bursty_release_times,
+    drifting_gating_stream,
+    microbatch_stream,
+    uniform_workload,
+)
+from repro.netsim import (
+    build_jobs,
+    build_streaming_jobs,
+    run_collective,
+    run_streaming_collective,
+)
+from repro.runtime.straggler import degraded_rail_schedule
+from repro.sched import (
+    RailHealthEstimator,
+    RoutingReplayState,
+    TraceRecorder,
+    online_greedy_schedule,
+    run_pipeline,
+    speed_precharge,
+    windowed_lpt_schedule,
+)
+from repro.sched.online import AdaptiveChunker
+
+M, N = 4, 4
+B = 8 * 2**20
+CHUNK = 1 * 2**20
+
+
+# -- anchor 1: offline parity ------------------------------------------------
+
+
+def test_windowed_lpt_single_window_matches_offline():
+    rng = np.random.default_rng(0)
+    w = rng.exponential(1.0, 200)
+    src = rng.integers(0, 8, size=200)
+    off = lpt_schedule(w, N, source_ids=src)
+    on = windowed_lpt_schedule(w, N, window=None, source_ids=src)
+    np.testing.assert_array_equal(on.assignment, off.assignment)
+    np.testing.assert_allclose(on.loads, off.loads)
+
+
+def test_streaming_collective_reproduces_offline_at_t0():
+    """run_streaming_collective == run_collective when everything releases
+    at t=0 with feedback disabled (CCT/BusBw within 1%; in fact exact)."""
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    off = run_collective(tm, "rails", chunk_bytes=CHUNK)
+    for policy in ("rails", "rails-online"):
+        st = run_streaming_collective(tm, policy, chunk_bytes=CHUNK)
+        assert abs(st.metrics.makespan / off.makespan - 1) < 0.01, policy
+        assert abs(st.metrics.bus_bw / off.bus_bw - 1) < 0.01, policy
+        assert abs(st.metrics.cct["p99"] / off.cct["p99"] - 1) < 0.01, policy
+
+
+def test_streaming_reactive_policies_match_offline_at_t0():
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    for policy in ("minrtt", "reps", "ecmp"):
+        off = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3)
+        st = run_streaming_collective(tm, policy, chunk_bytes=CHUNK, seed=3)
+        assert st.metrics.makespan == pytest.approx(off.makespan), policy
+
+
+def test_greedy_is_graham_bounded():
+    """Greedy list scheduling stays within 2 - 1/N of the mean bound."""
+    rng = np.random.default_rng(1)
+    w = rng.exponential(1.0, 300)
+    res = online_greedy_schedule(w, N)
+    opt_lb = max(w.sum() / N, w.max())
+    assert res.loads.max() <= (2 - 1 / N) * opt_lb + 1e-9
+    np.testing.assert_allclose(res.loads.sum(), w.sum())
+
+
+def test_windowed_interpolates():
+    """Wider windows can only help (monotone non-increasing final MSE is
+    not guaranteed chunk-by-chunk, but window=all must beat window=1 on a
+    skewed instance)."""
+    rng = np.random.default_rng(2)
+    w = np.sort(rng.lognormal(0.0, 1.5, 64))  # adversarial: ascending sizes
+    greedy = windowed_lpt_schedule(w, N, window=1)
+    full = windowed_lpt_schedule(w, N, window=None)
+    assert full.loads.max() <= greedy.loads.max() + 1e-9
+
+
+# -- anchor 2: byte conservation ---------------------------------------------
+
+
+def test_streaming_engine_conserves_bytes():
+    tms = microbatch_stream(M, N, 4, bytes_per_pair=B / 4, seed=5)
+    releases = bursty_release_times(4, 5e-4, burstiness=1.5, seed=6)
+    total = sum(float(sum(j.size for js in build_jobs(tm, CHUNK).values() for j in js))
+                for tm in tms)
+    res = run_streaming_collective(
+        list(zip(releases, tms)), "rails-online", chunk_bytes=CHUNK
+    )
+    np.testing.assert_allclose(res.metrics.nic_tx.sum(), total, rtol=1e-9)
+    np.testing.assert_allclose(res.metrics.nic_rx.sum(), total, rtol=1e-9)
+    # per-round accounting is complete and ordered
+    assert sorted(res.round_cct) == list(range(4))
+    assert all(t <= res.metrics.makespan + 1e-12 for t in res.round_cct.values())
+
+
+def test_build_streaming_jobs_ids_and_releases():
+    tms = microbatch_stream(2, 2, 3, bytes_per_pair=CHUNK, seed=7)
+    jobs = build_streaming_jobs([(i * 1e-3, tm) for i, tm in enumerate(tms)], CHUNK)
+    flat = [j for js in jobs.values() for j in js]
+    chunk_ids = [j.chunk_id for j in flat]
+    assert len(set(chunk_ids)) == len(chunk_ids)  # globally unique
+    for j in flat:
+        assert j.arrival_time == pytest.approx(j.round_id * 1e-3)
+
+
+def test_build_streaming_jobs_even_rounds_unique_ids():
+    """Regression: even-sized rounds once produced colliding chunk ids
+    (per-chunk offset increment raced the in-round offset)."""
+    tm = uniform_workload(2, 2, bytes_per_pair=CHUNK)  # 8 chunks per round
+    jobs = build_streaming_jobs([(0.0, tm), (0.0, tm), (1e-3, tm)], CHUNK)
+    flat = [j for js in jobs.values() for j in js]
+    ids = [j.chunk_id for j in flat]
+    assert len(set(ids)) == len(ids) == 24
+    assert sorted(ids) == list(range(24))
+    # coinciding releases still simulate correctly end-to-end
+    res = run_streaming_collective([(0.0, tm), (0.0, tm)], "rails-online",
+                                   chunk_bytes=CHUNK)
+    np.testing.assert_allclose(res.metrics.nic_tx.sum(), 2 * tm.total_bytes())
+
+
+# -- anchor 3: feedback monotonicity -----------------------------------------
+
+
+def test_feedback_shifts_load_off_slow_rail_monotonically():
+    """As the estimated speed of one rail decreases, the bytes LPT places
+    on it must not increase."""
+    rng = np.random.default_rng(3)
+    w = rng.exponential(1.0, 400)
+    prev = None
+    for speed in (1.0, 0.8, 0.6, 0.4, 0.2):
+        speeds = np.array([1.0, 1.0, 1.0, speed])
+        pre = speed_precharge(float(w.sum()), speeds)
+        res = lpt_schedule(w, N, initial_loads=pre)
+        slow_bytes = float(res.loads[3] - pre[3])
+        if prev is not None:
+            assert slow_bytes <= prev + 1e-9, speed
+        prev = slow_bytes
+
+
+def test_estimator_learns_degraded_rate_and_cuts_cct():
+    tms = microbatch_stream(M, N, 5, bytes_per_pair=B / 5, seed=8)
+    rounds = [(i * 1e-4, tm) for i, tm in enumerate(tms)]
+    speeds = [1.0, 1.0, 1.0, 0.4]
+    blind = run_streaming_collective(
+        rounds, "rails-online", chunk_bytes=CHUNK / 2, rail_speeds=speeds
+    )
+    fb = run_streaming_collective(
+        rounds, "rails-online", chunk_bytes=CHUNK / 2, rail_speeds=speeds,
+        feedback=True,
+    )
+    assert fb.health is not None
+    np.testing.assert_allclose(fb.health.speeds(), speeds, rtol=0.05)
+    assert fb.metrics.makespan < blind.metrics.makespan
+    # feedback moves bytes off the slow rail
+    assert fb.metrics.nic_tx[:, 3].sum() < blind.metrics.nic_tx[:, 3].sum()
+
+
+def test_speed_precharge_matches_degraded_rail_schedule():
+    """runtime.straggler and sched.feedback share one pre-charge formula."""
+    rng = np.random.default_rng(4)
+    w = rng.exponential(1.0, 100)
+    speeds = np.array([1.0, 0.5, 1.0, 0.75])
+    res, real_loads, _finish, _ideal = degraded_rail_schedule(w, N, speeds)
+    pre = speed_precharge(float(w.sum()), speeds)
+    res2 = lpt_schedule(w, N, initial_loads=pre)
+    np.testing.assert_array_equal(res.assignment, res2.assignment)
+    np.testing.assert_allclose(real_loads, res2.loads - pre)
+
+
+# -- replay, chunking, telemetry, pipeline ------------------------------------
+
+
+def test_replay_state_forecasts_and_blends():
+    rs = RoutingReplayState(2, 2, alpha=0.5)
+    assert rs.expected_total(0) == 0.0
+    rs.update_from_loads([100.0, 50.0])
+    assert rs.expected_total(0) == 100.0
+    rs.update_from_loads([200.0, 50.0])
+    assert rs.expected_total(0) == pytest.approx(150.0)  # EWMA blend
+    counts = np.array([[0.0, 10.0], [4.0, 0.0]])
+    rs2 = RoutingReplayState(2, 2)
+    rs2.update_from_counts(counts, bytes_per_token=2.0)
+    assert rs2.expected_total(0) == pytest.approx(20.0)
+    assert rs2.expected_total(1) == pytest.approx(8.0)
+    # rail profile: uniform before any rail observation, normalized after
+    np.testing.assert_allclose(rs2.expected_rail_profile(0), [0.5, 0.5])
+    rs.update_from_loads([100.0, 50.0], rail_loads=[[30.0, 10.0], [25.0, 25.0]])
+    np.testing.assert_allclose(rs.expected_rail_profile(0), [0.75, 0.25])
+
+
+def test_adaptive_chunker_targets_multiplicity_and_reacts():
+    ch = AdaptiveChunker(chunk_bytes=4 * 2**20, target_multiplicity=8)
+    chunk = ch.suggest(expected_total=64 * 2**20, num_rails=4)
+    assert chunk == pytest.approx(2 * 2**20)
+    before = ch.chunk_bytes
+    ch.adapt(observed_norm_mse=1.0)  # badly imbalanced -> split finer
+    assert ch.chunk_bytes == pytest.approx(before / 2)
+    # the lowered cap must actually bite the next suggestion
+    assert ch.suggest(expected_total=64 * 2**20, num_rails=4) == pytest.approx(
+        2 * 2**20
+    )
+    ch.adapt(observed_norm_mse=1.0)
+    assert ch.suggest(expected_total=64 * 2**20, num_rails=4) == pytest.approx(
+        2**20
+    )
+    ch.adapt(observed_norm_mse=0.0)  # perfectly balanced -> coarsen
+    assert ch.chunk_bytes > 2**20
+
+
+def test_build_streaming_jobs_empty_round_keeps_flow_ids_unique():
+    """Regression: an all-zero round must not reset the flow-id space."""
+    tm = uniform_workload(2, 2, bytes_per_pair=CHUNK)
+    empty = uniform_workload(2, 2, bytes_per_pair=CHUNK)
+    empty = type(tm)(d1=np.zeros_like(empty.d1), d2=np.zeros_like(empty.d2),
+                     name="empty")
+    jobs = build_streaming_jobs(
+        [(0.0, tm), (1e-3, empty), (2e-3, tm)], CHUNK
+    )
+    flows_by_round: dict[int, set] = {}
+    for js in jobs.values():
+        for j in js:
+            flows_by_round.setdefault(j.round_id, set()).add(j.flow_id)
+    assert not (flows_by_round[0] & flows_by_round[2])
+
+
+def test_trace_recorder_conserves_and_exports(tmp_path):
+    tm = uniform_workload(M, N, bytes_per_pair=B / 4)
+    rec = TraceRecorder()
+    res = run_streaming_collective(tm, "rails-online", chunk_bytes=CHUNK, recorder=rec)
+    n_chunks = len(res.sim.jobs)
+    assert len(rec.completions) == n_chunks
+    # every chunk crosses exactly two NIC links (up + down) on rail paths
+    assert len(rec.services) == 2 * n_chunks
+    edges, util = rec.rail_utilization(N, num_bins=8)
+    assert util.shape == (N, 8) and float(util.max()) <= 1.0 + 1e-9
+    _edges, hist = rec.rail_completion_histogram(N)
+    assert hist.sum() == n_chunks
+    path = tmp_path / "trace.json"
+    rec.dump_chrome_trace(str(path))
+    trace = json.loads(path.read_text())
+    slices = [e for e in trace["traceEvents"] if e.get("ph") == "X"]
+    assert len(slices) == 2 * n_chunks
+
+
+def test_pipeline_overlap_beats_sequential():
+    tms = microbatch_stream(M, N, 3, bytes_per_pair=B / 3, seed=9)
+    res = run_pipeline(tms, gap_fraction=0.5, chunk_bytes=CHUNK,
+                       compare_sequential=True)
+    assert res.overlap_speedup is not None and res.overlap_speedup > 1.0
+    assert len(res.releases) == 3
+    assert all(res.round_latency[r] > 0 for r in range(3))
+
+
+def test_bursty_release_times_shape():
+    t = bursty_release_times(10, 1e-3, burstiness=0.0, seed=0)
+    np.testing.assert_allclose(np.diff(t), 1e-3)
+    t2 = bursty_release_times(10, 1e-3, burstiness=2.0, seed=1)
+    assert t2[0] == 0.0 and np.all(np.diff(t2) >= 0)
+
+
+def test_drifting_gating_stream_adjacent_similarity():
+    tms = drifting_gating_stream(M, N, 5, tokens_per_round=1000.0, drift=0.05, seed=2)
+    assert len(tms) == 5
+    for tm in tms:
+        tm.validate()
+    # small drift: adjacent rounds correlate more than distant ones
+    def corr(a, b):
+        return float(np.corrcoef(a.d2.ravel(), b.d2.ravel())[0, 1])
+    assert corr(tms[0], tms[1]) >= corr(tms[0], tms[4]) - 0.2
+
+
+def test_health_estimator_ignores_spine_links():
+    est = RailHealthEstimator(2, nominal_rate=100.0)
+
+    class _J:
+        size = 50.0
+
+    est.record_service("l2s:0:1", 0.0, 10.0, _J())
+    np.testing.assert_allclose(est.speeds(), [1.0, 1.0])
+    est.record_service("up:0:1", 0.0, 1.0, _J())  # rate 50 = half speed
+    np.testing.assert_allclose(est.speeds(), [1.0, 0.5])

@@ -26,8 +26,8 @@ def test_param_specs_valid_on_mesh(arch):
         from repro.models import init_cache
 
         cfg = get_config("{arch}")
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro import compat
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         ctx = build_mesh_context(mesh, cfg)
         params_abs, opt_abs = abstract_train_state(cfg)
         specs = param_pspecs(cfg, ctx, params_abs)
@@ -59,8 +59,8 @@ def test_mesh_view_factors_experts():
         from repro.configs import get_config
         from repro.parallel.mesh_view import build_mesh_context
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro import compat
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         ctx = build_mesh_context(mesh, get_config("mixtral-8x7b"))
         assert ctx.ep == 4 and ctx.tp == 1, (ctx.ep, ctx.tp)
         assert ctx.expert_axis == "expert"
