@@ -18,6 +18,19 @@ from repro.core.traffic import (
     uniform_workload,
 )
 
+#: Fabric-scaling grid for ``bench_scale``: (domains, rails, target chunks)
+#: — 64/256/512-node fabrics, chunk counts up to the ROADMAP's 10⁵ scale.
+SCALE_GRID = ((8, 8, 20_000), (32, 8, 50_000), (64, 8, 100_000))
+SCALE_GRID_QUICK = ((8, 8, 5_000),)
+
+
+def scale_fabric(m: int, n: int, target_chunks: int, seed: int = 7):
+    """A hot-expert (sparse top-k) workload on an ``m``×``n`` fabric with a
+    chunk size calibrated to land ~``target_chunks`` atomic chunks."""
+    tm = sparse_topk_workload(m, n, sparsity=0.5, bytes_per_pair=BYTES, seed=seed)
+    chunk_bytes = tm.total_bytes() / target_chunks
+    return tm, chunk_bytes
+
 M, N = 8, 8
 BYTES = 32 * 2**20
 CHUNK = 2 * 2**20
@@ -70,8 +83,10 @@ def micro_stream(num_microbatches: int = 6, seed: int = 1):
     )
 
 
-def bursty_releases(num_rounds: int, mean_gap: float, seed: int = 2):
-    return bursty_release_times(num_rounds, mean_gap, burstiness=1.5, seed=seed)
+def bursty_releases(
+    num_rounds: int, mean_gap: float, seed: int = 2, burstiness: float = 1.5
+):
+    return bursty_release_times(num_rounds, mean_gap, burstiness=burstiness, seed=seed)
 
 
 def drift_stream(num_rounds: int = 6, seed: int = 3):

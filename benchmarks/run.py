@@ -5,27 +5,41 @@ time of one simulated collective (or scheduler call); ``derived`` is the
 paper-relevant metric for that figure (normalized BusBw, CCT reduction,
 MSE, speedup, ...). The ``bench_online_*`` entries exercise the streaming
 control plane (`repro.sched`): bursty micro-batch arrivals, degraded-rail
-feedback, and routing replay under gating drift.
+feedback, routing replay under gating drift, and the windowed re-planning
+sweep. ``bench_scale`` drives 64→512-node fabrics at up to 10⁵ chunks —
+the perf trajectory for the "fast as the hardware allows" north star.
+
+``--json PATH`` additionally writes every row (plus environment metadata)
+as machine-readable JSON — CI uploads ``BENCH_netsim.json`` per PR so the
+perf trajectory accumulates across the repo's history.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run --only fig7
     PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke scale
+    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_netsim.json
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
+import json
+import platform
+import subprocess
 import time
 
 import numpy as np
 
-from repro.core.lpt import lpt_schedule
+from repro.core.lpt import lpt_schedule, lpt_schedule_reference
 from repro.core.lp import closed_form_opt, solve_minmax_lp
 from repro.core.theorems import theorem2_optimal_time
-from repro.netsim import run_policy_suite, run_streaming_collective
+from repro.netsim import run_collective, run_policy_suite, run_streaming_collective
 from repro.sched import run_pipeline
 
 from . import paper_workloads as W
+
+#: Rows accumulated for --json output: (name, us_per_call, derived).
+_ROWS: list[dict] = []
 
 
 def _timed(fn):
@@ -36,6 +50,32 @@ def _timed(fn):
 
 def _emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
+
+
+def _write_json(path: str, quick: bool, only: str | None) -> None:
+    try:
+        git_rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        git_rev = None
+    doc = {
+        "schema": 1,
+        "generated_utc": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "quick": quick,
+        "only": only,
+        "git_rev": git_rev,
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+        "machine": platform.machine(),
+        "rows": _ROWS,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {len(_ROWS)} rows to {path}")
 
 
 def bench_fig7_9_uniform() -> None:
@@ -119,18 +159,42 @@ def bench_fig12_13_mixtral() -> None:
             )
 
 
+def _time_sched(fn, w, n, reps):
+    fn(w, n)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = fn(w, n)
+    return res, (time.perf_counter() - t0) / reps * 1e6
+
+
 def bench_lpt_scheduler() -> None:
-    """Algorithm-2 microbenchmark: O(F log F + F N) scheduler cost."""
+    """Algorithm-2 microbenchmark: fast path vs the naive O(F·N) loop.
+
+    ``lpt_sched_F*_N*`` rows use equal-size chunks (the common case —
+    ``split_message`` cuts messages into equal atomic chunks): the fast
+    path is closed-form round-robin there. ``lpt_sched_mixed_*`` rows use
+    heterogeneous (exponential) weights, exercising the heap path.
+    """
     rng = np.random.default_rng(0)
-    for f in (100, 1000) if W.QUICK else (100, 1000, 10000):
-        w = rng.exponential(1.0, f)
-        lpt_schedule(w, 8)  # warm
-        t0 = time.perf_counter()
-        reps = 10
-        for _ in range(reps):
-            res = lpt_schedule(w, 8)
-        us = (time.perf_counter() - t0) / reps * 1e6
-        _emit(f"lpt_sched_F{f}_N8", us, f"mse={res.mse:.3e}")
+    cases = ((1000, 8), (10_000, 64)) if W.QUICK else (
+        (1000, 8), (10_000, 64), (100_000, 512)
+    )
+    for f, n in cases:
+        reps = max(1, 20_000 // f)
+        w_eq = np.full(f, 4.0 * 2**20)
+        res, us = _time_sched(lpt_schedule, w_eq, n, reps)
+        _, us_ref = _time_sched(lpt_schedule_reference, w_eq, n, reps)
+        _emit(
+            f"lpt_sched_F{f}_N{n}", us,
+            f"speedup={us_ref / us:.1f}x_vs_reference_mse={res.mse:.3e}",
+        )
+        w_mix = rng.exponential(1.0, f)
+        res, us = _time_sched(lpt_schedule, w_mix, n, reps)
+        _, us_ref = _time_sched(lpt_schedule_reference, w_mix, n, reps)
+        _emit(
+            f"lpt_sched_mixed_F{f}_N{n}", us,
+            f"speedup={us_ref / us:.1f}x_vs_reference_mse={res.mse:.3e}",
+        )
 
 
 def bench_lp_solver() -> None:
@@ -238,6 +302,63 @@ def bench_online_replay() -> None:
     )
 
 
+def bench_scale() -> None:
+    """ROADMAP fabric scaling: 64→512 nodes, chunk counts up to 10⁵.
+
+    Times one RailS one-shot collective per fabric size, with and without
+    flowlet coalescing, reporting simulated-chunk throughput — the raw
+    "fast as the hardware allows" trajectory metric.
+    """
+    grid = W.SCALE_GRID_QUICK if W.QUICK else W.SCALE_GRID
+    for m, n, target_chunks in grid:
+        tm, chunk_bytes = W.scale_fabric(m, n, target_chunks)
+        nodes = m * n
+        res, us = _timed(
+            lambda: run_collective(tm, "rails", chunk_bytes=chunk_bytes)
+        )
+        chunks = int(round(tm.total_bytes() / chunk_bytes))
+        _emit(
+            f"scale_nodes{nodes}_chunks{chunks}", us,
+            f"{chunks / (us / 1e6) / 1e3:.0f}kchunks_per_s_opt_ratio={res.opt_ratio:.2f}",
+        )
+        res_c, us_c = _timed(
+            lambda: run_collective(tm, "rails", chunk_bytes=chunk_bytes, coalesce=True)
+        )
+        _emit(
+            f"scale_nodes{nodes}_chunks{chunks}_coalesced", us_c,
+            f"{us / us_c:.1f}x_vs_exact_makespan_drift="
+            f"{abs(res_c.makespan / res.makespan - 1) * 100:.1f}pct",
+        )
+
+
+def bench_online_window_sweep() -> None:
+    """ROADMAP windowed re-planning sweep: CCT vs decision latency as the
+    re-planning window goes 1 (greedy on arrival) → ∞ (whole-batch LPT),
+    across burstiness levels."""
+    rounds = 3 if W.QUICK else 6
+    tms = W.micro_stream(num_microbatches=rounds, seed=6)
+    mean_gap = 0.5 * theorem2_optimal_time(tms[0].d2, W.N, 50e9)
+    bursts = (1.5,) if W.QUICK else (0.5, 1.5, 3.0)
+    windows = (1, None) if W.QUICK else (1, 8, 64, None)
+    for burst in bursts:
+        releases = W.bursty_releases(rounds, mean_gap, seed=7, burstiness=burst)
+        stream = list(zip(releases, tms))
+        greedy_makespan = None
+        for window in windows:
+            res, us = _timed(
+                lambda window=window: run_streaming_collective(
+                    stream, "rails-online", chunk_bytes=W.CHUNK, window=window
+                )
+            )
+            if greedy_makespan is None:
+                greedy_makespan = res.metrics.makespan
+            label = "inf" if window is None else str(window)
+            _emit(
+                f"online_window_burst{burst:g}_w{label}", us,
+                f"{res.metrics.makespan / greedy_makespan:.4f}x_greedy_cct",
+            )
+
+
 BENCHES = {
     "fig7_9_uniform": bench_fig7_9_uniform,
     "fig7_9_sparse": bench_fig7_9_sparse,
@@ -247,9 +368,11 @@ BENCHES = {
     "lpt": bench_lpt_scheduler,
     "lp": bench_lp_solver,
     "thm4": bench_theorem_bounds,
+    "scale": bench_scale,
     "online_microbatch": bench_online_microbatch,
     "online_degraded": bench_online_degraded,
     "online_replay": bench_online_replay,
+    "online_window_sweep": bench_online_window_sweep,
 }
 
 
@@ -261,6 +384,13 @@ def main() -> None:
         action="store_true",
         help="smaller M x N fabric and fewer repeats (CI smoke check)",
     )
+    ap.add_argument(
+        "--json",
+        type=str,
+        default=None,
+        metavar="PATH",
+        help="also write rows + environment metadata as JSON (perf trajectory)",
+    )
     args = ap.parse_args()
     W.configure(quick=args.quick)
     print("name,us_per_call,derived")
@@ -268,6 +398,8 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         fn()
+    if args.json:
+        _write_json(args.json, quick=args.quick, only=args.only)
 
 
 if __name__ == "__main__":

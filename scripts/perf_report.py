@@ -28,15 +28,25 @@ def main(outdir: str) -> None:
         print(f"\n#### {cell}\n")
         print("| variant | compute s | memory s | collective s | dominant | peak GiB | Δ dominant vs base |")
         print("|---|---|---|---|---|---|---|")
-        base_r = base["roofline"]
+        # Partial result dirs (killed sweeps, older schema) may lack the
+        # roofline block, the dominant key, or carry a zero baseline —
+        # report "n/a" instead of KeyError / ZeroDivisionError.
+        base_r = base.get("roofline", {})
+        dominant = base_r.get("dominant")
+        base_val = base_r.get(dominant) if dominant else None
         for tag, d in sorted(variants.items(), key=lambda kv: (kv[0] != "base", kv[0])):
-            r = d["roofline"]
-            delta = (r[base_r["dominant"]] / base_r[base_r["dominant"]] - 1) * 100
-            print(
-                f"| {tag} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | {r['collective_s']:.3f} "
-                f"| {r['dominant'].replace('_s','')} | {d['memory']['peak_estimate_gib']} | "
-                f"{delta:+.1f}% |"
+            r = d.get("roofline", {})
+            if base_val and r.get(dominant) is not None:
+                delta = f"{(r[dominant] / base_val - 1) * 100:+.1f}%"
+            else:
+                delta = "n/a"
+            cols = " | ".join(
+                f"{r[k]:.3f}" if isinstance(r.get(k), (int, float)) else "n/a"
+                for k in ("compute_s", "memory_s", "collective_s")
             )
+            dom = r.get("dominant", "n/a").replace("_s", "")
+            peak = d.get("memory", {}).get("peak_estimate_gib", "n/a")
+            print(f"| {tag} | {cols} | {dom} | {peak} | {delta} |")
 
 
 if __name__ == "__main__":

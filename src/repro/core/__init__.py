@@ -11,9 +11,11 @@ Layers:
 
 from .lpt import (
     LptResult,
+    LptState,
     load_mse,
     lpt_schedule,
     lpt_schedule_jax,
+    lpt_schedule_reference,
     normalized_load_mse,
     random_schedule,
     round_robin_schedule,

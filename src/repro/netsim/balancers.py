@@ -34,9 +34,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.lpt import lpt_schedule
+from ..core.lpt import LptState, lpt_schedule
 from ..sched.feedback import speed_precharge
-from ..sched.online import windowed_lpt_schedule
 from .events import ChunkJob, Engine
 from .topology import RailTopology
 
@@ -77,20 +76,24 @@ class Policy:
         Senders are visited round-robin (an all-to-all burst is symmetric);
         reactive policies decide chunk-by-chunk via :meth:`choose_path`,
         planners override this to schedule the whole batch jointly.
+        Cursor-based — per-sender queues are walked by index, so a batch of
+        F chunks costs O(F), not the O(F²/senders) of repeated ``pop(0)``.
         """
-        queues = {k: list(v) for k, v in batch_by_sender.items() if v}
-        order = sorted(queues)
+        queues = [batch_by_sender[k] for k in sorted(batch_by_sender) if batch_by_sender[k]]
         out: list[ChunkJob] = []
+        commit = eng._commit
+        choose = self.choose_path
+        pos = 0
         while queues:
-            for key in list(order):
-                q = queues.get(key)
-                if not q:
-                    queues.pop(key, None)
-                    continue
-                job = q.pop(0)
-                eng._commit(job, self.choose_path(eng, job))
+            nxt = []
+            for q in queues:
+                job = q[pos]
+                commit(job, choose(eng, job))
                 out.append(job)
-            order = [k for k in order if k in queues]
+                if pos + 1 < len(q):
+                    nxt.append(q)
+            queues = nxt
+            pos += 1
         return out
 
 
@@ -195,18 +198,22 @@ class RepsPolicy(Policy):
         self.congest_factor = congest_factor
 
     def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
+        n = self.topo.n
+        num_spines = self.topo.num_spines
+        integers = self.rng.integers
+        spine_path = self.topo.spine_path
+        path_delay = eng.path_delay
+        src_domain, dst_domain, dst_gpu = job.src_domain, job.dst_domain, job.dst_gpu
         ests, paths = [], []
-        for rail in range(self.topo.n):
-            spine = int(self.rng.integers(self.topo.num_spines))
-            path = self.topo.spine_path(
-                job.src_domain, job.dst_domain, rail, job.dst_gpu, spine
-            )
+        for rail in range(n):
+            spine = int(integers(num_spines))
+            path = spine_path(src_domain, dst_domain, rail, dst_gpu, spine)
             paths.append(path)
-            ests.append(eng.path_delay(path, job.src_domain))
-        arr = np.asarray(ests)
-        mean = arr.mean() if arr.size else 0.0
-        good = [r for r in range(self.topo.n) if arr[r] <= self.congest_factor * max(mean, 1e-12)]
-        pool = good if good else list(range(self.topo.n))
+            ests.append(path_delay(path, src_domain))
+        mean = sum(ests) / n if n else 0.0
+        threshold = self.congest_factor * max(mean, 1e-12)
+        good = [r for r, est in enumerate(ests) if est <= threshold]
+        pool = good if good else list(range(n))
         return paths[int(self.rng.choice(pool))]
 
 
@@ -274,21 +281,33 @@ class OnlineRailSPolicy(Policy):
         self.window = window
         self.health = health
         self.replay = replay
+        # Persistent per-domain LPT state: realized bytes per rail plus the
+        # incremental assigner — each arrival window extends the plan in
+        # O(K log N) without re-sorting the committed backlog.
+        self._state: dict[int, LptState] = {}
         self.loads: dict[int, np.ndarray] = {}  # realized bytes per domain rail
         self._assignment: dict[int, int] = {}  # chunk_id -> rail
 
-    def _initial_loads(self, domain: int, batch_total: float) -> np.ndarray:
-        real = self.loads.setdefault(domain, np.zeros(self.topo.n))
+    def _domain_state(self, domain: int) -> LptState:
+        state = self._state.get(domain)
+        if state is None:
+            state = self._state[domain] = LptState(self.topo.n)
+            self.loads[domain] = state.loads
+        return state
+
+    def _precharge(self, domain: int, batch_total: float) -> np.ndarray | None:
+        """Phantom LoadState bias for degraded rails (None when healthy)."""
         if self.health is None:
-            return real.copy()
-        known = real.sum() + batch_total
+            return None
+        real = self._domain_state(domain).loads
+        known = float(real.sum()) + batch_total
         forecast = (
             self.replay.expected_total(domain) if self.replay is not None else 0.0
         )
         # Pre-charge against the larger of what we can see and what the
         # replay predicts for the full iteration — an undersized total
         # under-penalizes the slow rail for the chunks yet to come.
-        return real + speed_precharge(max(known, forecast), self.health.speeds())
+        return speed_precharge(max(known, forecast), self.health.speeds())
 
     def assign_batch(
         self,
@@ -303,17 +322,19 @@ class OnlineRailSPolicy(Policy):
         for domain, jobs in by_domain.items():
             weights = np.array([j.size for j in jobs])
             src_ids = np.array([j.src_gpu for j in jobs])
-            initial = self._initial_loads(domain, float(weights.sum()))
-            res = windowed_lpt_schedule(
-                weights,
-                self.topo.n,
-                window=self.window,
-                source_ids=src_ids,
-                initial_loads=initial,
-            )
-            for j, rail in zip(jobs, res.assignment):
+            state = self._domain_state(domain)
+            extra = self._precharge(domain, float(weights.sum()))
+            f = weights.size
+            step = f if self.window is None else max(self.window, 1)
+            assignment = np.empty(f, dtype=np.int64)
+            for lo in range(0, f, step):
+                hi = min(lo + step, f)
+                res = state.assign(
+                    weights[lo:hi], source_ids=src_ids[lo:hi], extra_loads=extra
+                )
+                assignment[lo:hi] = res.assignment
+            for j, rail in zip(jobs, assignment):
                 self._assignment[j.chunk_id] = int(rail)
-                self.loads[domain][int(rail)] += j.size
         # Fabric-entry order stays the generic round-robin over senders.
         return super().assign_batch(eng, batch_by_sender, now=now)
 

@@ -20,13 +20,36 @@ collective), are serviced in arrival order, and hop to the next link after
 ``hop_latency``. Store-and-forward at chunk granularity — pipelining across
 chunks of the same flow arises naturally.
 
+**Event-loop structure (hot path).** Earlier revisions kept one heap per
+link plus a global completion heap — a heap tuple per chunk per hop.
+Arrivals, however, are generated in non-decreasing time order (releases
+are injected through a single sorted stream, and hop arrivals inherit the
+completion order plus a constant ``hop_latency``), so per-link FIFO queues
+are now plain deques with O(1) append/popleft, and only *service
+completions* — at most one in flight per link — live in a heap. Event
+payloads carry a global sequence number so simultaneous events keep the
+deterministic round-robin order of the assignment phase.
+
 **Streaming mode** (:meth:`Engine.run_streaming`) interleaves the two
 phases: chunks are only revealed to the policy when they are *released*
 (micro-batch boundaries, bursty arrivals), so online policies must decide
 with partial information while earlier chunks are still in flight. The
 engine notifies registered observers of every link-service interval and
 chunk completion — the feed that `repro.sched.feedback` (EWMA rail health)
-and `repro.sched.telemetry` (timelines, Chrome traces) consume.
+and `repro.sched.telemetry` (timelines, Chrome traces) consume. Observer
+fan-out is pre-resolved into bound-method lists, so a run with no
+observers pays a single falsy check per event.
+
+**Flowlet coalescing** (``Engine(coalesce_flowlets=True)``) merges the
+chunks of one release batch that share (sender GPU, path) — i.e. the same
+(sender, rail, destination) lane — into one service event, cutting event
+count by up to the per-lane chunk multiplicity. Member completion times
+are reconstructed from the aggregate's final-hop service interval
+(chunks drain sequentially at the last link's rate), which is exact for
+an uncontended lane and a close approximation under contention; observers
+see the merged flowlet, not its members. With coalescing off (the
+default) the simulation is event-for-event identical to the reference
+semantics — `run_streaming` bit-matches `run` for t=0 releases.
 """
 
 from __future__ import annotations
@@ -35,6 +58,7 @@ import dataclasses
 import heapq
 import itertools
 import math
+from collections import deque
 
 import numpy as np
 
@@ -42,15 +66,18 @@ from .topology import RailTopology
 
 __all__ = ["ChunkJob", "SimResult", "Engine"]
 
+_INF = float("inf")
 
-@dataclasses.dataclass
+
+@dataclasses.dataclass(slots=True)
 class ChunkJob:
     """One atomic chunk to be transferred.
 
     ``arrival_time`` is the release time: the chunk does not exist for
     either the policy or the fabric before it (0.0 reproduces the one-shot
     collective). ``round_id`` tags the micro-batch / iteration the chunk
-    belongs to in streaming runs.
+    belongs to in streaming runs. Slotted — the engine allocates one per
+    chunk, and 10⁵–10⁶-chunk sweeps are memory- and attribute-access-bound.
     """
 
     chunk_id: int
@@ -68,6 +95,37 @@ class ChunkJob:
     finish_time: float = 0.0
 
 
+class _Flowlet:
+    """Aggregated service unit: same-(sender, path) chunks of one batch.
+
+    Duck-types the ``ChunkJob`` surface the engine and observers touch;
+    identity fields come from the first member. Member times are
+    reconstructed after the run (see :meth:`Engine._expand_flowlets`).
+    """
+
+    __slots__ = (
+        "members", "path", "size", "arrival_time", "start_time", "finish_time",
+        "chunk_id", "flow_id", "src_domain", "src_gpu", "dst_domain",
+        "dst_gpu", "round_id",
+    )
+
+    def __init__(self, members: list[ChunkJob]):
+        head = members[0]
+        self.members = members
+        self.path = head.path
+        self.size = float(sum(j.size for j in members))
+        self.arrival_time = head.arrival_time
+        self.start_time = 0.0
+        self.finish_time = 0.0
+        self.chunk_id = head.chunk_id
+        self.flow_id = head.flow_id
+        self.src_domain = head.src_domain
+        self.src_gpu = head.src_gpu
+        self.dst_domain = head.dst_domain
+        self.dst_gpu = head.dst_gpu
+        self.round_id = head.round_id
+
+
 @dataclasses.dataclass
 class SimResult:
     jobs: list[ChunkJob]
@@ -76,6 +134,10 @@ class SimResult:
     flow_cct: dict[int, float]  # per parent-flow completion time
 
     def cct_percentiles(self, qs=(50.0, 80.0, 95.0, 99.0)) -> dict[str, float]:
+        if not self.flow_cct:
+            # Empty collectives (all-zero traffic rows) still report a
+            # complete key set so downstream tables never KeyError.
+            return {"mean": 0.0, **{f"p{int(q)}": 0.0 for q in qs}, "max": 0.0}
         vals = np.array(sorted(self.flow_cct.values()))
         out = {"mean": float(vals.mean())}
         for q in qs:
@@ -84,7 +146,10 @@ class SimResult:
         return out
 
     def round_completion_times(self) -> dict[int, float]:
-        """Finish time of the last chunk of each streaming round."""
+        """Finish time of the last chunk of each streaming round.
+
+        Empty job lists yield an empty mapping (no rounds ever released).
+        """
         out: dict[int, float] = {}
         for j in self.jobs:
             out[j.round_id] = max(out.get(j.round_id, 0.0), j.finish_time)
@@ -93,64 +158,123 @@ class SimResult:
 
 class _FifoNetwork:
     """Incremental FIFO-server network: inject chunks at any time, advance
-    the event clock piecewise. Extracted from the one-shot simulation so
-    streaming releases can interleave with in-flight service."""
+    the event clock piecewise.
+
+    Three event sources feed one loop, merged by ``(time, seq)``:
+
+    * ``finishes`` — the only heap: service completions, at most one per
+      link in flight.
+    * ``hop_arrivals`` — deque; completion order is non-decreasing in time
+      and ``hop_latency`` is constant, so next-hop arrivals are produced
+      already sorted.
+    * ``injections`` — deque of released chunks; callers inject in
+      non-decreasing release order (the single sorted release stream).
+
+    Per-link queues are deques: arrivals are appended in global time
+    order, so FIFO service is a popleft.
+    """
 
     def __init__(self, engine: "Engine"):
         self.eng = engine
         topo = engine.topo
-        self.link_queue: dict[str, list] = {k: [] for k in topo.links}
+        self.link_queue: dict[str, deque] = {k: deque() for k in topo.links}
         self.link_busy: dict[str, bool] = {k: False for k in topo.links}
-        self.events: list = []  # heap of (finish, seq, job, hop, link, start)
+        self.link_rate: dict[str, float] = {k: l.rate for k, l in topo.links.items()}
+        self.finishes: list = []  # heap of (finish, seq, job, hop, link, start)
+        self.hop_arrivals: deque = deque()  # (t, seq, job, hop)
+        self.injections: deque = deque()  # (t, seq, job)
         self._seq = itertools.count()
         self.now = 0.0
 
-    def inject(self, job: ChunkJob, t: float) -> None:
-        self._arrive(max(t, job.arrival_time), job, 0)
+    def inject(self, job, t: float) -> None:
+        t = max(t, job.arrival_time)
+        if self.injections and t < self.injections[-1][0]:
+            raise ValueError("injections must arrive in non-decreasing time order")
+        self.injections.append((t, next(self._seq), job))
 
-    def _arrive(self, t: float, job: ChunkJob, hop: int) -> None:
-        assert job.path is not None
-        link = job.path[hop]
-        heapq.heappush(self.link_queue[link], (t, next(self._seq), job, hop))
-        self._maybe_start(link, t)
-
-    def _maybe_start(self, link: str, t: float) -> None:
-        if self.link_busy[link] or not self.link_queue[link]:
-            return
-        arr, _s, job, hop = heapq.heappop(self.link_queue[link])
+    def _start(self, link: str, job, hop: int, t: float) -> None:
         self.link_busy[link] = True
         if hop == 0:
             job.start_time = t
-        finish = t + job.size / self.eng.topo.links[link].rate
+        finish = t + job.size / self.link_rate[link]
         self.eng.link_bytes[link] += job.size
-        heapq.heappush(self.events, (finish, next(self._seq), job, hop, link, t))
+        heapq.heappush(self.finishes, (finish, next(self._seq), job, hop, link, t))
 
     def advance_to(self, horizon: float) -> None:
-        """Process all service completions strictly before ``horizon``."""
-        while self.events and self.events[0][0] < horizon:
-            self._step()
+        """Process all events strictly before ``horizon``."""
+        self._run(horizon)
         self.now = max(self.now, horizon)
 
     def drain(self) -> None:
-        while self.events:
-            self._step()
+        self._run(None)
 
-    def _step(self) -> None:
-        t, _s, job, hop, link, started = heapq.heappop(self.events)
-        self.now = t
-        self.link_busy[link] = False
-        self.eng.transmitted_bytes[link] += job.size
-        # Observers hear about the service interval only once it has
-        # finished — a real controller cannot measure an in-flight
-        # transfer's rate before the transfer completes.
-        self.eng._notify_service(link, started, t, job)
-        assert job.path is not None
-        if hop + 1 < len(job.path):
-            self._arrive(t + self.eng.hop_latency, job, hop + 1)
-        else:
-            job.finish_time = t
-            self.eng._notify_completion(job, t)
-        self._maybe_start(link, t)
+    def _run(self, horizon: float | None) -> None:
+        """The event loop: pop (time, seq)-ordered events until ``horizon``
+        (exclusive; ``None`` = until idle). Locals are bound once — this
+        loop runs once per chunk-hop arrival and once per service finish."""
+        finishes = self.finishes
+        arrivals = self.hop_arrivals
+        injections = self.injections
+        link_queue = self.link_queue
+        link_busy = self.link_busy
+        eng = self.eng
+        transmitted = eng.transmitted_bytes
+        service_cbs = eng._service_cbs
+        completion_cbs = eng._completion_cbs
+        hop_latency = eng.hop_latency
+        heappop = heapq.heappop
+        seq = self._seq
+        start = self._start
+        bound = _INF if horizon is None else horizon
+        while True:
+            t_f = finishes[0][0] if finishes else _INF
+            s_f = finishes[0][1] if finishes else 0
+            t_a, s_a = (arrivals[0][0], arrivals[0][1]) if arrivals else (_INF, 0)
+            t_i, s_i = (injections[0][0], injections[0][1]) if injections else (_INF, 0)
+            # Earliest of the three sources, ties by global sequence.
+            if t_a < t_i or (t_a == t_i and s_a < s_i):
+                t_n, s_n, src = t_a, s_a, 1
+            else:
+                t_n, s_n, src = t_i, s_i, 2
+            if t_f < t_n or (t_f == t_n and s_f < s_n):
+                t_n, src = t_f, 0
+            if t_n >= bound:
+                return
+            if src == 0:
+                t, _s, job, hop, link, started = heappop(finishes)
+                self.now = t
+                link_busy[link] = False
+                transmitted[link] += job.size
+                # Observers hear about the service interval only once it
+                # has finished — a real controller cannot measure an
+                # in-flight transfer's rate before the transfer completes.
+                if service_cbs:
+                    for cb in service_cbs:
+                        cb(link, started, t, job)
+                path = job.path
+                if hop + 1 < len(path):
+                    arrivals.append((t + hop_latency, next(seq), job, hop + 1))
+                else:
+                    job.finish_time = t
+                    if completion_cbs:
+                        for cb in completion_cbs:
+                            cb(job, t)
+                q = link_queue[link]
+                if q:
+                    job2, hop2 = q.popleft()
+                    start(link, job2, hop2, t)
+            else:
+                if src == 1:
+                    t, _s, job, hop = arrivals.popleft()
+                else:
+                    t, _s, job = injections.popleft()
+                    hop = 0
+                self.now = t
+                link = job.path[hop]
+                if link_busy[link]:
+                    link_queue[link].append((job, hop))
+                else:
+                    start(link, job, hop, t)
 
 
 class Engine:
@@ -161,36 +285,55 @@ class Engine:
         probe_every: int = 64,
         seed: int = 0,
         observers: tuple = (),
+        coalesce_flowlets: bool = False,
     ):
         self.topo = topo
         self.hop_latency = hop_latency
         self.probe_every = probe_every
+        self.coalesce_flowlets = coalesce_flowlets
         self.rng = np.random.default_rng(seed)
         self.assigned_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
         self.transmitted_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
         self._snapshot: dict[str, float] = dict(self.assigned_bytes)
         self.link_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
+        # Pre-parsed link metadata: the up-link's domain (or -1) and the
+        # rate, so the per-chunk estimate path never splits strings.
+        self._up_domain: dict[str, int] = {}
+        self._link_rate: dict[str, float] = {}
+        for name, link in topo.links.items():
+            parts = name.split(":")
+            self._up_domain[name] = int(parts[1]) if parts[0] == "up" else -1
+            self._link_rate[name] = link.rate
         self._decisions = 0
+        self._flowlets: list[_Flowlet] = []
         # Observers receive (link, start, end, job) service intervals and
-        # (job, t) completions — telemetry and feedback estimators hook here.
-        self.observers: list = list(observers)
+        # (job, t) completions — telemetry and feedback estimators hook
+        # here. Callbacks are resolved once so the no-observer hot path is
+        # a single falsy check per event.
+        self.observers: list = []
+        self._service_cbs: list = []
+        self._completion_cbs: list = []
+        for obs in observers:
+            self.add_observer(obs)
 
     # -- observer fan-out -----------------------------------------------------
 
     def add_observer(self, obs) -> None:
         self.observers.append(obs)
+        record = getattr(obs, "record_service", None)
+        if record is not None:
+            self._service_cbs.append(record)
+        record = getattr(obs, "record_completion", None)
+        if record is not None:
+            self._completion_cbs.append(record)
 
-    def _notify_service(self, link: str, start: float, end: float, job: ChunkJob) -> None:
-        for obs in self.observers:
-            record = getattr(obs, "record_service", None)
-            if record is not None:
-                record(link, start, end, job)
+    def _notify_service(self, link: str, start: float, end: float, job) -> None:
+        for cb in self._service_cbs:
+            cb(link, start, end, job)
 
-    def _notify_completion(self, job: ChunkJob, t: float) -> None:
-        for obs in self.observers:
-            record = getattr(obs, "record_completion", None)
-            if record is not None:
-                record(job, t)
+    def _notify_completion(self, job, t: float) -> None:
+        for cb in self._completion_cbs:
+            cb(job, t)
 
     # -- state the policies may query (assignment-phase estimates) ----------
 
@@ -210,22 +353,72 @@ class Engine:
     def path_delay(self, path: list[str], src_domain: int, now: float = 0.0) -> float:
         """Estimated waiting along a path: fresh for the sender's own
         up-links, stale snapshot for everything remote."""
+        assigned = self.assigned_bytes
+        transmitted = self.transmitted_bytes
+        snapshot = self._snapshot
+        up_domain = self._up_domain
+        rate = self._link_rate
         total = 0.0
         for link in path:
-            fresh = link.startswith("up:") and link.split(":")[1] == str(src_domain)
-            total += self.queue_delay(link, now, fresh=fresh)
+            if up_domain[link] == src_domain:
+                backlog = assigned[link] - transmitted[link]
+            else:
+                backlog = snapshot[link]
+            if backlog > 0.0:
+                total += backlog / rate[link]
         return total
 
-    def _commit(self, job: ChunkJob, path: list[str]) -> None:
+    def _commit(self, job, path: list[str]) -> None:
         job.path = path
+        size = job.size
+        assigned = self.assigned_bytes
         for link in path:
-            self.assigned_bytes[link] += job.size
+            assigned[link] += size
         self._decisions += 1
         if self._decisions % self.probe_every == 0:
-            self._snapshot = {
-                k: self.assigned_bytes[k] - self.transmitted_bytes[k]
-                for k in self.assigned_bytes
-            }
+            transmitted = self.transmitted_bytes
+            self._snapshot = {k: assigned[k] - transmitted[k] for k in assigned}
+
+    # -- flowlet coalescing ---------------------------------------------------
+
+    def _coalesce(self, batch: list[ChunkJob]) -> list:
+        """Merge same-(sender GPU, path) chunks of one release batch into
+        flowlets; singletons pass through untouched. Order of first
+        appearance is preserved so fabric entry stays deterministic."""
+        groups: dict[tuple, list[ChunkJob]] = {}
+        keys: list[tuple] = []
+        for j in batch:
+            k = (j.src_domain, j.src_gpu, tuple(j.path))
+            g = groups.get(k)
+            if g is None:
+                groups[k] = [j]
+                keys.append(k)
+            else:
+                g.append(j)
+        out: list = []
+        for k in keys:
+            g = groups[k]
+            if len(g) == 1:
+                out.append(g[0])
+            else:
+                flowlet = _Flowlet(g)
+                self._flowlets.append(flowlet)
+                out.append(flowlet)
+        return out
+
+    def _expand_flowlets(self) -> None:
+        """Reconstruct member chunk times from each finished flowlet: the
+        members drain back-to-back at the final link's rate, ending at the
+        flowlet's completion."""
+        for fl in self._flowlets:
+            rate = self.topo.links[fl.path[-1]].rate
+            remaining = fl.size
+            t_end = fl.finish_time
+            for j in fl.members:
+                j.start_time = fl.start_time
+                remaining -= j.size
+                j.finish_time = t_end - remaining / rate
+        self._flowlets.clear()
 
     # -- orchestration --------------------------------------------------------
 
@@ -236,9 +429,14 @@ class Engine:
         all_jobs: list[ChunkJob] = policy.assign_batch(self, jobs_by_sender, now=0.0)
         # Phase 2: discrete-event FIFO simulation.
         net = _FifoNetwork(self)
-        for job in all_jobs:
+        sim_jobs = self._coalesce(all_jobs) if self.coalesce_flowlets else all_jobs
+        # Stable sort keeps assignment order among equal release times (the
+        # whole batch, in the t=0 one-shot case).
+        for job in sorted(sim_jobs, key=lambda j: j.arrival_time):
             net.inject(job, job.arrival_time)
         net.drain()
+        if self._flowlets:
+            self._expand_flowlets()
         return self._result(all_jobs)
 
     def run_streaming(
@@ -264,16 +462,21 @@ class Engine:
                 raise ValueError(f"non-finite release time {t!r}")
             net.advance_to(t)
             batch = policy.assign_batch(self, releases[t], now=t)
-            for job in batch:
-                all_jobs.append(job)
+            all_jobs.extend(batch)
+            sim_batch = self._coalesce(batch) if self.coalesce_flowlets else batch
+            for job in sim_batch:
                 net.inject(job, t)
         net.drain()
+        if self._flowlets:
+            self._expand_flowlets()
         return self._result(all_jobs)
 
     def _result(self, all_jobs: list[ChunkJob]) -> SimResult:
         flow_cct: dict[int, float] = {}
         for j in all_jobs:
-            flow_cct[j.flow_id] = max(flow_cct.get(j.flow_id, 0.0), j.finish_time)
+            prev = flow_cct.get(j.flow_id)
+            if prev is None or j.finish_time > prev:
+                flow_cct[j.flow_id] = j.finish_time
         makespan = max((j.finish_time for j in all_jobs), default=0.0)
         return SimResult(
             jobs=all_jobs,

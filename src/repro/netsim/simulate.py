@@ -85,13 +85,18 @@ def run_collective(
     chunk_bytes: float = 4 * 2**20,
     seed: int = 0,
     probe_every: int = 64,
+    coalesce: bool = False,
 ) -> CollectiveMetrics:
-    """Simulate one all-to-all under one policy; return §VI-A metrics."""
+    """Simulate one all-to-all under one policy; return §VI-A metrics.
+
+    ``coalesce=True`` enables flowlet coalescing in the engine (merged
+    same-lane service events — faster at large scale, approximate CCTs).
+    """
     topo = RailTopology(tm.num_domains, tm.num_rails, r1=r1, r2=r2)
     jobs = build_jobs(tm, chunk_bytes)
     policy = make_policy(policy_name, topo, seed=seed)
     policy.prepare(jobs)
-    engine = Engine(topo, probe_every=probe_every, seed=seed)
+    engine = Engine(topo, probe_every=probe_every, seed=seed, coalesce_flowlets=coalesce)
     result = engine.run(jobs, policy)
     opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
     return compute_metrics(result, topo, tm.name, policy_name, opt)
@@ -158,6 +163,7 @@ def run_streaming_collective(
     window: int | None = None,
     replay=None,
     recorder=None,
+    coalesce: bool = False,
 ) -> StreamingResult:
     """Simulate a streaming all-to-all (chunks released over time).
 
@@ -176,6 +182,8 @@ def run_streaming_collective(
       replay: optional ``RoutingReplayState`` forecast for ``rails-online``;
         updated in place with this run's realized per-domain loads.
       recorder: optional ``repro.sched.telemetry.TraceRecorder``.
+      coalesce: enable flowlet coalescing (merged same-lane service
+        events); exact CCTs require the default ``False``.
     """
     if isinstance(workload, TrafficMatrix):
         rounds = [(0.0, workload)]
@@ -196,7 +204,7 @@ def run_streaming_collective(
         kwargs = {"window": window, "health": health, "replay": replay}
     policy = make_policy(policy_name, topo, seed=seed, **kwargs)
     policy.prepare(jobs)
-    engine = Engine(topo, probe_every=probe_every, seed=seed)
+    engine = Engine(topo, probe_every=probe_every, seed=seed, coalesce_flowlets=coalesce)
     if health is not None:
         engine.add_observer(health)
     if recorder is not None:

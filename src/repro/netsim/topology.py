@@ -66,6 +66,12 @@ class RailTopology:
             raise ValueError("rail_speeds must lie in (0, 1]")
         self.rail_speeds = tuple(float(s) for s in rail_speeds)
         self.links: dict[str, Link] = {}
+        # Memoized path lists — policies ask for the same few thousand
+        # paths once per chunk; building the strings each time dominated
+        # reactive-policy assignment at large chunk counts. Callers treat
+        # paths as read-only, so sharing one list per key is safe.
+        self._rail_paths: dict[tuple, list[str]] = {}
+        self._spine_paths: dict[tuple, list[str]] = {}
         for d in range(self.m):
             for n in range(self.n):
                 self._add(f"up:{d}:{n}", r2 * self.rail_speeds[n])  # NIC(d,n) -> leaf S_n
@@ -82,7 +88,12 @@ class RailTopology:
 
     def rail_path(self, src_domain: int, dst_domain: int, rail: int) -> list[str]:
         """Direct rail path: single-hop through leaf S_rail (Theorem 1)."""
-        return [f"up:{src_domain}:{rail}", f"down:{dst_domain}:{rail}"]
+        key = (src_domain, dst_domain, rail)
+        path = self._rail_paths.get(key)
+        if path is None:
+            path = [f"up:{src_domain}:{rail}", f"down:{dst_domain}:{rail}"]
+            self._rail_paths[key] = path
+        return path
 
     def spine_path(
         self,
@@ -95,12 +106,17 @@ class RailTopology:
         """Cross-rail path through the spine layer (what ECMP hashes over)."""
         if src_rail == dst_rail:
             return self.rail_path(src_domain, dst_domain, src_rail)
-        return [
-            f"up:{src_domain}:{src_rail}",
-            f"l2s:{src_rail}:{spine}",
-            f"s2l:{spine}:{dst_rail}",
-            f"down:{dst_domain}:{dst_rail}",
-        ]
+        key = (src_domain, dst_domain, src_rail, dst_rail, spine)
+        path = self._spine_paths.get(key)
+        if path is None:
+            path = [
+                f"up:{src_domain}:{src_rail}",
+                f"l2s:{src_rail}:{spine}",
+                f"s2l:{spine}:{dst_rail}",
+                f"down:{dst_domain}:{dst_rail}",
+            ]
+            self._spine_paths[key] = path
+        return path
 
     def all_paths(self, src_domain: int, dst_domain: int) -> list[list[str]]:
         """Every simple path (N rail-direct + N*(N-1)*num_spines spine)."""

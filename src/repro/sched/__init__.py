@@ -34,6 +34,7 @@ from .feedback import RailHealthEstimator, speed_precharge
 from .online import (
     AdaptiveChunker,
     GatingFeedbackHook,
+    PlanCache,
     RoutingReplayState,
     online_greedy_schedule,
     windowed_lpt_schedule,
@@ -45,6 +46,7 @@ __all__ = [
     "AdaptiveChunker",
     "GatingFeedbackHook",
     "PipelineResult",
+    "PlanCache",
     "RailHealthEstimator",
     "RoutingReplayState",
     "ServiceRecord",

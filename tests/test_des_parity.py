@@ -1,0 +1,117 @@
+"""DES engine parity — the fast event loop must not change the physics.
+
+The engine rewrite (single release stream + per-link deques + slotted
+jobs + observer fast path) is a pure performance change: with flowlet
+coalescing off, the fig7–13 workloads must reproduce the pre-rewrite
+heap-per-link engine's CCTs *bit for bit* (golden values captured from
+the original implementation at test scale), and `run_streaming_collective`
+must bit-match `run_collective` for t=0 releases.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.traffic import (
+    mixtral_trace_workload,
+    receiver_skew_workload,
+    sender_skew_workload,
+    sparse_topk_workload,
+    uniform_workload,
+)
+from repro.netsim import run_collective, run_streaming_collective
+from repro.netsim.events import SimResult
+
+M, N = 4, 4
+B = 8 * 2**20
+CHUNK = 1 * 2**20
+
+# (workload, policy) -> (makespan, cct_p99), captured from the pre-rewrite
+# engine (heap-per-link `_FifoNetwork`) on these exact inputs.
+GOLDEN = {
+    ("fig7_uniform", "rails"): (0.0033774147199999924, 0.0033373591167999927),
+    ("fig7_uniform", "minrtt"): (0.003545186879999992, 0.003505131276799992),
+    ("fig7_sparse04", "rails"): (0.004048503359999993, 0.004048503359999993),
+    ("fig7_sparse04", "minrtt"): (0.016128098879999858, 0.016128098879999858),
+    ("fig10_sender_skew", "rails"): (0.0001055615595599958, 0.0001055615595599958),
+    ("fig10_sender_skew", "minrtt"): (0.00011763329834048856, 0.00011194643800584195),
+    ("fig11_receiver_skew", "rails"): (0.00011315713061554098, 0.00011315713061554098),
+    ("fig11_receiver_skew", "minrtt"): (0.0002741650942783958, 0.0002351468027895001),
+    ("fig12_mixtral_dense", "rails"): (0.001093252904228253, 0.0010531973010282534),
+    ("fig12_mixtral_dense", "minrtt"): (0.0011193264966712208, 0.0011047163247448037),
+    ("fig13_mixtral_sparse", "rails"): (0.0011282140796018043, 0.001111389393940728),
+    ("fig13_mixtral_sparse", "minrtt"): (0.003256978630302309, 0.0032202310006412323),
+}
+
+
+def _workloads():
+    return {
+        "fig7_uniform": uniform_workload(M, N, bytes_per_pair=B),
+        "fig7_sparse04": sparse_topk_workload(
+            M, N, sparsity=0.4, bytes_per_pair=B, seed=1
+        ),
+        "fig10_sender_skew": sender_skew_workload(M, N, total_bytes=B * 16, seed=1),
+        "fig11_receiver_skew": receiver_skew_workload(M, N, total_bytes=B * 16, seed=1),
+        "fig12_mixtral_dense": mixtral_trace_workload(
+            M, N, phase="stable", mode="dense", seed=2
+        ),
+        "fig13_mixtral_sparse": mixtral_trace_workload(
+            M, N, phase="stable", mode="sparse", seed=2
+        ),
+    }
+
+
+@pytest.mark.parametrize("policy", ["rails", "minrtt"])
+def test_golden_cct_parity(policy):
+    """Coalescing-off DES == pre-rewrite CCTs, exactly, on fig7–13."""
+    for name, tm in _workloads().items():
+        m = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3)
+        makespan, p99 = GOLDEN[(name, policy)]
+        assert m.makespan == makespan, (name, policy)
+        assert m.cct["p99"] == p99, (name, policy)
+
+
+@pytest.mark.parametrize("policy", ["rails", "minrtt"])
+def test_streaming_bitmatches_oneshot_at_t0(policy):
+    for name, tm in _workloads().items():
+        off = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3)
+        st = run_streaming_collective(tm, policy, chunk_bytes=CHUNK, seed=3)
+        assert st.metrics.makespan == off.makespan, (name, policy)
+        assert st.metrics.cct == off.cct, (name, policy)
+
+
+def test_coalescing_conserves_bytes_and_approximates_cct():
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    exact = run_collective(tm, "rails", chunk_bytes=CHUNK)
+    merged = run_collective(tm, "rails", chunk_bytes=CHUNK, coalesce=True)
+    np.testing.assert_allclose(merged.nic_tx.sum(), tm.total_bytes(), rtol=1e-9)
+    np.testing.assert_allclose(merged.nic_rx.sum(), tm.total_bytes(), rtol=1e-9)
+    # Coalescing is an approximation: makespan stays within 10% here.
+    assert abs(merged.makespan / exact.makespan - 1) < 0.10
+
+
+def test_coalescing_exact_when_lanes_have_one_chunk():
+    # One chunk per (sender, path) lane -> nothing merges -> exact equality.
+    tm = uniform_workload(2, 2, bytes_per_pair=CHUNK)
+    exact = run_collective(tm, "rails", chunk_bytes=CHUNK)
+    merged = run_collective(tm, "rails", chunk_bytes=CHUNK, coalesce=True)
+    assert merged.makespan == exact.makespan
+    assert merged.cct == exact.cct
+
+
+def test_streaming_coalescing_conserves_bytes():
+    tms = [uniform_workload(M, N, bytes_per_pair=B / 4) for _ in range(3)]
+    stream = [(i * 1e-4, tm) for i, tm in enumerate(tms)]
+    res = run_streaming_collective(stream, "rails-online", chunk_bytes=CHUNK, coalesce=True)
+    total = sum(tm.total_bytes() for tm in tms)
+    np.testing.assert_allclose(res.metrics.nic_tx.sum(), total, rtol=1e-9)
+    assert res.metrics.makespan > 0
+
+
+# -- empty-result guards ------------------------------------------------------
+
+
+def test_simresult_empty_guards():
+    empty = SimResult(jobs=[], link_bytes={}, makespan=0.0, flow_cct={})
+    pcts = empty.cct_percentiles()
+    assert pcts["mean"] == 0.0 and pcts["p99"] == 0.0 and pcts["max"] == 0.0
+    assert empty.round_completion_times() == {}

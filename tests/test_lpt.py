@@ -7,9 +7,11 @@ from hypothesis import given, settings, strategies as st
 import jax.numpy as jnp
 
 from repro.core.lpt import (
+    LptState,
     load_mse,
     lpt_schedule,
     lpt_schedule_jax,
+    lpt_schedule_reference,
     normalized_load_mse,
     random_schedule,
     round_robin_schedule,
@@ -117,3 +119,134 @@ def test_initial_loads_respected():
     # Rail 0 pre-charged: flows avoid it (straggler mitigation hook).
     res = lpt_schedule(np.ones(4), 2, initial_loads=np.array([100.0, 0.0]))
     assert (res.assignment == 1).all()
+
+
+# -- fast path ≡ reference ≡ device parity (heap / closed-form / jax) --------
+
+
+def _assert_parity(w, n, src=None, init=None):
+    fast = lpt_schedule(w, n, source_ids=src, initial_loads=init)
+    ref = lpt_schedule_reference(w, n, source_ids=src, initial_loads=init)
+    np.testing.assert_array_equal(fast.assignment, ref.assignment)
+    # Bit-identical, not just close: the fast path replays the reference's
+    # accumulation arithmetic exactly.
+    np.testing.assert_array_equal(fast.loads, ref.loads)
+    np.testing.assert_array_equal(fast.order, ref.order)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    weights=st.lists(st.floats(0.01, 1e3), min_size=1, max_size=200),
+    n=st.integers(1, 16),
+)
+def test_fast_matches_reference_general(weights, n):
+    _assert_parity(np.asarray(weights), n)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    weights=st.lists(st.integers(1, 5), min_size=1, max_size=200),
+    n=st.integers(2, 8),
+    src_hi=st.integers(1, 8),
+)
+def test_fast_matches_reference_tie_cases(weights, n, src_hi):
+    """Small-integer weights force weight ties; random source ids force
+    tie-breaking through the secondary sort key."""
+    w = np.asarray(weights, dtype=float)
+    rng = np.random.default_rng(w.size * 31 + n)
+    src = rng.integers(0, src_hi, size=w.size)
+    _assert_parity(w, n, src=src)
+    # Equal-weight runs over a uniform LoadState take the closed-form path.
+    _assert_parity(np.full(w.size, 3.0), n)
+    _assert_parity(np.full(w.size, 3.0), n, init=np.full(n, 1.5))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    weights=st.lists(st.floats(0.01, 100.0), min_size=1, max_size=100),
+    n=st.integers(2, 8),
+)
+def test_fast_matches_reference_initial_loads(weights, n):
+    w = np.asarray(weights)
+    rng = np.random.default_rng(w.size * 17 + n)
+    _assert_parity(w, n, init=rng.uniform(0.0, 50.0, n))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    weights=st.lists(st.floats(0.5, 100.0), min_size=1, max_size=64),
+    n=st.integers(2, 8),
+)
+def test_jax_matches_host_property(weights, n):
+    w = np.asarray(weights)
+    host = lpt_schedule(w, n)
+    a, loads, _ = lpt_schedule_jax(jnp.asarray(w, jnp.float32), n)
+    # f32 rounding can reorder near-equal weights; require agreement on
+    # the induced loads rather than bitwise assignment equality.
+    got = np.zeros(n)
+    np.add.at(got, np.asarray(a), w)
+    np.testing.assert_allclose(np.sort(got), np.sort(host.loads), rtol=1e-4)
+
+
+def test_jax_jits_both_paths():
+    import functools
+    import jax
+
+    w = jnp.asarray(np.full(32, 2.0), jnp.float32)
+    for uniform in (False, True):
+        fn = jax.jit(
+            functools.partial(lpt_schedule_jax, assume_uniform=uniform),
+            static_argnames=("num_rails",),
+        )
+        a, loads, mse = fn(w, num_rails=4)
+        host = lpt_schedule(np.full(32, 2.0), 4)
+        np.testing.assert_array_equal(np.asarray(a), host.assignment)
+        np.testing.assert_allclose(np.asarray(loads), host.loads, rtol=1e-5)
+
+
+def test_jax_uniform_fast_path_matches_host():
+    for n in (2, 4, 8):
+        for f in (1, 7, 64, 65):
+            w = np.full(f, 2.0)
+            host = lpt_schedule(w, n)
+            a, loads, mse = lpt_schedule_jax(
+                jnp.asarray(w, jnp.float32), n, assume_uniform=True
+            )
+            np.testing.assert_array_equal(np.asarray(a), host.assignment)
+            np.testing.assert_allclose(np.asarray(loads), host.loads, rtol=1e-5)
+
+
+# -- LptState: incremental windowed assignment -------------------------------
+
+
+def test_lpt_state_single_window_matches_offline():
+    rng = np.random.default_rng(4)
+    w = rng.exponential(1.0, 300)
+    src = rng.integers(0, 8, size=300)
+    state = LptState(8)
+    res = state.assign(w, source_ids=src)
+    ref = lpt_schedule_reference(w, 8, source_ids=src)
+    np.testing.assert_array_equal(res.assignment, ref.assignment)
+    np.testing.assert_array_equal(state.loads, ref.loads)
+
+
+def test_lpt_state_windows_match_sequential_reference():
+    rng = np.random.default_rng(5)
+    w = rng.exponential(1.0, 200)
+    state = LptState(4, initial_loads=np.arange(4.0))
+    loads = np.arange(4.0)
+    for lo in range(0, 200, 33):
+        chunk = w[lo:lo + 33]
+        got = state.assign(chunk)
+        want = lpt_schedule_reference(chunk, 4, initial_loads=loads)
+        loads = want.loads
+        np.testing.assert_array_equal(got.assignment, want.assignment)
+        np.testing.assert_array_equal(state.loads, want.loads)
+
+
+def test_lpt_state_extra_loads_bias_without_leak():
+    # Pre-charge steers the assignment but never enters the realized loads.
+    state = LptState(2)
+    res = state.assign(np.ones(3), extra_loads=np.array([100.0, 0.0]))
+    assert (res.assignment == 1).all()
+    np.testing.assert_allclose(state.loads, [0.0, 3.0])

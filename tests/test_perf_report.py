@@ -1,0 +1,61 @@
+"""scripts/perf_report.py must tolerate partial result dirs (satellite):
+missing roofline blocks, absent dominant keys, and zero baselines used to
+KeyError / ZeroDivisionError."""
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+_SPEC = importlib.util.spec_from_file_location(
+    "perf_report", Path(__file__).parent.parent / "scripts" / "perf_report.py"
+)
+perf_report = importlib.util.module_from_spec(_SPEC)
+sys.modules["perf_report"] = perf_report
+_SPEC.loader.exec_module(perf_report)
+
+
+def _write(outdir: Path, stem: str, doc: dict) -> None:
+    (outdir / f"{stem}.json").write_text(json.dumps(doc))
+
+
+def test_report_handles_partial_and_zero_rooflines(tmp_path, capsys):
+    # Healthy cell: base + one variant.
+    _write(tmp_path, "a__s__x", {
+        "status": "ok", "arch": "a", "shape": "s",
+        "roofline": {"compute_s": 1.0, "memory_s": 0.5, "collective_s": 0.2,
+                     "dominant": "compute_s"},
+        "memory": {"peak_estimate_gib": 1.5},
+    })
+    _write(tmp_path, "a__s__x__fast", {
+        "status": "ok", "arch": "a", "shape": "s",
+        "roofline": {"compute_s": 0.8, "memory_s": 0.5, "collective_s": 0.2,
+                     "dominant": "compute_s"},
+        "memory": {"peak_estimate_gib": 1.4},
+    })
+    # Base with a zero dominant value (would ZeroDivisionError).
+    _write(tmp_path, "b__s__x", {
+        "status": "ok", "arch": "b", "shape": "s",
+        "roofline": {"compute_s": 0.0, "memory_s": 0.0, "collective_s": 0.0,
+                     "dominant": "compute_s"},
+        "memory": {"peak_estimate_gib": 0.0},
+    })
+    _write(tmp_path, "b__s__x__v", {
+        "status": "ok", "arch": "b", "shape": "s",
+        "roofline": {"compute_s": 0.1, "memory_s": 0.0, "collective_s": 0.0,
+                     "dominant": "compute_s"},
+        "memory": {"peak_estimate_gib": 0.1},
+    })
+    # Base missing the roofline block entirely (would KeyError).
+    _write(tmp_path, "c__s__x", {"status": "ok", "arch": "c", "shape": "s"})
+    _write(tmp_path, "c__s__x__v", {
+        "status": "ok", "arch": "c", "shape": "s",
+        "roofline": {"compute_s": 0.1, "memory_s": 0.1, "collective_s": 0.1,
+                     "dominant": "compute_s"},
+        "memory": {"peak_estimate_gib": 0.1},
+    })
+    perf_report.main(str(tmp_path))  # must not raise
+    out = capsys.readouterr().out
+    assert "a__s" in out and "-20.0%" in out
+    assert "b__s" in out and "n/a" in out
+    assert "c__s" in out

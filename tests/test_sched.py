@@ -300,3 +300,57 @@ def test_health_estimator_ignores_spine_links():
     np.testing.assert_allclose(est.speeds(), [1.0, 1.0])
     est.record_service("up:0:1", 0.0, 1.0, _J())  # rate 50 = half speed
     np.testing.assert_allclose(est.speeds(), [1.0, 0.5])
+
+
+# -- plan caching (traffic-hash × load-digest memoization) -------------------
+
+
+def test_plan_cache_hit_miss_and_lru():
+    from repro.sched import PlanCache
+
+    cache = PlanCache(capacity=2)
+    a = PlanCache.digest(np.ones((2, 2)), np.float64(1.0))
+    b = PlanCache.digest(np.ones((2, 2)) * 2, np.float64(1.0))
+    c = PlanCache.digest(np.ones((2, 2)), np.float64(2.0))
+    assert a != b != c
+    # identical content -> identical key, regardless of array identity
+    assert a == PlanCache.digest(np.ones((2, 2)).copy(), np.float64(1.0))
+    assert cache.get(a) is None
+    cache.put(a, "A")
+    cache.put(b, "B")
+    assert cache.get(a) == "A" and cache.get(b) == "B"
+    cache.put(c, "C")  # evicts LRU (a)
+    assert cache.get(a) is None
+    assert cache.get(c) == "C"
+    assert cache.hits == 3 and cache.misses == 2
+    assert 0.0 < cache.hit_rate < 1.0
+
+
+def test_gating_hook_reuses_plan_for_steady_counts():
+    from repro.sched import GatingFeedbackHook
+
+    # Small totals clip the chunk suggestion at min_bytes — constant across
+    # steps — so steady counts digest to the same plan key from step 2 on.
+    hook = GatingFeedbackHook(M, N, bytes_per_token=1024.0)
+    counts = np.full(M * N, 100.0)
+    out1 = hook.on_step(counts)
+    assert out1["plan_cache_hit"] is False
+    out2 = hook.on_step(counts)
+    assert out2["plan_cache_hit"] is True
+    assert hook.plan_cache.hits == 1
+    # same forecast -> same predicted quality
+    assert out2["pred_send_mse"] == out1["pred_send_mse"]
+    # changed gating -> cache miss, fresh plan
+    out3 = hook.on_step(counts * 2)
+    assert out3["plan_cache_hit"] is False
+
+
+def test_windowed_replan_quality_improves_with_window():
+    """The ROADMAP sweep's invariant: a full-batch re-plan never balances
+    worse than greedy-on-arrival for the same arrivals."""
+    rng = np.random.default_rng(11)
+    w = rng.exponential(1.0, 400)
+    greedy = windowed_lpt_schedule(w, N, window=1)
+    full = windowed_lpt_schedule(w, N, window=None)
+    assert full.loads.max() <= greedy.loads.max() + 1e-9
+    assert full.mse <= greedy.mse + 1e-9
