@@ -42,15 +42,40 @@ from . import paper_workloads as W
 _ROWS: list[dict] = []
 
 
+#: bench_scale backend selection (``--backend``): "both", "event", "vector".
+_BACKEND = "both"
+
+
 def _timed(fn):
     t0 = time.perf_counter()
     out = fn()
     return out, (time.perf_counter() - t0) * 1e6
 
 
-def _emit(name: str, us: float, derived: str) -> None:
+def _emit(
+    name: str,
+    us: float,
+    derived: str,
+    *,
+    bench: str | None = None,
+    backend: str | None = None,
+    size: int | None = None,
+) -> None:
+    """Print a CSV row and record it for ``--json``.
+
+    ``bench``/``backend``/``size`` are structured keys for the perf
+    trajectory (``scripts/perf_report.py`` keys rows on them so event and
+    vector measurements of one bench never overwrite each other).
+    """
     print(f"{name},{us:.1f},{derived}")
-    _ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
+    row = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+    if bench is not None:
+        row["bench"] = bench
+    if backend is not None:
+        row["backend"] = backend
+    if size is not None:
+        row["size"] = size
+    _ROWS.append(row)
 
 
 def _write_json(path: str, quick: bool, only: str | None) -> None:
@@ -247,6 +272,28 @@ def bench_online_microbatch() -> None:
         times["rails-online"],
         f"{rails.recv_mse:.4f}",
     )
+    # Flowlet-coalescing error bound (ROADMAP): measured CCT drift of the
+    # coalesced event engine vs the exact vector-backend result on the
+    # same release-driven stream.
+    exact, us_x = _timed(
+        lambda: run_streaming_collective(
+            stream, "rails-online", chunk_bytes=W.CHUNK, backend="vector"
+        )
+    )
+    coal, us_c = _timed(
+        lambda: run_streaming_collective(
+            stream, "rails-online", chunk_bytes=W.CHUNK, coalesce=True
+        )
+    )
+    _emit(
+        "online_microbatch_coalesce_drift", us_c,
+        f"makespan_drift="
+        f"{abs(coal.metrics.makespan / exact.metrics.makespan - 1) * 100:.2f}pct"
+        f"_p99_drift="
+        f"{abs(coal.metrics.cct['p99'] / exact.metrics.cct['p99'] - 1) * 100:.2f}pct"
+        f"_speedup={us_x / us_c:.1f}x_vs_vector_exact",
+        bench="online_coalesce_drift", backend="event",
+    )
 
 
 def bench_online_degraded() -> None:
@@ -303,32 +350,80 @@ def bench_online_replay() -> None:
 
 
 def bench_scale() -> None:
-    """ROADMAP fabric scaling: 64→512 nodes, chunk counts up to 10⁵.
+    """ROADMAP fabric scaling: 64→512 nodes, chunk counts up to 10⁶.
 
-    Times one RailS one-shot collective per fabric size, with and without
-    flowlet coalescing, reporting simulated-chunk throughput — the raw
-    "fast as the hardware allows" trajectory metric.
+    Times one RailS one-shot collective per fabric size on both simulation
+    backends (``--backend`` restricts to one), reporting simulated-chunk
+    throughput — the raw "fast as the hardware allows" trajectory metric.
+    The event engine is only timed up to ``EVENT_CHUNK_CAP`` chunks; above
+    that the speedup row compares against the largest event rate measured
+    on the same fabric. Flowlet coalescing (an event-engine approximation)
+    reports its measured CCT drift against the exact vector result — the
+    ROADMAP's "error bound on the CCT drift".
     """
     grid = W.SCALE_GRID_QUICK if W.QUICK else W.SCALE_GRID
+    event_rate: dict[int, float] = {}  # nodes -> chunks/s at the largest capped size
     for m, n, target_chunks in grid:
         tm, chunk_bytes = W.scale_fabric(m, n, target_chunks)
         nodes = m * n
-        res, us = _timed(
-            lambda: run_collective(tm, "rails", chunk_bytes=chunk_bytes)
-        )
         chunks = int(round(tm.total_bytes() / chunk_bytes))
-        _emit(
-            f"scale_nodes{nodes}_chunks{chunks}", us,
-            f"{chunks / (us / 1e6) / 1e3:.0f}kchunks_per_s_opt_ratio={res.opt_ratio:.2f}",
-        )
-        res_c, us_c = _timed(
-            lambda: run_collective(tm, "rails", chunk_bytes=chunk_bytes, coalesce=True)
-        )
-        _emit(
-            f"scale_nodes{nodes}_chunks{chunks}_coalesced", us_c,
-            f"{us / us_c:.1f}x_vs_exact_makespan_drift="
-            f"{abs(res_c.makespan / res.makespan - 1) * 100:.1f}pct",
-        )
+        tag = f"scale_nodes{nodes}_chunks{chunks}"
+        res_v = res_e = None
+        if _BACKEND in ("both", "vector"):
+            res_v, us_v = _timed(
+                lambda: run_collective(
+                    tm, "rails", chunk_bytes=chunk_bytes, backend="vector"
+                )
+            )
+            _emit(
+                f"{tag}_vector", us_v,
+                f"{chunks / (us_v / 1e6) / 1e3:.0f}kchunks_per_s_opt_ratio="
+                f"{res_v.opt_ratio:.2f}",
+                bench="scale", backend="vector", size=chunks,
+            )
+        if _BACKEND in ("both", "event") and chunks <= W.EVENT_CHUNK_CAP:
+            res_e, us_e = _timed(
+                lambda: run_collective(
+                    tm, "rails", chunk_bytes=chunk_bytes, backend="event"
+                )
+            )
+            event_rate[nodes] = chunks / (us_e / 1e6)
+            _emit(
+                f"{tag}_event", us_e,
+                f"{chunks / (us_e / 1e6) / 1e3:.0f}kchunks_per_s_opt_ratio="
+                f"{res_e.opt_ratio:.2f}",
+                bench="scale", backend="event", size=chunks,
+            )
+        if res_v is not None:
+            rate_v = chunks / (us_v / 1e6)
+            if res_e is not None:
+                _emit(
+                    f"{tag}_vector_speedup", us_v,
+                    f"{us_e / us_v:.1f}x_event_makespan_drift="
+                    f"{abs(res_v.makespan / res_e.makespan - 1) * 100:.2e}pct",
+                    bench="scale_speedup", backend="vector", size=chunks,
+                )
+            elif event_rate.get(nodes):
+                _emit(
+                    f"{tag}_vector_speedup", us_v,
+                    f"{rate_v / event_rate[nodes]:.1f}x_event_rate_at_cap",
+                    bench="scale_speedup", backend="vector", size=chunks,
+                )
+        if _BACKEND == "both":
+            # Coalescing drift vs the exact (vector-backend) result.
+            exact = res_v if res_v is not None else res_e
+            res_c, us_c = _timed(
+                lambda: run_collective(
+                    tm, "rails", chunk_bytes=chunk_bytes, coalesce=True
+                )
+            )
+            _emit(
+                f"{tag}_coalesced", us_c,
+                f"makespan_drift={abs(res_c.makespan / exact.makespan - 1) * 100:.2f}pct"
+                f"_p99_drift={abs(res_c.cct['p99'] / exact.cct['p99'] - 1) * 100:.2f}pct"
+                "_vs_vector_exact",
+                bench="scale_coalesce_drift", backend="event", size=chunks,
+            )
 
 
 def bench_online_window_sweep() -> None:
@@ -357,6 +452,43 @@ def bench_online_window_sweep() -> None:
                 f"online_window_burst{burst:g}_w{label}", us,
                 f"{res.metrics.makespan / greedy_makespan:.4f}x_greedy_cct",
             )
+
+
+def parity_check() -> int:
+    """CI gate: event and vector backends must agree on the quick config.
+
+    Returns 0 on agreement (makespan + CCT percentiles), 1 otherwise.
+    Rail-path policies must match at fp tolerance; spine-path baselines
+    get 2e-3 for tie-order degeneracy on the synthetic equal-chunk
+    workloads (see tests/test_fastsim.py for the rationale).
+    """
+    W.configure(quick=True)
+    workloads = {
+        "uniform": W.uniform(),
+        "sparse04": W.sparse(0.4),
+        "mixtral": W.mixtral("stable", "sparse"),
+    }
+    failures = []
+    for pol in W.POLICIES:
+        rtol = 1e-9 if pol in ("rails", "minrtt") else 2e-3
+        pol_failures = 0
+        for name, tm in workloads.items():
+            e = run_collective(tm, pol, chunk_bytes=W.CHUNK, seed=3, backend="event")
+            v = run_collective(tm, pol, chunk_bytes=W.CHUNK, seed=3, backend="vector")
+            checks = {"makespan": (v.makespan, e.makespan)}
+            checks.update({k: (v.cct[k], e.cct[k]) for k in e.cct})
+            for key, (got, want) in checks.items():
+                if abs(got - want) > rtol * abs(want) + 1e-15:
+                    failures.append((pol, name, key, got, want))
+                    pol_failures += 1
+                    print(f"parity MISMATCH: {pol}/{name}/{key} vector={got!r} event={want!r}")
+        verdict = "ok" if pol_failures == 0 else f"FAILED ({pol_failures})"
+        print(f"parity {verdict}: {pol} ({len(workloads)} workloads, rtol={rtol:g})")
+    if failures:
+        print(f"# backend parity FAILED: {len(failures)} mismatches")
+        return 1
+    print("# backend parity OK: event == vector on the quick config")
+    return 0
 
 
 BENCHES = {
@@ -391,7 +523,22 @@ def main() -> None:
         metavar="PATH",
         help="also write rows + environment metadata as JSON (perf trajectory)",
     )
+    ap.add_argument(
+        "--backend",
+        choices=("both", "event", "vector"),
+        default="both",
+        help="bench_scale backend selection (default: time both)",
+    )
+    ap.add_argument(
+        "--parity-check",
+        action="store_true",
+        help="run the event-vs-vector agreement gate and exit (CI)",
+    )
     args = ap.parse_args()
+    if args.parity_check:
+        raise SystemExit(parity_check())
+    global _BACKEND
+    _BACKEND = args.backend
     W.configure(quick=args.quick)
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():

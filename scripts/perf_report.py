@@ -1,6 +1,15 @@
-"""§Perf report: compare hillclimb variants per cell (markdown).
+"""§Perf report: compare hillclimb variants per cell (markdown), and
+render the netsim benchmark trajectory across BENCH_netsim.json snapshots.
 
     PYTHONPATH=src python scripts/perf_report.py results/perf
+    PYTHONPATH=src python scripts/perf_report.py BENCH_a.json BENCH_b.json
+
+Netsim trajectory rows are keyed by **(bench, backend, size)** — not by
+bench name alone — so the event and vector measurements of one benchmark
+(and the same benchmark at different chunk counts) land on separate rows
+instead of overwriting each other. Rows from older snapshots without the
+structured keys fall back to their full row name as the bench key, which
+is unique per backend/size by construction there.
 """
 
 from __future__ import annotations
@@ -49,5 +58,62 @@ def main(outdir: str) -> None:
             print(f"| {tag} | {cols} | {dom} | {peak} | {delta} |")
 
 
+def _row_key(row: dict) -> tuple:
+    """Trajectory key: (bench, backend, size) — never the bare name.
+
+    Falls back to the row name for pre-metadata snapshots; names there
+    already encode backend/size, so the fallback cannot collide with a
+    structured key (structured benches are short tags, names are long).
+    """
+    return (
+        row.get("bench") or row["name"],
+        row.get("backend") or "-",
+        row.get("size") if row.get("size") is not None else "-",
+    )
+
+
+def netsim_trajectory(paths: list[str]) -> None:
+    """Markdown trajectory across BENCH_netsim.json snapshots.
+
+    One row per (bench, backend, size) key; one column pair per snapshot
+    (us_per_call + derived), labelled by git revision when recorded.
+    """
+    columns: list[str] = []
+    table: dict[tuple, dict[str, dict]] = defaultdict(dict)
+    names: dict[tuple, str] = {}
+    for p in paths:
+        doc = json.loads(Path(p).read_text())
+        label = doc.get("git_rev") or Path(p).stem
+        if label in columns:
+            label = f"{label}:{len(columns)}"
+        columns.append(label)
+        for row in doc.get("rows", []):
+            key = _row_key(row)
+            table[key][label] = row
+            names.setdefault(key, row["name"])
+    header = "| bench | backend | size | " + " | ".join(
+        f"{c} us | {c} derived" for c in columns
+    ) + " |"
+    print(header)
+    print("|" + "---|" * (3 + 2 * len(columns)))
+    def _sort(k):
+        bench, backend, size = k
+        return (bench, backend, size if isinstance(size, int) else -1)
+    for key in sorted(table, key=_sort):
+        bench, backend, size = key
+        cells = []
+        for c in columns:
+            row = table[key].get(c)
+            if row is None:
+                cells += ["n/a", "n/a"]
+            else:
+                cells += [f"{row['us_per_call']:.1f}", str(row["derived"])]
+        print(f"| {bench} | {backend} | {size} | " + " | ".join(cells) + " |")
+
+
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "results/perf")
+    args = sys.argv[1:]
+    if args and all(a.endswith(".json") for a in args):
+        netsim_trajectory(args)
+    else:
+        main(args[0] if args else "results/perf")

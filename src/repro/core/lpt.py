@@ -157,13 +157,17 @@ def _assign_sorted(loads: np.ndarray, weights_sorted: np.ndarray) -> np.ndarray:
         k = end - pos
         assignment[pos:end] = np.arange(k, dtype=np.int64) % n
         # Repeated addition (not k*w) so the accumulated floats match the
-        # reference's one-add-per-flow arithmetic bit-for-bit.
+        # reference's one-add-per-flow arithmetic bit-for-bit —
+        # ``np.add.accumulate`` materializes exactly the left-to-right
+        # partial sums, without a Python loop per lap.
         q, rem = divmod(k, n)
-        acc = [float(loads[0])]
-        wf = float(w)
-        for _ in range(q + (1 if rem else 0)):
-            acc.append(acc[-1] + wf)
-        loads[:rem] = acc[q + 1] if rem else acc[q]
+        steps = q + (1 if rem else 0)
+        acc = np.empty(steps + 1)
+        acc[0] = loads[0]
+        acc[1:] = w
+        np.add.accumulate(acc, out=acc)
+        if rem:
+            loads[:rem] = acc[q + 1]
         loads[rem:] = acc[q]
         pos = end
     if pos >= f:

@@ -28,6 +28,7 @@ __all__ = [
     "AtomicFlow",
     "SprayPlan",
     "split_message",
+    "split_sizes_vector",
     "split_traffic_row",
     "build_spray_plan",
     "build_all_plans",
@@ -93,6 +94,35 @@ def split_message(
         AtomicFlow(src_domain, dst_domain, s, src_gpu=src_gpu, flow_id=flow_id, seq=i)
         for i, s in enumerate(chunks)
     ]
+
+
+def split_sizes_vector(
+    sizes: np.ndarray, chunk_bytes: float
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized :func:`split_message` over an array of message sizes.
+
+    Returns ``(counts, chunk_sizes)``: ``counts[i]`` chunks for message ``i``
+    (0 for empty or sub-remainder messages), and the flat per-chunk size
+    array in message order. Chunk sizes match the scalar splitter exactly:
+    ``counts[i] - 1`` full chunks of ``chunk_bytes`` followed by the
+    remainder iff it exceeds the 1e-12 dust threshold. This is the
+    struct-of-arrays entry of the split → LPT → spray pipeline: 10⁶-chunk
+    collectives never materialize per-chunk Python objects.
+    """
+    if chunk_bytes <= 0:
+        raise ValueError("chunk_bytes must be positive")
+    sizes = np.asarray(sizes, dtype=np.float64)
+    if np.any(sizes < 0):
+        raise ValueError("message sizes must be non-negative")
+    n_full, rem = np.divmod(sizes, chunk_bytes)
+    has_rem = rem > 1e-12
+    counts = n_full.astype(np.int64) + has_rem
+    total = int(counts.sum())
+    out = np.full(total, float(chunk_bytes))
+    if total:
+        ends = np.cumsum(counts)
+        out[ends[has_rem] - 1] = rem[has_rem]
+    return counts, out
 
 
 def split_traffic_row(

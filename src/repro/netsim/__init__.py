@@ -1,13 +1,16 @@
-"""Discrete-event rail-fabric simulator — the paper's evaluation substrate.
+"""Rail-fabric simulator — the paper's evaluation substrate.
 
 The paper evaluates RailS in a Mininet/SoftRoCE datacenter emulation; this
 package provides the deterministic equivalent: an explicit rail topology
-(`topology`), a chunk-granularity FIFO queueing engine (`events`), the five
-policies of §VI-A plus the streaming `rails-online` control plane
-(`balancers`), and the paper's metrics (`metrics`).
-`simulate.run_collective` is the offline benchmark entry point;
-`simulate.run_streaming_collective` is its online counterpart (release
-times, rail-health feedback, telemetry observers — see `repro.sched`).
+(`topology`), two parity-locked FIFO simulators — the incremental
+discrete-event engine (`events`) and the array prefix-scan backend
+(`fastsim`, the offline default: exact dynamics at ~50× the event
+throughput) — the five policies of §VI-A plus the streaming `rails-online`
+control plane (`balancers`), and the paper's metrics (`metrics`).
+`simulate.run_collective` is the offline benchmark entry point (with a
+`backend={"event","vector"}` switch); `simulate.run_streaming_collective`
+is its online counterpart (release times, rail-health feedback, telemetry
+observers — see `repro.sched`).
 """
 
 from .balancers import (
@@ -22,8 +25,18 @@ from .balancers import (
     make_policy,
 )
 from .events import ChunkJob, Engine, SimResult
+from .fastsim import (
+    ArraySimResult,
+    JobArrays,
+    LinkIndex,
+    build_job_arrays,
+    chunk_jobs_from_arrays,
+    entry_order_rank,
+    simulate_chunk_arrays,
+)
 from .metrics import CollectiveMetrics, compute_metrics
 from .simulate import (
+    BACKENDS,
     StreamingResult,
     build_jobs,
     build_streaming_jobs,

@@ -105,6 +105,29 @@ class EcmpPolicy(Policy):
 
     name = "ecmp"
 
+    def plan_arrays(self, ja, index):
+        """Array-native plan: the per-flow hash is stateless, so the whole
+        collective's spine choices vectorize to one splitmix64 pass."""
+        from .fastsim import NUM_LEVELS
+
+        # uint64 arithmetic wraps, so the scalar path's explicit & masks
+        # are implicit here.
+        x = ja.flow_id.astype(np.uint64)
+        x = x + np.uint64(0x9E3779B97F4A7C15)
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        x = x ^ (x >> np.uint64(31))
+        spine = (x % np.uint64(self.topo.num_spines)).astype(np.int64)
+        src_rail = ja.src_gpu
+        dst_rail = ja.dst_gpu
+        lbl = np.full((ja.num_chunks, NUM_LEVELS), -1, dtype=index.id_dtype, order="F")
+        lbl[:, 0] = index.up[ja.src_domain, src_rail]
+        lbl[:, 3] = index.down[ja.dst_domain, dst_rail]
+        cross = src_rail != dst_rail
+        lbl[cross, 1] = index.l2s[src_rail[cross], spine[cross]]
+        lbl[cross, 2] = index.s2l[spine[cross], dst_rail[cross]]
+        return lbl
+
     def __init__(self, topo: RailTopology, seed: int = 0):
         super().__init__(topo, seed)
         self._flow_spine: dict[int, int] = {}
@@ -240,6 +263,31 @@ class RailSPolicy(Policy):
             res = lpt_schedule(weights, self.topo.n, source_ids=src_ids)
             for j, rail in zip(jobs, res.assignment):
                 self._assignment[j.chunk_id] = int(rail)
+
+    def plan_arrays(self, ja, index):
+        """Array-native Algorithm 2: per-domain LPT without ChunkJob lists.
+
+        Domains are contiguous runs in chunk order, so each domain's
+        weights/source-ids are plain slices; the ``lpt_schedule`` calls are
+        byte-identical to :meth:`prepare`'s, so assignments match the event
+        path exactly.
+        """
+        from .fastsim import NUM_LEVELS, _group_bounds
+
+        f = ja.num_chunks
+        rail = np.empty(f, dtype=np.int64)
+        if f:
+            starts, ends = _group_bounds(ja.src_domain)
+            for s, e in zip(starts.tolist(), ends.tolist()):
+                res = lpt_schedule(
+                    ja.size[s:e], self.topo.n, source_ids=ja.src_gpu[s:e]
+                )
+                rail[s:e] = res.assignment
+        lbl = np.full((f, NUM_LEVELS), -1, dtype=index.id_dtype, order="F")
+        if f:
+            lbl[:, 0] = index.up[ja.src_domain, rail]
+            lbl[:, 3] = index.down[ja.dst_domain, rail]
+        return lbl
 
     def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
         rail = self._assignment[job.chunk_id]

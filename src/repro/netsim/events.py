@@ -64,9 +64,27 @@ import numpy as np
 
 from .topology import RailTopology
 
-__all__ = ["ChunkJob", "SimResult", "Engine"]
+__all__ = ["ChunkJob", "SimResult", "Engine", "cct_percentile_dict"]
 
 _INF = float("inf")
+
+
+def cct_percentile_dict(values, qs=(50.0, 80.0, 95.0, 99.0)) -> dict[str, float]:
+    """CCT summary dict shared by the event and vector backends.
+
+    Sorting before the mean keeps the summation order (and hence the last
+    fp bit) identical no matter which backend produced ``values``. Empty
+    collectives (all-zero traffic rows) still report a complete key set so
+    downstream tables never KeyError.
+    """
+    vals = np.sort(np.asarray(values, dtype=np.float64))
+    if vals.size == 0:
+        return {"mean": 0.0, **{f"p{int(q)}": 0.0 for q in qs}, "max": 0.0}
+    out = {"mean": float(vals.mean())}
+    for q in qs:
+        out[f"p{int(q)}"] = float(np.percentile(vals, q))
+    out["max"] = float(vals.max())
+    return out
 
 
 @dataclasses.dataclass(slots=True)
@@ -134,16 +152,7 @@ class SimResult:
     flow_cct: dict[int, float]  # per parent-flow completion time
 
     def cct_percentiles(self, qs=(50.0, 80.0, 95.0, 99.0)) -> dict[str, float]:
-        if not self.flow_cct:
-            # Empty collectives (all-zero traffic rows) still report a
-            # complete key set so downstream tables never KeyError.
-            return {"mean": 0.0, **{f"p{int(q)}": 0.0 for q in qs}, "max": 0.0}
-        vals = np.array(sorted(self.flow_cct.values()))
-        out = {"mean": float(vals.mean())}
-        for q in qs:
-            out[f"p{int(q)}"] = float(np.percentile(vals, q))
-        out["max"] = float(vals.max())
-        return out
+        return cct_percentile_dict(list(self.flow_cct.values()), qs)
 
     def round_completion_times(self) -> dict[int, float]:
         """Finish time of the last chunk of each streaming round.

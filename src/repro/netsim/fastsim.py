@@ -1,0 +1,884 @@
+"""Array-based exact simulation backend (the ``vector`` backend).
+
+The event engine (:mod:`repro.netsim.events`) pays a Python dispatch per
+chunk-hop arrival and per service completion — ~30–50k chunks/s at 512
+nodes, far short of the 10⁶-chunk sweeps the RailS regime calls for. This
+module computes the *same FIFO dynamics* with numpy array ops and no
+per-event Python loop.
+
+**Core identity.** A link is a FIFO server: with jobs sorted in arrival
+order, completion times satisfy the prefix recurrence
+
+    c_i = max(a_i, c_{i-1}) + t_i
+
+i.e. ``cumsum(t)`` plus a running max of the idle-gap term — one prefix
+scan per link. The closed form's re-associated additions drift in the last
+fp bits, so it is used only to *predict* where the ``max`` binds (the
+busy-period boundaries); the completions themselves are then seeded
+left-to-right ``np.add.accumulate`` runs per busy period — float-op-for-
+float-op what the event engine computes — and every predicted boundary is
+verified against the exact result (mispredictions repair themselves; see
+:func:`_scan_busy_periods`). A t=0 release batch — the offline collective —
+short-circuits to one accumulate per link. Total element work is O(F) after
+an O(F log F) integer sort. :func:`_scan_wavefront` (one ``max``/add pair
+per queue position across all links at once) is the slower oracle the
+parity tests compare against.
+
+**Multi-hop paths.** Links are processed in topological *levels* by kind —
+``up → l2s → s2l → down`` — so every arrival at a level (release time at
+the first hop, previous completion + ``hop_latency`` after) is known before
+that level's scan runs, regardless of how many hops each path has (2 for
+rail-direct, 4 for spine paths).
+
+**Tie-breaking.** Simultaneous events in the engine resolve by a global
+sequence number. The vector backend carries an integer tie key per job:
+fabric-entry order (the round-robin assignment sequence) at the first hop,
+then per level the lexicographic rank of ``(service start, busy-period
+leader)`` — the order in which the engine's finish events would pop.
+Identical-size chunk waves (the common LPT case) reproduce the engine's
+order exactly; heterogeneous fp ties are astronomically rare and covered by
+the parity tests' fp tolerance.
+
+**Struct-of-arrays pipeline.** :func:`build_job_arrays` flow-splits a
+traffic matrix straight into :class:`JobArrays` (src/dst/size/release/flow
+columns); planner policies fill per-level link-id columns via their
+``plan_arrays`` hooks (:mod:`repro.netsim.balancers`); ChunkJob lists are
+materialized only for the legacy event engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.plan import split_sizes_vector
+from .events import ChunkJob, cct_percentile_dict
+from .topology import RailTopology
+
+__all__ = [
+    "NUM_LEVELS",
+    "LinkIndex",
+    "JobArrays",
+    "ArraySimResult",
+    "build_job_arrays",
+    "chunk_jobs_from_arrays",
+    "entry_order_rank",
+    "paths_from_jobs",
+    "simulate_chunk_arrays",
+]
+
+#: Topological link levels: every path visits at most one link per kind and
+#: kinds only ever appear in this order, so each level's arrivals are fully
+#: known once the previous levels are scanned.
+_LEVEL_OF_KIND = {"up": 0, "l2s": 1, "s2l": 2, "down": 3}
+NUM_LEVELS = 4
+
+
+class LinkIndex:
+    """Integer link ids plus rate/level arrays for one :class:`RailTopology`.
+
+    Also exposes id grids (``up[d, r]``, ``down[d, r]``, ``l2s[r, s]``,
+    ``s2l[s, r]``) so planners can gather whole path columns without
+    formatting a single link-name string.
+    """
+
+    def __init__(self, topo: RailTopology):
+        self.topo = topo
+        names = list(topo.links)
+        self.names = names
+        self.id_of = {nm: i for i, nm in enumerate(names)}
+        self.rate = np.array([topo.links[nm].rate for nm in names])
+        self.level = np.array(
+            [_LEVEL_OF_KIND[nm.split(":", 1)[0]] for nm in names], dtype=np.int8
+        )
+        # Compact ids keep the (F, NUM_LEVELS) path columns small and let
+        # the grouping sort radix over 2 bytes instead of 8.
+        self.id_dtype = np.int16 if len(names) < 2**15 else np.int32
+        m, n, p = topo.m, topo.n, topo.num_spines
+        self.up = np.array(
+            [[self.id_of[f"up:{d}:{r}"] for r in range(n)] for d in range(m)],
+            dtype=self.id_dtype,
+        )
+        self.down = np.array(
+            [[self.id_of[f"down:{d}:{r}"] for r in range(n)] for d in range(m)],
+            dtype=self.id_dtype,
+        )
+        self.l2s = np.array(
+            [[self.id_of[f"l2s:{r}:{s}"] for s in range(p)] for r in range(n)],
+            dtype=self.id_dtype,
+        )
+        self.s2l = np.array(
+            [[self.id_of[f"s2l:{s}:{r}"] for r in range(n)] for s in range(p)],
+            dtype=self.id_dtype,
+        )
+
+    @property
+    def num_links(self) -> int:
+        return len(self.names)
+
+
+@dataclasses.dataclass
+class JobArrays:
+    """Struct-of-arrays form of one collective's atomic chunks.
+
+    Chunk id is the array index; chunks are ordered exactly like the legacy
+    ``build_jobs`` loops — by (src_domain, src_gpu, dst_domain, dst_gpu,
+    seq) — so flows and sender groups are contiguous runs.
+    """
+
+    src_domain: np.ndarray  # (F,) int32
+    src_gpu: np.ndarray  # (F,) int32
+    dst_domain: np.ndarray  # (F,) int32
+    dst_gpu: np.ndarray  # (F,) int32
+    size: np.ndarray  # (F,) float64
+    release: np.ndarray  # (F,) float64
+    flow_id: np.ndarray  # (F,) int64
+    round_id: np.ndarray  # (F,) int64
+    num_flows: int  # size of the flow-id space (zero-chunk flows included)
+
+    @property
+    def num_chunks(self) -> int:
+        return self.size.size
+
+
+def build_job_arrays(tm, chunk_bytes: float) -> JobArrays:
+    """Flow-split ``D1`` straight into :class:`JobArrays` (no ChunkJob).
+
+    Chunk/flow ids replicate the scalar pipeline bit for bit: messages are
+    enumerated in C order over ``(d, g, f, gd)``, intra-domain entries stay
+    on NVLink (Theorem 1), every positive message consumes a flow id even
+    when splitting yields zero chunks (sub-dust remainders).
+    """
+    d1 = np.asarray(tm.d1, dtype=np.float64)
+    m, n = tm.num_domains, tm.num_rails
+    flat = d1.reshape(-1)
+    d_idx, g_idx, f_idx, gd_idx = np.unravel_index(
+        np.arange(flat.size), d1.shape
+    )
+    valid = (flat > 0) & (d_idx != f_idx)
+    msg_sizes = flat[valid]
+    counts, chunk_sizes = split_sizes_vector(msg_sizes, chunk_bytes)
+    rep = counts
+    # Cast to int32 before the repeat: per-message arrays are tiny, the
+    # per-chunk ones are not.
+    return JobArrays(
+        src_domain=np.repeat(d_idx[valid].astype(np.int32), rep),
+        src_gpu=np.repeat(g_idx[valid].astype(np.int32), rep),
+        dst_domain=np.repeat(f_idx[valid].astype(np.int32), rep),
+        dst_gpu=np.repeat(gd_idx[valid].astype(np.int32), rep),
+        size=chunk_sizes,
+        release=np.zeros(chunk_sizes.size),
+        flow_id=np.repeat(np.arange(msg_sizes.size, dtype=np.int64), rep),
+        round_id=np.zeros(chunk_sizes.size, dtype=np.int64),
+        num_flows=int(msg_sizes.size),
+    )
+
+
+def chunk_jobs_from_arrays(ja: JobArrays) -> dict[tuple[int, int], list[ChunkJob]]:
+    """Materialize the legacy per-sender ChunkJob lists (event engine only)."""
+    jobs: dict[tuple[int, int], list[ChunkJob]] = {}
+    src_d = ja.src_domain.tolist()
+    src_g = ja.src_gpu.tolist()
+    dst_d = ja.dst_domain.tolist()
+    dst_g = ja.dst_gpu.tolist()
+    size = ja.size.tolist()
+    release = ja.release.tolist()
+    flow = ja.flow_id.tolist()
+    rnd = ja.round_id.tolist()
+    for i in range(ja.num_chunks):
+        key = (src_d[i], src_g[i])
+        sender = jobs.get(key)
+        if sender is None:
+            sender = jobs[key] = []
+        sender.append(
+            ChunkJob(
+                chunk_id=i,
+                flow_id=flow[i],
+                src_domain=src_d[i],
+                src_gpu=src_g[i],
+                dst_domain=dst_d[i],
+                dst_gpu=dst_g[i],
+                size=size[i],
+                arrival_time=release[i],
+                round_id=rnd[i],
+            )
+        )
+    return jobs
+
+
+def entry_order_rank(
+    src_domain: np.ndarray, src_gpu: np.ndarray, num_gpus: int
+) -> np.ndarray:
+    """Fabric-entry sequence replicating ``Policy.assign_batch`` round-robin.
+
+    Senders are visited in sorted ``(domain, gpu)`` order, one chunk per
+    sender per lap — i.e. entry order sorts by (position within sender,
+    sender). Requires sender groups to be contiguous runs (the build order
+    guarantees it).
+    """
+    f = src_domain.size
+    if f == 0:
+        return np.empty(0, dtype=np.int64)
+    sender = src_domain.astype(np.int64) * num_gpus + src_gpu
+    if np.any(np.diff(sender) < 0):
+        raise ValueError("sender groups must be contiguous non-decreasing runs")
+    idx = np.arange(f)
+    starts, ends = _group_bounds(sender)
+    counts = ends - starts
+    num_senders = counts.size
+    grp_idx = np.repeat(np.arange(num_senders), counts)
+    pos = idx - starts[grp_idx]
+    max_pos = int(counts.max())
+    if num_senders * max_pos <= 4 * f + 1024:
+        # Closed form, no sort: rank = (chunks in earlier laps) + (rank of
+        # this sender among senders still active in its lap). The dense
+        # (sender, lap) activity table is ~F cells for round-robin-ish
+        # queues; the guard falls back to a sort for degenerate skew.
+        active = counts[:, None] > np.arange(max_pos)[None, :]
+        rank_in_lap = np.cumsum(active, axis=0, dtype=np.int64)
+        lap_off = np.concatenate(([0], np.cumsum(rank_in_lap[-1])[:-1]))
+        rank = lap_off[pos] + rank_in_lap.ravel()[grp_idx * max_pos + pos] - 1
+        return rank
+    # (pos, sender) pairs are unique per chunk, so one composite-key
+    # quicksort replaces the two-key lexsort; positions are bounded by the
+    # deepest sender queue, so the composite usually fits 32 bits.
+    span = int(sender[-1]) + 1
+    composite = pos * span + sender
+    if max_pos * span + span < 2**31:
+        composite = composite.astype(np.int32)
+    order = np.argsort(composite)
+    rank = np.empty(f, dtype=np.int64)
+    rank[order] = idx
+    return rank
+
+
+def paths_from_jobs(
+    ordered_jobs: list[ChunkJob], index: LinkIndex, num_chunks: int
+):
+    """Arrays from an already-assigned job list (the generic-policy bridge).
+
+    Reactive policies decide chunk-by-chunk against live backlog estimates,
+    so their assignment phase stays the Python ``assign_batch``; this
+    converts its output — paths plus fabric-entry order — into the columns
+    the vector simulator consumes, indexed by chunk id.
+    """
+    if len(ordered_jobs) != num_chunks:
+        raise ValueError("assignment must cover every chunk exactly once")
+    link_by_level = np.full((num_chunks, NUM_LEVELS), -1, dtype=index.id_dtype, order="F")
+    entry_rank = np.empty(num_chunks, dtype=np.int64)
+    id_of = index.id_of
+    level = index.level
+    for i, job in enumerate(ordered_jobs):
+        cid = job.chunk_id
+        entry_rank[cid] = i
+        for name in job.path:
+            li = id_of[name]
+            link_by_level[cid, level[li]] = li
+    return link_by_level, entry_rank
+
+
+def _single_link_tail(
+    off, a_f, t_f, kb_f, kc_f, comp_f, start_f, lead_b_f, lead_c_f,
+    c0, lb0, lc0,
+):
+    """Finish the last busy link with a scalar recurrence.
+
+    The wavefront loop costs a handful of numpy calls per queue position;
+    once only one link remains (extreme receiver skew) that overhead
+    dominates, so the remaining positions run as plain float ops — the
+    exact ops the event engine performs.
+    """
+    a = a_f[off:].tolist()
+    t = t_f[off:].tolist()
+    kb = kb_f[off:].tolist()
+    kc = kc_f[off:].tolist()
+    comp: list[float] = []
+    start: list[float] = []
+    lead_b: list[int] = []
+    lead_c: list[int] = []
+    c = c0
+    lb = lb0
+    lc = lc0
+    for i in range(len(a)):
+        ai = a[i]
+        if ai >= c:
+            s = ai
+            lb = kb[i]
+            lc = kc[i]
+        else:
+            s = c
+        c = s + t[i]
+        start.append(s)
+        comp.append(c)
+        lead_b.append(lb)
+        lead_c.append(lc)
+    comp_f[off:] = comp
+    start_f[off:] = start
+    lead_b_f[off:] = lead_b
+    lead_c_f[off:] = lead_c
+
+
+def _grouped_order(link, arrival, ties):
+    """Service order for one level: by link, then (arrival, *ties).
+
+    A global multi-key float lexsort is the naive answer but dominates the
+    whole simulation at 10⁶ chunks. Instead: one *small-integer* stable
+    argsort groups jobs by link (numpy radix-sorts integer keys — link ids
+    fit int16), then each link's queue — a few thousand jobs at most — is
+    ordered by a per-link lexsort. Total cost is O(F + F log(F/L)) with
+    integer-sort constants.
+    """
+    # int16 keys cut the radix passes in half; fall back for giant fabrics.
+    if link.dtype.itemsize > 2 and int(link.max()) < 2**15:
+        link = link.astype(np.int16)
+    order = np.argsort(link, kind="stable")
+    l_s = link[order]
+    starts, ends = _group_bounds(l_s)
+    # Pre-gather the sort keys into link-major layout once (per-link slices
+    # below are then views), dropping tie columns that are constant — e.g.
+    # the opener-arrival column after a t=0 first hop.
+    cols = [arrival[order]]
+    for t in ties:
+        if t[0] != t[-1] or (t != t[0]).any():
+            cols.append(t[order])
+    cols.reverse()  # lexsort wants least-significant first
+    for s, e in zip(starts.tolist(), ends.tolist()):
+        if e - s > 1:
+            sub = np.lexsort(tuple(c[s:e] for c in cols))
+            seg = order[s:e]
+            order[s:e] = seg[sub]
+    return order
+
+
+def _level_rank(arrival, ties):
+    """Rank of each job in the level-wide (arrival, *ties) total order."""
+    f = arrival.size
+    r = np.lexsort(tuple(reversed(ties)) + (arrival,))
+    rank = np.empty(f, dtype=np.int64)
+    rank[r] = np.arange(f)
+    return rank
+
+
+def _group_bounds(l_s):
+    """Group start/end offsets of a link-sorted id array."""
+    bounds = np.flatnonzero(l_s[1:] != l_s[:-1]) + 1
+    starts = np.concatenate(([0], bounds))
+    ends = np.concatenate((bounds, [l_s.size]))
+    return starts, ends
+
+
+def _scan_constant_release(link, tie_c, service, a0, need_tie, tie_is_perm):
+    """Level scan when every job shares one release instant (a t=0 batch).
+
+    With a single arrival instant a link is never idle after its first
+    service, so each queue's completions are one ``np.add.accumulate`` —
+    the same left-to-right repeated addition the event engine performs,
+    bit for bit — and the whole busy period shares one leader (its first
+    chunk). The service order is by (link, tie): when the tie column is a
+    permutation of 0..F-1 (the fabric-entry rank at the first hop) an O(F)
+    inverse scatter plus one small-integer radix sort replaces the
+    composite-key quicksort.
+    """
+    f = service.size
+    if tie_is_perm:
+        by_tie = np.empty(f, dtype=np.int64)
+        by_tie[tie_c] = np.arange(f)
+        key = link[by_tie]
+        if key.dtype.itemsize > 2 and int(link.max()) < 2**15:
+            key = key.astype(np.int16)
+        order = by_tie[np.argsort(key, kind="stable")]
+    else:
+        # At partial levels tie_c carries opener ranks from the *previous*
+        # level's rank space, which can exceed this level's job count —
+        # scale by the actual key span so links never interleave, and sort
+        # stably: same-link jobs sharing one opener (same busy period
+        # upstream) are tie-equivalent, so chunk order breaks the tie
+        # deterministically.
+        span = int(tie_c.max()) + 1
+        order = np.argsort(link.astype(np.int64) * span + tie_c, kind="stable")
+    t_s = service[order]
+    l_s = link[order]
+    comp_s = np.empty(f)
+    starts, ends = _group_bounds(l_s)
+    if a0 == 0.0:
+        # accumulate(t) reproduces c_i = c_{i-1} + t_i exactly (c_0 = 0+t_0).
+        for s, e in zip(starts.tolist(), ends.tolist()):
+            np.add.accumulate(t_s[s:e], out=comp_s[s:e])
+    else:
+        for s, e in zip(starts.tolist(), ends.tolist()):
+            tmp = np.empty(e - s + 1)
+            tmp[0] = a0
+            tmp[1:] = t_s[s:e]
+            np.add.accumulate(tmp, out=tmp)
+            comp_s[s:e] = tmp[1:]
+    start_s = np.empty(f)
+    start_s[1:] = comp_s[:-1]
+    start_s[starts] = a0
+    completion = np.empty(f)
+    start = np.empty(f)
+    completion[order] = comp_s
+    start[order] = start_s
+    if not need_tie:
+        return completion, start, None, None, None
+    next_a = np.empty(f, dtype=np.int64)
+    next_a[order] = start_s.view(np.int64)
+    # One busy period per link -> the leader is the link's first chunk; its
+    # arrival is the shared release instant, its rank order is its tie.
+    a0_bits = int(np.array(a0, dtype=np.float64).view(np.int64))
+    next_b = np.full(f, a0_bits, dtype=np.int64)
+    k_s = tie_c[order]
+    lead_s = np.repeat(k_s[starts], ends - starts)
+    next_c = np.empty(f, dtype=np.int64)
+    next_c[order] = lead_s
+    return completion, start, next_a, next_b, next_c
+
+
+def _scan_busy_periods(link, arrival, ties, service, need_tie):
+    """General level scan: exact FIFO dynamics via busy-period decomposition.
+
+    The FIFO recurrence ``c_i = max(a_i, c_{i-1}) + t_i`` only branches at
+    *busy-period boundaries* (arrivals that find the link idle). Those
+    boundaries are first predicted from the closed-form prefix scan
+    ``c̃ = cumsum(t) + running_max(a − cumsum(t)_prev)``, then every busy
+    period's completions are one seeded left-to-right
+    ``np.add.accumulate`` — float-op-for-float-op what the event engine
+    computes. The prediction is *verified* against the exact completions
+    (the first wrong boundary always reveals itself as an inconsistent
+    idle test); the astronomically rare ulp-edge miss falls back to the
+    wavefront scan, so exactness never rests on the approximation.
+
+    Short periods (the common case under balanced load — arrivals pace
+    service) run as one positional sweep across all periods at once; long
+    periods (hot incast links) get individual accumulate calls, of which
+    there can only be a few.
+    """
+    f = arrival.size
+    order = _grouped_order(link, arrival, ties)
+    l_s = link[order]
+    a_s = arrival[order]
+    t_s = service[order]
+    gstarts, gends = _group_bounds(l_s)
+    # Closed-form estimate of the completions, one prefix scan per link.
+    s_cum = np.empty(f)
+    m_run = np.empty(f)
+    for s, e in zip(gstarts.tolist(), gends.tolist()):
+        np.add.accumulate(t_s[s:e], out=s_cum[s:e])
+    gap = a_s - s_cum + t_s  # a_i - cumsum(t)_{i-1}
+    for s, e in zip(gstarts.tolist(), gends.tolist()):
+        np.maximum.accumulate(gap[s:e], out=m_run[s:e])
+    c_est = s_cum + m_run
+    # Predicted busy-period boundaries (idle starts).
+    idle = np.empty(f, dtype=bool)
+    np.greater_equal(a_s[1:], c_est[:-1], out=idle[1:])
+    idle[gstarts] = True
+    seg_starts = np.flatnonzero(idle)
+    seg_lens = np.diff(np.concatenate((seg_starts, [f])))
+    comp_s = _exact_segment_completions(a_s, t_s, idle, seg_starts, seg_lens)
+    # Verify every boundary against the exact completions — the first
+    # divergence always reveals itself, so links that verify clean are
+    # exact and exactness never rests on the estimate. Links with a
+    # value-affecting miss are repaired individually.
+    mismatch = _settle_boundaries(a_s, comp_s, idle, gstarts)
+    if mismatch is not None:
+        if mismatch.any():
+            bad_groups = np.flatnonzero(np.logical_or.reduceat(mismatch, gstarts))
+            for grp in bad_groups.tolist():
+                s = int(gstarts[grp])
+                e = int(gends[grp])
+                comp_s[s:e], idle[s:e] = _repair_link(a_s[s:e], t_s[s:e])
+        seg_starts = np.flatnonzero(idle)
+        seg_lens = np.diff(np.concatenate((seg_starts, [f])))
+    start_s = np.empty(f)
+    start_s[1:] = comp_s[:-1]
+    np.copyto(start_s, a_s, where=idle)
+    completion = np.empty(f)
+    start = np.empty(f)
+    completion[order] = comp_s
+    start[order] = start_s
+    if not need_tie:
+        return completion, start, None, None, None
+    next_a = np.empty(f, dtype=np.int64)
+    next_a[order] = start_s.view(np.int64)
+    # Leaders are encoded as the opener's (arrival time, level rank): the
+    # engine orders the trigger chains of simultaneous service grants by
+    # the arrival events that opened the busy periods — arrival *times*
+    # compare globally across levels, and the level rank is inductively
+    # the opener's own predecessor pop-order key.
+    lvl_rank_s = _level_rank(arrival, ties)[order]
+    lead_b_s = np.repeat(a_s.view(np.int64)[seg_starts], seg_lens)
+    lead_c_s = np.repeat(lvl_rank_s[seg_starts], seg_lens)
+    next_b = np.empty(f, dtype=np.int64)
+    next_b[order] = lead_b_s
+    next_c = np.empty(f, dtype=np.int64)
+    next_c[order] = lead_c_s
+    return completion, start, next_a, next_b, next_c
+
+
+def _settle_boundaries(a, comp, idle, starts):
+    """Re-test every boundary against the exact completions.
+
+    Mispredictions at exact-equality points (``a == c_prev``) are
+    value-neutral — ``max(a, c) + t`` is the same number either way — and
+    just adopt the engine's ``>=``-is-idle semantics by flipping ``idle``
+    in place. Returns ``None`` when the prediction verified clean (no
+    changes at all), else the residual *value-affecting* mismatch mask.
+    """
+    f = a.size
+    check = np.empty(f, dtype=bool)
+    np.greater_equal(a[1:], comp[:-1], out=check[1:])
+    check[starts] = True
+    mismatch = check != idle
+    if not mismatch.any():
+        return None
+    neutral = np.zeros(f, dtype=bool)
+    np.equal(a[1:], comp[:-1], out=neutral[1:])
+    neutral &= mismatch
+    idle |= neutral
+    mismatch &= ~neutral
+    return mismatch
+
+
+def _sequential_link(a, t):
+    """The plain FIFO recurrence for one link — exact by construction."""
+    a_l = a.tolist()
+    t_l = t.tolist()
+    comp_l: list[float] = []
+    idle_l: list[bool] = []
+    c = -np.inf
+    for i in range(len(a_l)):
+        ai = a_l[i]
+        if ai >= c:
+            st = ai
+            idle_l.append(True)
+        else:
+            st = c
+            idle_l.append(False)
+        c = st + t_l[i]
+        comp_l.append(c)
+    return np.array(comp_l), np.array(idle_l, dtype=bool)
+
+
+def _repair_link(a, t):
+    """Exact ``(completions, idle)`` for one link the plain estimate missed.
+
+    The typical customer is a service-paced queue whose arrivals trail (or
+    lead) completions by an ulp per chunk — rounding drift between the
+    sending and receiving accumulate chains. A re-prediction biased a few
+    ulps toward *busy* classifies the trailing chains correctly; whatever
+    still fails verification (leading chains inside the ambiguity band)
+    runs the sequential recurrence — a couple thousand floats at most.
+    """
+    n = a.size
+    s_cum = np.add.accumulate(t)
+    m_run = np.maximum.accumulate(a - s_cum + t)
+    c_est = s_cum + m_run
+    idle = np.empty(n, dtype=bool)
+    idle[0] = True
+    np.greater(
+        a[1:] - c_est[:-1], 4.0 * np.spacing(np.abs(c_est[:-1])), out=idle[1:]
+    )
+    seg_starts = np.flatnonzero(idle)
+    seg_lens = np.diff(np.concatenate((seg_starts, [n])))
+    comp = _exact_segment_completions(a, t, idle, seg_starts, seg_lens)
+    mismatch = _settle_boundaries(a, comp, idle, np.zeros(1, dtype=np.int64))
+    if mismatch is not None and mismatch.any():
+        return _sequential_link(a, t)
+    return comp, idle
+
+
+def _exact_segment_completions(a_s, t_s, idle, seg_starts, seg_lens):
+    """Exact completions under a given busy-period segmentation.
+
+    Each period is a seeded left-to-right accumulate; short periods (the
+    common case — arrivals pace service) run as one positional sweep
+    across all periods, long periods (hot incast links) get individual
+    accumulate calls, of which there can only be a few.
+    """
+    f = a_s.size
+    t_seed = np.where(idle, a_s + t_s, t_s)
+    comp_s = np.empty(f)
+    long_threshold = 512
+    long_idx = np.flatnonzero(seg_lens > long_threshold)
+    for j in long_idx.tolist():
+        s = int(seg_starts[j])
+        e = s + int(seg_lens[j])
+        np.add.accumulate(t_seed[s:e], out=comp_s[s:e])
+    if long_idx.size:
+        short = seg_lens <= long_threshold
+        ss, sl = seg_starts[short], seg_lens[short]
+    else:
+        ss, sl = seg_starts, seg_lens
+    if ss.size:
+        len_order = np.argsort(-sl, kind="stable")
+        ss_d = ss[len_order]
+        sl_d = sl[len_order]
+        kmax = int(sl_d[0])
+        widths = np.searchsorted(-sl_d, -np.arange(kmax), side="left")
+        for p in range(kmax):
+            act = ss_d[: int(widths[p])] + p
+            if p == 0:
+                comp_s[act] = t_seed[act]
+            else:
+                comp_s[act] = comp_s[act - 1] + t_seed[act]
+    return comp_s
+
+
+def _fifo_level_scan(
+    link, arrival, ties, service, need_tie=True, tie_is_perm=False
+):
+    """One topological level: exact FIFO prefix scan over every link at once.
+
+    ``ties`` is the per-job tie-key triple ``(start bits, opener-arrival
+    bits, opener rank)`` — zeros/entry-rank at the first hop. Returns
+    per-job ``(completion, start, next_a, next_b, next_c)``: the next-level
+    triple mirrors the engine's pop order for simultaneous finish events —
+    the service start instant first (earlier starts drew earlier sequence
+    numbers), then the busy-period opener's arrival time and level rank
+    (dequeue-trigger chains bottom out at the arrival event that opened
+    the busy period). ``need_tie=False`` (terminal level) skips the
+    bookkeeping — nothing downstream consumes it. ``tie_is_perm`` promises
+    the rank column is a permutation of 0..F-1 (true for the fabric-entry
+    rank), enabling a sort shortcut.
+    """
+    f = arrival.size
+    tie_a, tie_b, tie_c = ties
+    if (
+        tie_a[0] == 0
+        and arrival[0] == arrival[f - 1]
+        and not tie_a.any()
+        and not tie_b.any()
+        and np.all(arrival == arrival[0])
+    ):
+        return _scan_constant_release(
+            link, tie_c, service, float(arrival[0]), need_tie, tie_is_perm
+        )
+    return _scan_busy_periods(link, arrival, ties, service, need_tie)
+
+
+def _scan_wavefront(link, arrival, ties, service, need_tie=True):
+    """Wavefront oracle scan: one max/add pair per queue position.
+
+    Exact for any input (no boundary prediction involved) but pays a few
+    numpy dispatches per queue position; kept as the cross-check oracle
+    for the busy-period scan (see the parity tests).
+    """
+    f = arrival.size
+    order = _grouped_order(link, arrival, ties)
+    l_s = link[order]
+    new_grp = np.empty(f, dtype=bool)
+    new_grp[0] = True
+    np.not_equal(l_s[1:], l_s[:-1], out=new_grp[1:])
+    gid = np.cumsum(new_grp) - 1
+    num_groups = int(gid[-1]) + 1
+    counts = np.bincount(gid, minlength=num_groups)
+    # Wavefront layout: links ordered by descending queue length so the
+    # active set at queue position k is always a prefix, and the previous
+    # wave's completions/leaders are plain views into the flat outputs.
+    grank_order = np.argsort(-counts, kind="stable")
+    grank = np.empty(num_groups, dtype=np.int64)
+    grank[grank_order] = np.arange(num_groups)
+    gstarts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    pos = np.arange(f) - gstarts[gid]
+    order2 = np.argsort(pos * num_groups + grank[gid])  # unique composite
+    perm = order[order2]
+    a_f = arrival[perm]
+    t_f = service[perm]
+    # Leader bookkeeping: opener arrival bits + opener level rank (the
+    # engine's event-sequence order for busy-period openers).
+    kb_f = a_f.view(np.int64)
+    kc_f = _level_rank(arrival, ties)[perm] if need_tie else ties[2][perm]
+    comp_f = np.empty(f)
+    start_f = np.empty(f)
+    lead_b_f = np.empty(f, dtype=np.int64)
+    lead_c_f = np.empty(f, dtype=np.int64)
+    counts_desc = counts[grank_order]
+    kmax = int(counts_desc[0])
+    # Active width per wave, precomputed in one searchsorted.
+    ws = np.searchsorted(-counts_desc, -np.arange(kmax), side="left")
+    offs = np.concatenate(([0], np.cumsum(ws[:-1])))
+    ws_l = ws.tolist()
+    offs_l = offs.tolist()
+    mask_buf = np.empty(int(ws[0]), dtype=bool)
+    poff = 0
+    for k in range(kmax):
+        w = ws_l[k]
+        off = offs_l[k]
+        if w == 1:
+            _single_link_tail(
+                off, a_f, t_f, kb_f, kc_f, comp_f, start_f, lead_b_f, lead_c_f,
+                comp_f[poff] if k else -np.inf,
+                lead_b_f[poff] if k else 0,
+                lead_c_f[poff] if k else 0,
+            )
+            break
+        sl = slice(off, off + w)
+        if k == 0:
+            start_f[sl] = a_f[sl]
+            lead_b_f[sl] = kb_f[sl]
+            lead_c_f[sl] = kc_f[sl]
+        else:
+            a_k = a_f[sl]
+            cp = comp_f[poff:poff + w]
+            np.maximum(a_k, cp, out=start_f[sl])
+            m = np.greater_equal(a_k, cp, out=mask_buf[:w])
+            lead_b_f[sl] = lead_b_f[poff:poff + w]
+            np.copyto(lead_b_f[sl], kb_f[sl], where=m)
+            lead_c_f[sl] = lead_c_f[poff:poff + w]
+            np.copyto(lead_c_f[sl], kc_f[sl], where=m)
+        np.add(start_f[sl], t_f[sl], out=comp_f[sl])
+        poff = off
+    completion = np.empty(f)
+    start = np.empty(f)
+    completion[perm] = comp_f
+    start[perm] = start_f
+    if not need_tie:
+        return completion, start, None, None, None
+    # Service starts are non-negative, so their IEEE-754 bit patterns sort
+    # like the floats themselves — an integer tie key for free.
+    next_a = np.empty(f, dtype=np.int64)
+    next_a[perm] = start_f.view(np.int64)
+    next_b = np.empty(f, dtype=np.int64)
+    next_b[perm] = lead_b_f
+    next_c = np.empty(f, dtype=np.int64)
+    next_c[perm] = lead_c_f
+    return completion, start, next_a, next_b, next_c
+
+
+@dataclasses.dataclass
+class ArraySimResult:
+    """Vector-backend counterpart of :class:`SimResult` (no ChunkJob lists).
+
+    Duck-types the surface ``compute_metrics`` and the streaming driver
+    touch: ``link_bytes``/``makespan`` fields plus ``cct_percentiles`` /
+    ``round_completion_times``; ``flow_cct`` materializes a dict lazily for
+    API compatibility.
+    """
+
+    finish: np.ndarray  # (F,) per-chunk completion times
+    start: np.ndarray  # (F,) first-hop service start times
+    link_bytes: dict[str, float]
+    makespan: float
+    flow_ids: np.ndarray  # present parent-flow ids, chunk order
+    flow_finish: np.ndarray  # completion per present flow
+    round_ids: np.ndarray  # present round ids
+    round_finish: np.ndarray  # completion per present round
+
+    def cct_percentiles(self, qs=(50.0, 80.0, 95.0, 99.0)) -> dict[str, float]:
+        return cct_percentile_dict(self.flow_finish, qs)
+
+    def round_completion_times(self) -> dict[int, float]:
+        return {
+            int(r): float(t) for r, t in zip(self.round_ids, self.round_finish)
+        }
+
+    @property
+    def flow_cct(self) -> dict[int, float]:
+        return {int(i): float(t) for i, t in zip(self.flow_ids, self.flow_finish)}
+
+
+def _segment_max(values: np.ndarray, keys: np.ndarray):
+    """Max of ``values`` over contiguous runs of ``keys`` (chunk order)."""
+    if values.size == 0:
+        return np.empty(0, dtype=keys.dtype), np.empty(0)
+    if keys[0] == keys[-1]:  # single segment (e.g. the offline round id)
+        return keys[:1].copy(), np.array([values.max()])
+    d = np.diff(keys)
+    if np.any(d < 0):
+        raise ValueError("segment keys must be non-decreasing in chunk order")
+    starts = np.concatenate(([0], np.flatnonzero(d) + 1))
+    return keys[starts], np.maximum.reduceat(values, starts)
+
+
+def simulate_chunk_arrays(
+    index: LinkIndex,
+    link_by_level: np.ndarray,
+    size: np.ndarray,
+    release: np.ndarray,
+    entry_rank: np.ndarray,
+    hop_latency: float = 1e-6,
+    flow_id: np.ndarray | None = None,
+    round_id: np.ndarray | None = None,
+) -> ArraySimResult:
+    """Exact FIFO dynamics of one assigned collective, no event loop.
+
+    ``link_by_level`` is ``(F, NUM_LEVELS)`` int link ids (−1 = level not on
+    the path); every path must start at level 0 (an up-link) — true for
+    both rail-direct and spine families. ``flow_id``/``round_id`` (when
+    given) must be non-decreasing in chunk order, which the builders
+    guarantee; ``None`` treats every chunk as its own flow / one round.
+    """
+    f = size.size
+    num_links = index.num_links
+    link_volume = np.zeros(num_links)
+    finish = np.zeros(f)
+    start0 = np.zeros(f)
+    if f:
+        if np.any(link_by_level[:, 0] < 0):
+            raise ValueError("every path must start with an up-link (level 0)")
+        # +0.0 normalizes any -0.0 release so start-time bit patterns stay
+        # monotone when reused as integer tie keys.
+        arrival = np.asarray(release, dtype=np.float64) + 0.0
+        tie_a = np.zeros(f, dtype=np.int64)
+        tie_b = np.zeros(f, dtype=np.int64)
+        tie_c = np.asarray(entry_rank, dtype=np.int64).copy()
+        last_level = link_by_level.shape[1] - 1
+        for lv in range(link_by_level.shape[1]):
+            links = link_by_level[:, lv]
+            need_tie = lv < last_level
+            if links.min() >= 0:
+                # Every chunk visits this level (both columns of rail-only
+                # runs) — skip the gather/scatter round trip entirely. At
+                # the first hop the tie rank is the entry rank, a
+                # permutation by construction.
+                service = size / index.rate[links]
+                comp, sv, na, nb, nc = _fifo_level_scan(
+                    links, arrival, (tie_a, tie_b, tie_c), service,
+                    need_tie=need_tie, tie_is_perm=(lv == 0),
+                )
+                if lv == 0:
+                    start0 = sv
+                finish = comp
+                if need_tie:
+                    arrival = comp + hop_latency
+                    tie_a = na
+                    tie_b = nb
+                    tie_c = nc
+                link_volume += np.bincount(links, weights=size, minlength=num_links)
+                continue
+            sel = np.flatnonzero(links >= 0)
+            if sel.size == 0:
+                continue
+            l_sel = links[sel]
+            sizes_sel = size[sel]
+            service = sizes_sel / index.rate[l_sel]
+            comp, sv, na, nb, nc = _fifo_level_scan(
+                l_sel, arrival[sel],
+                (tie_a[sel], tie_b[sel], tie_c[sel]), service,
+                need_tie=need_tie,
+            )
+            if lv == 0:
+                start0[sel] = sv
+            finish[sel] = comp
+            if need_tie:
+                arrival[sel] = comp + hop_latency
+                tie_a[sel] = na
+                tie_b[sel] = nb
+                tie_c[sel] = nc
+            link_volume += np.bincount(l_sel, weights=sizes_sel, minlength=num_links)
+    if flow_id is None:
+        flow_id = np.arange(f, dtype=np.int64)
+    if round_id is None:
+        round_id = np.zeros(f, dtype=np.int64)
+    flow_ids, flow_finish = _segment_max(finish, np.asarray(flow_id))
+    round_ids, round_finish = _segment_max(finish, np.asarray(round_id))
+    return ArraySimResult(
+        finish=finish,
+        start=start0,
+        link_bytes={nm: float(v) for nm, v in zip(index.names, link_volume)},
+        makespan=float(finish.max()) if f else 0.0,
+        flow_ids=flow_ids,
+        flow_finish=flow_finish,
+        round_ids=round_ids,
+        round_finish=round_finish,
+    )

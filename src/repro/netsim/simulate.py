@@ -13,6 +13,19 @@ Two regimes:
   into the engine, and per-round completion times come back alongside the
   aggregate metrics. A single round released at t=0 with feedback disabled
   reproduces ``run_collective`` exactly.
+
+Both regimes select a simulation **backend**:
+
+* ``vector`` (offline default) — the array prefix-scan simulator
+  (:mod:`repro.netsim.fastsim`): exact FIFO dynamics, no per-event Python
+  dispatch, ~50–100× the event engine's chunk throughput. Planner policies
+  (``rails``, ``ecmp``) assign in array form too; reactive policies keep
+  their chunk-by-chunk assignment loop and only the fabric simulation is
+  vectorized.
+* ``event`` (streaming default) — the incremental DES
+  (:mod:`repro.netsim.events`): required for flowlet coalescing, rail-health
+  feedback, telemetry observers, and any policy that reads live backlog
+  during a streaming run.
 """
 
 from __future__ import annotations
@@ -21,12 +34,19 @@ import dataclasses
 
 import numpy as np
 
-from ..core.plan import split_message
 from ..core.theorems import theorem2_optimal_time
 from ..core.traffic import TrafficMatrix
 from ..sched.feedback import RailHealthEstimator
-from .balancers import POLICIES, OnlineRailSPolicy, Policy, make_policy
+from .balancers import POLICIES, OnlineRailSPolicy, Policy, RailSPolicy, make_policy
 from .events import ChunkJob, Engine, SimResult
+from .fastsim import (
+    LinkIndex,
+    build_job_arrays,
+    chunk_jobs_from_arrays,
+    entry_order_rank,
+    paths_from_jobs,
+    simulate_chunk_arrays,
+)
 from .metrics import CollectiveMetrics, compute_metrics
 from .topology import RailTopology
 
@@ -39,42 +59,62 @@ __all__ = [
     "StreamingResult",
 ]
 
+BACKENDS = ("event", "vector")
+
 
 def build_jobs(
     tm: TrafficMatrix, chunk_bytes: float
 ) -> dict[tuple[int, int], list[ChunkJob]]:
-    """Flow-split D1 into atomic ChunkJobs, grouped by source GPU."""
-    m, n = tm.num_domains, tm.num_rails
-    jobs: dict[tuple[int, int], list[ChunkJob]] = {}
-    chunk_id = 0
-    flow_id = 0
-    for d in range(m):
-        for g in range(n):
-            sender_jobs: list[ChunkJob] = []
-            for f in range(m):
-                if f == d:
-                    continue  # intra-domain stays on NVLink (Theorem 1)
-                for gd in range(n):
-                    size = float(tm.d1[d, g, f, gd])
-                    if size <= 0:
-                        continue
-                    for part in split_message(size, chunk_bytes, d, f, g, flow_id):
-                        sender_jobs.append(
-                            ChunkJob(
-                                chunk_id=chunk_id,
-                                flow_id=flow_id,
-                                src_domain=d,
-                                src_gpu=g,
-                                dst_domain=f,
-                                dst_gpu=gd,
-                                size=part.size,
-                            )
-                        )
-                        chunk_id += 1
-                    flow_id += 1
-            if sender_jobs:
-                jobs[(d, g)] = sender_jobs
-    return jobs
+    """Flow-split D1 into atomic ChunkJobs, grouped by source GPU.
+
+    The struct-of-arrays splitter (:func:`repro.netsim.fastsim.
+    build_job_arrays`) is the single source of truth; this materializes its
+    columns as the legacy per-sender lists the event engine consumes.
+    """
+    return chunk_jobs_from_arrays(build_job_arrays(tm, chunk_bytes))
+
+
+def _check_backend(backend: str) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose {BACKENDS}")
+
+
+def _run_collective_vector(
+    topo: RailTopology,
+    tm: TrafficMatrix,
+    policy_name: str,
+    chunk_bytes: float,
+    seed: int,
+    probe_every: int,
+):
+    """Offline collective on the array backend.
+
+    Planner policies fill path columns straight from :class:`JobArrays`;
+    everything else runs its normal assignment phase against a (never
+    simulated) engine and only the fabric dynamics are vectorized.
+    """
+    index = LinkIndex(topo)
+    ja = build_job_arrays(tm, chunk_bytes)
+    policy = make_policy(policy_name, topo, seed=seed)
+    if hasattr(policy, "plan_arrays"):
+        link_by_level = policy.plan_arrays(ja, index)
+        entry_rank = entry_order_rank(ja.src_domain, ja.src_gpu, topo.n)
+    else:
+        jobs = chunk_jobs_from_arrays(ja)
+        policy.prepare(jobs)
+        eng = Engine(topo, probe_every=probe_every, seed=seed)
+        ordered = policy.assign_batch(eng, jobs, now=0.0)
+        link_by_level, entry_rank = paths_from_jobs(ordered, index, ja.num_chunks)
+    return simulate_chunk_arrays(
+        index,
+        link_by_level,
+        ja.size,
+        ja.release,
+        entry_rank,
+        hop_latency=1e-6,  # the Engine default — both backends share it
+        flow_id=ja.flow_id,
+        round_id=ja.round_id,
+    )
 
 
 def run_collective(
@@ -86,19 +126,38 @@ def run_collective(
     seed: int = 0,
     probe_every: int = 64,
     coalesce: bool = False,
+    backend: str | None = None,
 ) -> CollectiveMetrics:
     """Simulate one all-to-all under one policy; return §VI-A metrics.
 
-    ``coalesce=True`` enables flowlet coalescing in the engine (merged
-    same-lane service events — faster at large scale, approximate CCTs).
+    ``backend`` selects the simulator: ``vector`` (the default for exact
+    runs) computes the exact FIFO dynamics with array prefix scans;
+    ``event`` runs the discrete-event engine. ``coalesce=True`` enables
+    flowlet coalescing — an event-engine approximation (merged same-lane
+    service events) — so it defaults to the event backend, and asking for
+    ``backend="vector"`` together with it is an error (mirroring
+    :func:`run_streaming_collective`).
     """
+    if backend is None:
+        backend = "event" if coalesce else "vector"
+    _check_backend(backend)
+    if coalesce and backend == "vector":
+        raise ValueError(
+            "flowlet coalescing is an event-engine approximation; drop "
+            "coalesce=True or use backend='event'"
+        )
     topo = RailTopology(tm.num_domains, tm.num_rails, r1=r1, r2=r2)
+    opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
+    if backend == "vector":
+        result = _run_collective_vector(
+            topo, tm, policy_name, chunk_bytes, seed, probe_every
+        )
+        return compute_metrics(result, topo, tm.name, policy_name, opt)
     jobs = build_jobs(tm, chunk_bytes)
     policy = make_policy(policy_name, topo, seed=seed)
     policy.prepare(jobs)
     engine = Engine(topo, probe_every=probe_every, seed=seed, coalesce_flowlets=coalesce)
     result = engine.run(jobs, policy)
-    opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
     return compute_metrics(result, topo, tm.name, policy_name, opt)
 
 
@@ -150,6 +209,55 @@ class StreamingResult:
         return self.metrics.makespan
 
 
+def _run_streaming_vector(
+    topo: RailTopology,
+    jobs: dict[tuple[int, int], list[ChunkJob]],
+    policy,
+    probe_every: int,
+    seed: int,
+):
+    """Streaming collective on the array backend (proactive planners only).
+
+    The policy assigns each release batch exactly as the event engine
+    would — batches in release order, round-robin senders — but against a
+    state-holder engine whose network is never advanced. That is lossless
+    precisely when the policy ignores live fabric feedback (RailS /
+    rails-online without health estimation), which the caller enforces.
+    """
+    releases: dict[float, dict[tuple[int, int], list[ChunkJob]]] = {}
+    num_chunks = 0
+    for key, sender_jobs in jobs.items():
+        for j in sender_jobs:
+            releases.setdefault(j.arrival_time, {}).setdefault(key, []).append(j)
+            num_chunks += 1
+    eng = Engine(topo, probe_every=probe_every, seed=seed)
+    ordered: list[ChunkJob] = []
+    for t in sorted(releases):
+        ordered.extend(policy.assign_batch(eng, releases[t], now=t))
+    index = LinkIndex(topo)
+    link_by_level, entry_rank = paths_from_jobs(ordered, index, num_chunks)
+    size = np.empty(num_chunks)
+    release = np.empty(num_chunks)
+    flow_id = np.empty(num_chunks, dtype=np.int64)
+    round_id = np.empty(num_chunks, dtype=np.int64)
+    for j in ordered:
+        cid = j.chunk_id
+        size[cid] = j.size
+        release[cid] = j.arrival_time
+        flow_id[cid] = j.flow_id
+        round_id[cid] = j.round_id
+    return simulate_chunk_arrays(
+        index,
+        link_by_level,
+        size,
+        release,
+        entry_rank,
+        hop_latency=1e-6,  # the Engine default — both backends share it
+        flow_id=flow_id,
+        round_id=round_id,
+    )
+
+
 def run_streaming_collective(
     workload: TrafficMatrix | list[tuple[float, TrafficMatrix]],
     policy_name: str,
@@ -164,6 +272,7 @@ def run_streaming_collective(
     replay=None,
     recorder=None,
     coalesce: bool = False,
+    backend: str = "event",
 ) -> StreamingResult:
     """Simulate a streaming all-to-all (chunks released over time).
 
@@ -184,7 +293,12 @@ def run_streaming_collective(
       recorder: optional ``repro.sched.telemetry.TraceRecorder``.
       coalesce: enable flowlet coalescing (merged same-lane service
         events); exact CCTs require the default ``False``.
+      backend: ``event`` (default — the incremental DES, required for
+        feedback/telemetry/coalescing and reactive policies) or ``vector``
+        (exact array simulation; proactive planners without fabric feedback
+        only — the reference for coalescing drift measurements).
     """
+    _check_backend(backend)
     if isinstance(workload, TrafficMatrix):
         rounds = [(0.0, workload)]
     else:
@@ -200,16 +314,33 @@ def run_streaming_collective(
     jobs = build_streaming_jobs(rounds, chunk_bytes)
     health = RailHealthEstimator(n, nominal_rate=r2) if feedback else None
     kwargs: dict = {}
-    if issubclass(POLICIES.get(policy_name, Policy), OnlineRailSPolicy):
+    policy_cls = POLICIES.get(policy_name, Policy)
+    if issubclass(policy_cls, OnlineRailSPolicy):
         kwargs = {"window": window, "health": health, "replay": replay}
     policy = make_policy(policy_name, topo, seed=seed, **kwargs)
     policy.prepare(jobs)
-    engine = Engine(topo, probe_every=probe_every, seed=seed, coalesce_flowlets=coalesce)
-    if health is not None:
-        engine.add_observer(health)
-    if recorder is not None:
-        engine.add_observer(recorder)
-    result = engine.run_streaming(jobs, policy)
+    if backend == "vector":
+        if feedback or recorder is not None or coalesce:
+            raise ValueError(
+                "vector streaming is feedback-free: rail-health estimation, "
+                "telemetry recording and flowlet coalescing need the event "
+                "engine's live service stream"
+            )
+        if not issubclass(policy_cls, (RailSPolicy, OnlineRailSPolicy)):
+            raise ValueError(
+                f"vector streaming requires a proactive planner; {policy_name!r} "
+                "reads live backlog estimates during the run"
+            )
+        result = _run_streaming_vector(topo, jobs, policy, probe_every, seed)
+    else:
+        engine = Engine(
+            topo, probe_every=probe_every, seed=seed, coalesce_flowlets=coalesce
+        )
+        if health is not None:
+            engine.add_observer(health)
+        if recorder is not None:
+            engine.add_observer(recorder)
+        result = engine.run_streaming(jobs, policy)
     # Lower bound: each round cannot beat its own Theorem-2 time after its
     # release, nor can the union beat the aggregate matrix's bound.
     d2_total = sum(tm.d2 for _t, tm in rounds)
@@ -242,5 +373,10 @@ def run_policy_suite(
     policies: tuple[str, ...] = ("ecmp", "minrtt", "plb", "reps", "rails"),
     **kwargs,
 ) -> dict[str, CollectiveMetrics]:
-    """Run every policy on the same workload (the paper's comparison grid)."""
+    """Run every policy on the same workload (the paper's comparison grid).
+
+    ``kwargs`` pass through to :func:`run_collective` — in particular
+    ``backend={"event","vector"}`` (vector is the offline default, which is
+    what keeps full-grid sweeps at paper scale under a minute).
+    """
     return {p: run_collective(tm, p, **kwargs) for p in policies}

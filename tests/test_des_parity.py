@@ -62,9 +62,14 @@ def _workloads():
 
 @pytest.mark.parametrize("policy", ["rails", "minrtt"])
 def test_golden_cct_parity(policy):
-    """Coalescing-off DES == pre-rewrite CCTs, exactly, on fig7–13."""
+    """Coalescing-off DES == pre-rewrite CCTs, exactly, on fig7–13.
+
+    ``backend="event"`` explicitly: these goldens guard ``events.py``
+    (the offline default is the vector backend, whose own parity suite is
+    ``test_fastsim.py``).
+    """
     for name, tm in _workloads().items():
-        m = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3)
+        m = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3, backend="event")
         makespan, p99 = GOLDEN[(name, policy)]
         assert m.makespan == makespan, (name, policy)
         assert m.cct["p99"] == p99, (name, policy)
@@ -73,7 +78,7 @@ def test_golden_cct_parity(policy):
 @pytest.mark.parametrize("policy", ["rails", "minrtt"])
 def test_streaming_bitmatches_oneshot_at_t0(policy):
     for name, tm in _workloads().items():
-        off = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3)
+        off = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3, backend="event")
         st = run_streaming_collective(tm, policy, chunk_bytes=CHUNK, seed=3)
         assert st.metrics.makespan == off.makespan, (name, policy)
         assert st.metrics.cct == off.cct, (name, policy)

@@ -1,0 +1,427 @@
+"""Vector-backend parity — the prefix-scan simulator must match the DES.
+
+The vector backend (`repro.netsim.fastsim`) recomputes the event engine's
+FIFO dynamics with array scans. Golden anchor: on every policy and every
+paper workload the CCT statistics must match the engine within fp
+tolerance, and runs whose ties the tie-key model covers exactly (rail-path
+planners, uniform chunk waves) must match *bit for bit*. The scan itself
+is cross-checked against the wavefront oracle on randomized and
+equality-heavy inputs, and the struct-of-arrays builders against the
+scalar splitter they replaced.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.plan import split_message, split_sizes_vector
+from repro.core.theorems import theorem2_optimal_time
+from repro.core.traffic import (
+    bursty_release_times,
+    microbatch_stream,
+    mixtral_trace_workload,
+    receiver_skew_workload,
+    sender_skew_workload,
+    sparse_topk_workload,
+    uniform_workload,
+)
+from repro.netsim import (
+    ChunkJob,
+    Engine,
+    LinkIndex,
+    build_job_arrays,
+    build_jobs,
+    run_collective,
+    run_streaming_collective,
+)
+from repro.netsim.balancers import Policy
+from repro.netsim.fastsim import (
+    ArraySimResult,
+    _scan_busy_periods,
+    _scan_wavefront,
+    entry_order_rank,
+    paths_from_jobs,
+    simulate_chunk_arrays,
+)
+from repro.netsim.topology import RailTopology
+
+M, N = 4, 4
+B = 8 * 2**20
+CHUNK = 1 * 2**20
+
+ALL_POLICIES = ("ecmp", "plb", "minrtt", "reps", "rails")
+
+
+def _workloads():
+    return {
+        "uniform": uniform_workload(M, N, bytes_per_pair=B),
+        "sparse04": sparse_topk_workload(M, N, sparsity=0.4, bytes_per_pair=B, seed=1),
+        "sender_skew": sender_skew_workload(M, N, total_bytes=B * 16, seed=1),
+        "recv_skew": receiver_skew_workload(M, N, total_bytes=B * 16, seed=1),
+        "mixtral_sparse": mixtral_trace_workload(
+            M, N, phase="stable", mode="sparse", seed=2
+        ),
+    }
+
+
+# -- golden backend parity ----------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_vector_matches_event_all_policies(policy):
+    """Vector CCT == event CCT within fp tolerance, every policy/workload.
+
+    Covers both path families: rails/minrtt take 2-link rail paths, the
+    others mix 2-link (same-rail) and 4-link spine paths. Makespan is
+    pinned at fp tolerance everywhere, and rail-path policies are pinned
+    bit-exact below. Spine policies' CCT stats get 2e-3: equal-size chunks
+    at t=0 make event times massively degenerate, and on 4-hop cascades
+    the engine's global sequence counter can order a handful of
+    exactly-simultaneous service grants differently than the vector tie
+    model — a different choice among equally valid FIFO schedules that
+    shifts a few flows by one service quantum. With non-degenerate inputs
+    (randomized sizes/releases below) parity is 1e-12 on every path shape.
+    """
+    for name, tm in _workloads().items():
+        e = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3, backend="event")
+        v = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3, backend="vector")
+        assert np.isclose(v.makespan, e.makespan, rtol=1e-9), (policy, name)
+        cct_rtol = 1e-9 if policy in ("rails", "minrtt") else 2e-3
+        for key, val in e.cct.items():
+            assert np.isclose(v.cct[key], val, rtol=cct_rtol, atol=1e-15), (
+                policy, name, key,
+            )
+        np.testing.assert_allclose(v.nic_tx, e.nic_tx, rtol=1e-9)
+        np.testing.assert_allclose(v.nic_rx, e.nic_rx, rtol=1e-9)
+        assert np.isclose(v.send_mse, e.send_mse, rtol=1e-6, atol=1e-12)
+        assert np.isclose(v.recv_mse, e.recv_mse, rtol=1e-6, atol=1e-12)
+
+
+@pytest.mark.parametrize("policy", ("rails", "minrtt"))
+def test_vector_bit_exact_rail_paths(policy):
+    """Rail-path policies (2-link paths, uniform chunk waves): bit-exact."""
+    for name, tm in _workloads().items():
+        e = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3, backend="event")
+        v = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3, backend="vector")
+        assert v.makespan == e.makespan, (policy, name)
+        assert v.cct == e.cct, (policy, name)
+
+
+def test_vector_bit_exact_uniform_rails():
+    """The uniform one-shot collective — every wave ties — is bit-exact."""
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    e = run_collective(tm, "rails", chunk_bytes=CHUNK, backend="event")
+    v = run_collective(tm, "rails", chunk_bytes=CHUNK, backend="vector")
+    assert v.makespan == e.makespan
+    assert v.cct == e.cct
+
+
+def test_coalesce_defaults_to_event_backend():
+    """Flowlet coalescing is an event-engine approximation: it resolves to
+    the event backend by default, and explicitly asking for the vector
+    backend alongside it is an error (as in run_streaming_collective)."""
+    tm = uniform_workload(2, 2, bytes_per_pair=CHUNK)
+    merged = run_collective(tm, "rails", chunk_bytes=CHUNK, coalesce=True)
+    exact = run_collective(tm, "rails", chunk_bytes=CHUNK, backend="event")
+    assert merged.makespan == exact.makespan  # single-chunk lanes: no merge
+    with pytest.raises(ValueError, match="coalesc"):
+        run_collective(
+            tm, "rails", chunk_bytes=CHUNK, coalesce=True, backend="vector"
+        )
+
+
+def test_unknown_backend_rejected():
+    tm = uniform_workload(2, 2, bytes_per_pair=CHUNK)
+    with pytest.raises(ValueError, match="backend"):
+        run_collective(tm, "rails", chunk_bytes=CHUNK, backend="gpu")
+
+
+# -- randomized release times (direct harness) --------------------------------
+
+
+class _FixedPathPolicy(Policy):
+    """Deterministic per-chunk path table — isolates the simulators."""
+
+    name = "fixed"
+
+    def __init__(self, topo, paths):
+        super().__init__(topo)
+        self._paths = paths
+
+    def choose_path(self, eng, job):
+        return self._paths[job.chunk_id]
+
+
+def _random_jobs(topo, rng, num_chunks, spine_fraction=0.0, max_release=1e-3):
+    """Random sizes/releases + a fixed random path per chunk."""
+    jobs: dict = {}
+    paths = {}
+    for cid in range(num_chunks):
+        d = int(rng.integers(topo.m))
+        g = int(rng.integers(topo.n))
+        fdom = int((d + 1 + rng.integers(topo.m - 1)) % topo.m)
+        gd = int(rng.integers(topo.n))
+        if rng.random() < spine_fraction and g != gd:
+            paths[cid] = topo.spine_path(d, fdom, g, gd, int(rng.integers(topo.num_spines)))
+        else:
+            paths[cid] = topo.rail_path(d, fdom, int(rng.integers(topo.n)))
+        jobs.setdefault((d, g), []).append(
+            ChunkJob(
+                chunk_id=cid,
+                flow_id=cid,
+                src_domain=d,
+                src_gpu=g,
+                dst_domain=fdom,
+                dst_gpu=gd,
+                size=float(rng.uniform(0.5, 2.0) * CHUNK),
+                arrival_time=float(rng.uniform(0.0, max_release)),
+            )
+        )
+    return jobs, paths
+
+
+@pytest.mark.parametrize("spine_fraction", [0.0, 0.5])
+def test_randomized_releases_match_engine(spine_fraction):
+    """Random sizes + random release times, rail and spine paths mixed:
+    per-chunk finish times match the event engine."""
+    topo = RailTopology(3, 3)
+    index = LinkIndex(topo)
+    for seed in (11, 12, 13):
+        # Two identical job sets: the engine mutates jobs in place.
+        jobs, paths = _random_jobs(
+            topo, np.random.default_rng(seed), 200, spine_fraction
+        )
+        jobs2, paths2 = _random_jobs(
+            topo, np.random.default_rng(seed), 200, spine_fraction
+        )
+        res_e = Engine(topo).run(jobs, _FixedPathPolicy(topo, paths))
+        finish_e = np.zeros(200)
+        for js in jobs.values():
+            for j in js:
+                finish_e[j.chunk_id] = j.finish_time
+        ordered = _FixedPathPolicy(topo, paths2).assign_batch(
+            Engine(topo), jobs2, now=0.0
+        )
+        lbl, rank = paths_from_jobs(ordered, index, 200)
+        size = np.zeros(200)
+        release = np.zeros(200)
+        for js in jobs2.values():
+            for j in js:
+                size[j.chunk_id] = j.size
+                release[j.chunk_id] = j.arrival_time
+        res_v = simulate_chunk_arrays(index, lbl, size, release, rank)
+        np.testing.assert_allclose(res_v.finish, finish_e, rtol=1e-12)
+        assert np.isclose(res_v.makespan, res_e.makespan, rtol=1e-12)
+        for link, volume in res_e.link_bytes.items():
+            assert np.isclose(res_v.link_bytes[link], volume, rtol=1e-9)
+
+
+# -- scan oracle cross-check --------------------------------------------------
+
+
+def _random_scan_case(rng, f, num_links, tie_pace):
+    link = rng.integers(0, num_links, f).astype(np.int16)
+    if tie_pace:
+        # equality-heavy: arrivals drawn from a tiny grid so many arrivals
+        # tie each other and the resulting completions
+        arrival = rng.integers(0, 4, f) * 1e-4
+        service = np.full(f, 1e-4)
+    else:
+        arrival = rng.uniform(0, 1e-3, f)
+        service = rng.uniform(1e-6, 1e-4, f)
+    ties = (
+        np.zeros(f, dtype=np.int64),
+        np.zeros(f, dtype=np.int64),
+        rng.permutation(f).astype(np.int64),
+    )
+    return link, arrival, service, ties
+
+
+@pytest.mark.parametrize("tie_pace", [False, True])
+def test_busy_period_scan_matches_wavefront_oracle(tie_pace):
+    """The production scan (busy-period decomposition + repair) must equal
+    the wavefront oracle bit for bit on random and equality-heavy inputs."""
+    rng = np.random.default_rng(5)
+    for _ in range(5):
+        link, arrival, service, ties = _random_scan_case(rng, 400, 7, tie_pace)
+        out1 = _scan_busy_periods(link, arrival, ties, service, True)
+        out2 = _scan_wavefront(link, arrival, ties, service, True)
+        for got, want in zip(out1, out2):
+            np.testing.assert_array_equal(got, want)
+
+
+def test_constant_release_partial_level_tie_ranks():
+    """Regression: at partial levels (l2s/s2l) the constant-release sort
+    key carries opener ranks from the previous level's *global* rank space,
+    which can exceed the level's job count — the composite key must scale
+    by the actual rank span or different links' queues interleave and
+    queued chunks get served in parallel."""
+    from repro.netsim.fastsim import _scan_constant_release
+
+    link = np.array([0, 0, 1], dtype=np.int16)
+    tie_c = np.array([0, 5, 1], dtype=np.int64)  # rank 5 >= f == 3
+    service = np.ones(3)
+    comp, start, _na, _nb, _nc = _scan_constant_release(
+        link, tie_c, service, 0.0, True, False
+    )
+    np.testing.assert_array_equal(comp, [1.0, 2.0, 1.0])
+    np.testing.assert_array_equal(start, [0.0, 1.0, 0.0])
+    # End-to-end shape that reaches this path: one equal-size message per
+    # sender, so every cross chunk hits its l2s link simultaneously.
+    tm = uniform_workload(4, 4, bytes_per_pair=4096.0)
+    e = run_collective(tm, "ecmp", chunk_bytes=8192.0, seed=3, backend="event")
+    v = run_collective(tm, "ecmp", chunk_bytes=8192.0, seed=3, backend="vector")
+    assert np.isclose(v.makespan, e.makespan, rtol=1e-9)
+
+
+# -- struct-of-arrays builders ------------------------------------------------
+
+
+def _build_jobs_reference(tm, chunk_bytes):
+    """The pre-vectorization build_jobs loop, kept as the parity oracle."""
+    jobs, chunk_id, flow_id = {}, 0, 0
+    m, n = tm.num_domains, tm.num_rails
+    for d in range(m):
+        for g in range(n):
+            sender_jobs = []
+            for f in range(m):
+                if f == d:
+                    continue
+                for gd in range(n):
+                    size = float(tm.d1[d, g, f, gd])
+                    if size <= 0:
+                        continue
+                    for part in split_message(size, chunk_bytes, d, f, g, flow_id):
+                        sender_jobs.append(
+                            ChunkJob(
+                                chunk_id=chunk_id, flow_id=flow_id,
+                                src_domain=d, src_gpu=g,
+                                dst_domain=f, dst_gpu=gd, size=part.size,
+                            )
+                        )
+                        chunk_id += 1
+                    flow_id += 1
+            if sender_jobs:
+                jobs[(d, g)] = sender_jobs
+    return jobs
+
+
+def test_build_jobs_matches_reference_loop():
+    for tm in (
+        uniform_workload(3, 2, bytes_per_pair=2.5 * CHUNK),
+        sparse_topk_workload(M, N, sparsity=0.4, bytes_per_pair=B, seed=4),
+    ):
+        got = build_jobs(tm, CHUNK)
+        ref = _build_jobs_reference(tm, CHUNK)
+        assert list(got) == list(ref)
+        for key in ref:
+            for a, b in zip(got[key], ref[key]):
+                assert (a.chunk_id, a.flow_id, a.src_domain, a.src_gpu,
+                        a.dst_domain, a.dst_gpu, a.size) == (
+                    b.chunk_id, b.flow_id, b.src_domain, b.src_gpu,
+                    b.dst_domain, b.dst_gpu, b.size,
+                )
+
+
+def test_split_sizes_vector_matches_split_message():
+    rng = np.random.default_rng(9)
+    sizes = np.concatenate([
+        rng.uniform(0, 5 * CHUNK, 50),
+        [0.0, CHUNK, 2.0 * CHUNK, CHUNK + 1e-13, 3 * CHUNK + 0.5],
+    ])
+    counts, flat = split_sizes_vector(sizes, CHUNK)
+    off = 0
+    for sz, cnt in zip(sizes, counts):
+        ref = [p.size for p in split_message(float(sz), CHUNK, 0, 1)]
+        assert len(ref) == cnt
+        assert flat[off:off + cnt].tolist() == ref
+        off += cnt
+    assert off == flat.size
+    with pytest.raises(ValueError):
+        split_sizes_vector(sizes, 0.0)
+
+
+def test_entry_order_matches_assign_batch():
+    """entry_order_rank replicates Policy.assign_batch round-robin order."""
+    tm = sparse_topk_workload(M, N, sparsity=0.4, bytes_per_pair=B, seed=1)
+    jobs = build_jobs(tm, CHUNK)
+    topo = RailTopology(M, N)
+    ja = build_job_arrays(tm, CHUNK)
+
+    class _Rail0(Policy):
+        def choose_path(self, eng, job):
+            return self.topo.rail_path(job.src_domain, job.dst_domain, 0)
+
+    ordered = _Rail0(topo).assign_batch(Engine(topo), jobs, now=0.0)
+    rank = entry_order_rank(ja.src_domain, ja.src_gpu, topo.n)
+    for i, job in enumerate(ordered):
+        assert rank[job.chunk_id] == i
+
+
+# -- streaming vector backend -------------------------------------------------
+
+
+def _stream(rounds=3, seed=1):
+    tms = microbatch_stream(M, N, rounds, bytes_per_pair=B / rounds, seed=seed)
+    gap = 0.5 * theorem2_optimal_time(tms[0].d2, N, 50e9)
+    releases = bursty_release_times(rounds, gap, seed=seed + 1)
+    return list(zip(releases, tms))
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_streaming_vector_bitmatches_event(window):
+    stream = _stream()
+    e = run_streaming_collective(
+        stream, "rails-online", chunk_bytes=CHUNK, window=window, backend="event"
+    )
+    v = run_streaming_collective(
+        stream, "rails-online", chunk_bytes=CHUNK, window=window, backend="vector"
+    )
+    assert v.metrics.makespan == e.metrics.makespan
+    assert v.metrics.cct == e.metrics.cct
+    assert v.round_cct == e.round_cct
+
+
+def test_streaming_vector_rejects_feedback_and_reactive():
+    stream = _stream()
+    with pytest.raises(ValueError, match="feedback-free"):
+        run_streaming_collective(
+            stream, "rails-online", chunk_bytes=CHUNK, feedback=True,
+            backend="vector",
+        )
+    with pytest.raises(ValueError, match="proactive"):
+        run_streaming_collective(
+            stream, "minrtt", chunk_bytes=CHUNK, backend="vector"
+        )
+
+
+# -- result-object guards -----------------------------------------------------
+
+
+def test_empty_collective_vector():
+    zero = uniform_workload(2, 2, bytes_per_pair=B)
+    zero.d1[:] = 0.0
+    zero.d2[:] = 0.0
+    m = run_collective(zero, "rails", chunk_bytes=CHUNK, backend="vector")
+    assert m.makespan == 0.0
+    assert m.cct["p99"] == 0.0 and m.cct["mean"] == 0.0
+
+
+def test_array_simresult_surface():
+    tm = uniform_workload(2, 2, bytes_per_pair=2 * CHUNK)
+    topo = RailTopology(2, 2)
+    index = LinkIndex(topo)
+    ja = build_job_arrays(tm, CHUNK)
+    from repro.netsim.balancers import RailSPolicy
+
+    lbl = RailSPolicy(topo).plan_arrays(ja, index)
+    rank = entry_order_rank(ja.src_domain, ja.src_gpu, topo.n)
+    res = simulate_chunk_arrays(
+        index, lbl, ja.size, ja.release, rank,
+        flow_id=ja.flow_id, round_id=ja.round_id,
+    )
+    assert isinstance(res, ArraySimResult)
+    assert res.makespan == res.finish.max()
+    assert set(res.flow_cct) == set(ja.flow_id.tolist())
+    assert res.round_completion_times() == {0: res.makespan}
+    pcts = res.cct_percentiles()
+    assert pcts["max"] == max(res.flow_cct.values())

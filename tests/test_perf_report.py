@@ -1,6 +1,8 @@
 """scripts/perf_report.py must tolerate partial result dirs (satellite):
 missing roofline blocks, absent dominant keys, and zero baselines used to
-KeyError / ZeroDivisionError."""
+KeyError / ZeroDivisionError. The netsim trajectory mode must key rows by
+(bench, backend, size) so event and vector measurements of one benchmark
+never overwrite each other."""
 
 import importlib.util
 import json
@@ -59,3 +61,45 @@ def test_report_handles_partial_and_zero_rooflines(tmp_path, capsys):
     assert "a__s" in out and "-20.0%" in out
     assert "b__s" in out and "n/a" in out
     assert "c__s" in out
+
+
+def _bench_doc(rev: str, rows: list[dict]) -> dict:
+    return {"schema": 1, "git_rev": rev, "rows": rows}
+
+
+def test_netsim_trajectory_keys_by_bench_backend_size(tmp_path, capsys):
+    """Event and vector rows of one bench — and one bench at two sizes —
+    must occupy distinct trajectory rows, across multiple snapshots."""
+    a = tmp_path / "a.json"
+    b = tmp_path / "b.json"
+    a.write_text(json.dumps(_bench_doc("rev_a", [
+        {"name": "scale_nodes512_chunks100000_event", "us_per_call": 2_000_000.0,
+         "derived": "46kchunks_per_s", "bench": "scale", "backend": "event",
+         "size": 100_000},
+        {"name": "scale_nodes512_chunks100000_vector", "us_per_call": 150_000.0,
+         "derived": "660kchunks_per_s", "bench": "scale", "backend": "vector",
+         "size": 100_000},
+        {"name": "scale_nodes512_chunks1000000_vector", "us_per_call": 440_000.0,
+         "derived": "2276kchunks_per_s", "bench": "scale", "backend": "vector",
+         "size": 1_000_000},
+        # pre-metadata snapshot row: falls back to the full name as key
+        {"name": "lp_eq24_simplex_M4N4", "us_per_call": 10.0, "derived": "x"},
+    ])))
+    b.write_text(json.dumps(_bench_doc("rev_b", [
+        {"name": "scale_nodes512_chunks100000_vector", "us_per_call": 140_000.0,
+         "derived": "714kchunks_per_s", "bench": "scale", "backend": "vector",
+         "size": 100_000},
+    ])))
+    perf_report.netsim_trajectory([str(a), str(b)])
+    out = capsys.readouterr().out
+    lines = [ln for ln in out.splitlines() if ln.startswith("| scale |")]
+    # 3 distinct (bench, backend, size) rows — nothing overwritten.
+    assert len(lines) == 3
+    assert any("| event | 100000 |" in ln for ln in lines)
+    assert any("| vector | 100000 |" in ln for ln in lines)
+    assert any("| vector | 1000000 |" in ln for ln in lines)
+    # both snapshots appear as columns; missing cells render n/a
+    assert "rev_a" in out and "rev_b" in out
+    vec_row = next(ln for ln in lines if "| vector | 100000 |" in ln)
+    assert "660kchunks_per_s" in vec_row and "714kchunks_per_s" in vec_row
+    assert "lp_eq24_simplex_M4N4" in out
