@@ -33,7 +33,14 @@ import numpy as np
 from repro.core.lpt import lpt_schedule, lpt_schedule_reference
 from repro.core.lp import closed_form_opt, solve_minmax_lp
 from repro.core.theorems import theorem2_optimal_time
-from repro.netsim import run_collective, run_policy_suite, run_streaming_collective
+from repro.netsim import (
+    FaultSpec,
+    LossConfig,
+    run_collective,
+    run_policy_suite,
+    run_streaming_collective,
+    step_profile,
+)
 from repro.sched import run_pipeline
 
 from . import paper_workloads as W
@@ -426,6 +433,67 @@ def bench_scale() -> None:
             )
 
 
+def bench_fault_sweep() -> None:
+    """Fabric-dynamics grid: loss rate × degradation depth × policy.
+
+    Each cell runs the same seeded streaming workload under a FaultSpec
+    combining Gilbert–Elliott chunk loss (go-back-N recovery) with one
+    rail stepping down mid-run, for proactive ``rails-online``+feedback vs
+    the reactive ``plb``/``reps`` baselines. Per-policy rows carry raw CCT
+    and retransmit counts; the per-cell ``ordering`` row (structured key
+    ``bench=fault_l<loss>_d<depth>``) tracks the reactive-over-rails CCT
+    ratios — the §VI-E margin — across the repo's perf trajectory.
+    """
+    rounds = 3 if W.QUICK else 6
+    tms = W.micro_stream(num_microbatches=rounds, seed=8)
+    mean_gap = 0.5 * theorem2_optimal_time(tms[0].d2, W.N, 50e9)
+    releases = W.bursty_releases(rounds, mean_gap, seed=9)
+    stream = list(zip(releases, tms))
+    t_mid = releases[rounds // 2]
+    losses = (0.0, 0.01) if W.QUICK else (0.0, 0.005, 0.02)
+    depths = (1.0, 0.5) if W.QUICK else (1.0, 0.5, 0.25)
+    for loss in losses:
+        for depth in depths:
+            def make_spec(loss=loss, depth=depth):
+                profiles = (
+                    {} if depth == 1.0 else {W.N - 1: step_profile(t_mid, depth)}
+                )
+                lcfg = (
+                    None
+                    if loss == 0.0
+                    else LossConfig(
+                        rate=loss, rto=5e-4, bad_rate=min(0.3, 30 * loss),
+                        p_enter_bad=0.02, p_leave_bad=0.3,
+                    )
+                )
+                return FaultSpec(rail_profiles=profiles, loss=lcfg, seed=11)
+
+            cell = f"fault_l{loss:g}_d{depth:g}"
+            cct, us_tot = {}, 0.0
+            for pol, fb in (("rails-online", True), ("plb", False), ("reps", False)):
+                res, us = _timed(
+                    lambda pol=pol, fb=fb: run_streaming_collective(
+                        stream, pol, chunk_bytes=W.CHUNK,
+                        fault_spec=make_spec(), feedback=fb,
+                    )
+                )
+                cct[pol] = res.metrics.makespan
+                us_tot += us
+                dyn = res.sim.dynamics or {}
+                _emit(
+                    f"{cell}_{pol}", us,
+                    f"cct={res.metrics.makespan:.4e}s"
+                    f"_retr={dyn.get('retransmits', 0)}",
+                )
+            rails = cct["rails-online"]
+            _emit(
+                f"{cell}_ordering", us_tot,
+                f"plb={cct['plb'] / rails:.3f}x"
+                f"_reps={cct['reps'] / rails:.3f}x_rails",
+                bench=cell, backend="event",
+            )
+
+
 def bench_online_window_sweep() -> None:
     """ROADMAP windowed re-planning sweep: CCT vs decision latency as the
     re-planning window goes 1 (greedy on arrival) → ∞ (whole-batch LPT),
@@ -505,6 +573,7 @@ BENCHES = {
     "online_degraded": bench_online_degraded,
     "online_replay": bench_online_replay,
     "online_window_sweep": bench_online_window_sweep,
+    "fault_sweep": bench_fault_sweep,
 }
 
 

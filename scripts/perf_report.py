@@ -3,6 +3,13 @@ render the netsim benchmark trajectory across BENCH_netsim.json snapshots.
 
     PYTHONPATH=src python scripts/perf_report.py results/perf
     PYTHONPATH=src python scripts/perf_report.py BENCH_a.json BENCH_b.json
+    PYTHONPATH=src python scripts/perf_report.py --fault-sweep BENCH_a.json ...
+
+``--fault-sweep`` restricts the trajectory to the fault-sweep grid (rows
+whose bench key starts with ``fault_``): one row per (loss rate ×
+degradation depth) cell and policy, so the §VI-E ordering margins —
+reactive-over-rails CCT ratios under loss + mid-run degradation — read as
+their own table across snapshots.
 
 Netsim trajectory rows are keyed by **(bench, backend, size)** — not by
 bench name alone — so the event and vector measurements of one benchmark
@@ -72,11 +79,13 @@ def _row_key(row: dict) -> tuple:
     )
 
 
-def netsim_trajectory(paths: list[str]) -> None:
+def netsim_trajectory(paths: list[str], bench_prefix: str | None = None) -> None:
     """Markdown trajectory across BENCH_netsim.json snapshots.
 
     One row per (bench, backend, size) key; one column pair per snapshot
     (us_per_call + derived), labelled by git revision when recorded.
+    ``bench_prefix`` restricts to rows whose bench key starts with it
+    (``fault_`` renders the fault-sweep grid on its own).
     """
     columns: list[str] = []
     table: dict[tuple, dict[str, dict]] = defaultdict(dict)
@@ -89,6 +98,8 @@ def netsim_trajectory(paths: list[str]) -> None:
         columns.append(label)
         for row in doc.get("rows", []):
             key = _row_key(row)
+            if bench_prefix is not None and not str(key[0]).startswith(bench_prefix):
+                continue
             table[key][label] = row
             names.setdefault(key, row["name"])
     header = "| bench | backend | size | " + " | ".join(
@@ -113,7 +124,11 @@ def netsim_trajectory(paths: list[str]) -> None:
 
 if __name__ == "__main__":
     args = sys.argv[1:]
+    fault_sweep = "--fault-sweep" in args
+    args = [a for a in args if a != "--fault-sweep"]
     if args and all(a.endswith(".json") for a in args):
-        netsim_trajectory(args)
+        netsim_trajectory(args, bench_prefix="fault_" if fault_sweep else None)
+    elif fault_sweep:
+        raise SystemExit("--fault-sweep needs one or more BENCH_*.json paths")
     else:
         main(args[0] if args else "results/perf")

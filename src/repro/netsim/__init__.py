@@ -10,7 +10,11 @@ control plane (`balancers`), and the paper's metrics (`metrics`).
 `simulate.run_collective` is the offline benchmark entry point (with a
 `backend={"event","vector"}` switch); `simulate.run_streaming_collective`
 is its online counterpart (release times, rail-health feedback, telemetry
-observers — see `repro.sched`).
+observers — see `repro.sched`). The pluggable link-dynamics layer
+(`linkmodel`) turns the frozen fabric into a scenario generator: per-link
+rate profiles (step degradation, flapping optics), PFC pause, ECN marking
+with sender rate cuts, and Gilbert–Elliott chunk loss with go-back-N
+recovery, all switched through a `FaultSpec` on the run drivers.
 """
 
 from .balancers import (
@@ -25,6 +29,21 @@ from .balancers import (
     make_policy,
 )
 from .events import ChunkJob, Engine, SimResult
+from .linkmodel import (
+    CONSTANT,
+    ConstantRate,
+    EcnConfig,
+    FaultSpec,
+    GilbertElliott,
+    LinkModel,
+    LossConfig,
+    PfcConfig,
+    PiecewiseRate,
+    as_link_model,
+    flapping_profile,
+    speeds_at,
+    step_profile,
+)
 from .fastsim import (
     ArraySimResult,
     JobArrays,

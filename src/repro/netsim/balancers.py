@@ -28,6 +28,15 @@ explicitly:
   EWMA rail-health feedback and a routing-replay forecast of bytes still
   to come. With every chunk released at t=0 and no feedback it reproduces
   RailS exactly (the offline-parity anchor).
+
+Under fabric dynamics (:mod:`repro.netsim.linkmodel`) the reactive
+policies' shared estimate — ``Engine.path_delay`` — additionally folds in
+recent ECN marks (stale, refreshed on the probe-snapshot cadence) and live
+PFC pause assertions. PLB's repath trigger, MinRTT's subflow choice and
+REPS's congestion flag thereby react to mark/pause signals instead of only
+backlog; because every sender reads the same stale signals at once, they
+herd exactly the way the paper's §VI-E testbed shows, while the proactive
+RailS plans are untouched by the noise.
 """
 
 from __future__ import annotations

@@ -50,6 +50,36 @@ an uncontended lane and a close approximation under contention; observers
 see the merged flowlet, not its members. With coalescing off (the
 default) the simulation is event-for-event identical to the reference
 semantics — `run_streaming` bit-matches `run` for t=0 releases.
+
+**Link dynamics** (:mod:`repro.netsim.linkmodel`). When the topology
+carries a non-static :class:`~repro.netsim.linkmodel.FaultSpec`, the
+network switches to a second event loop (``_run_dyn``) implementing the
+full dynamics contract — the static loop is never entered, so frozen
+fabrics stay bit-exact and pay nothing:
+
+* service times consult each link's :class:`LinkModel` (piecewise-constant
+  rate profiles integrate over their segments);
+* **PFC** — a link whose queued bytes reach ``pause_bytes`` asserts pause;
+  an upstream link about to serve a chunk *into* it stalls entirely
+  (head-of-line blocking) until the backlog drains to ``resume_bytes``;
+* **ECN** — chunks entering a queue above ``mark_bytes`` are marked; on
+  delivery of a marked chunk the sender's pacing factor takes a
+  multiplicative cut that slows its future first-hop serialization;
+* **loss + go-back-N** — each completed link service draws from a seeded
+  per-link Gilbert–Elliott chain; a lost chunk vanishes (wire bytes spent)
+  and re-enters its first hop ``rto`` seconds later, and a receiver holding
+  an earlier outstanding loss on the same transport lane — (flow, source
+  NIC), the testbed's per-rail RC-QP granularity — discards later chunks
+  of that lane (go-back-N in-order delivery), which become outstanding
+  themselves and are retransmitted too.
+
+Retransmissions are a fourth event source (a deque — detection times are
+produced in non-decreasing event order and ``rto`` is constant, so it
+stays sorted). Mark/drop/pause events reach observers through
+``record_mark`` / ``record_drop`` / ``record_pause`` callbacks, and the
+reactive policies' ``path_delay`` folds recent-mark and live-pause
+penalties into its estimate — the stale congestion signals that make
+reactive schemes herd in §VI-E.
 """
 
 from __future__ import annotations
@@ -62,6 +92,7 @@ from collections import deque
 
 import numpy as np
 
+from .linkmodel import GilbertElliott
 from .topology import RailTopology
 
 __all__ = ["ChunkJob", "SimResult", "Engine", "cct_percentile_dict"]
@@ -111,6 +142,9 @@ class ChunkJob:
     path: list[str] | None = None
     start_time: float = 0.0
     finish_time: float = 0.0
+    # Dynamics bookkeeping (only touched by the dynamic event loop):
+    ecn_marked: bool = False
+    retries: int = 0
 
 
 class _Flowlet:
@@ -150,6 +184,9 @@ class SimResult:
     link_bytes: dict[str, float]
     makespan: float
     flow_cct: dict[int, float]  # per parent-flow completion time
+    # Fabric-dynamics summary (drops / retransmits / marks / pause time);
+    # None for static fabrics, where none of these mechanisms exist.
+    dynamics: dict | None = None
 
     def cct_percentiles(self, qs=(50.0, 80.0, 95.0, 99.0)) -> dict[str, float]:
         return cct_percentile_dict(list(self.flow_cct.values()), qs)
@@ -194,6 +231,15 @@ class _FifoNetwork:
         self.injections: deque = deque()  # (t, seq, job)
         self._seq = itertools.count()
         self.now = 0.0
+        self.dyn = engine._dynamic
+        if self.dyn:
+            self.link_model = {k: l.model for k, l in topo.links.items()}
+            self.queued_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
+            self.retrans: deque = deque()  # (t, seq, job) — 4th event source
+            self.asserted: dict[str, float] = {}  # paused link -> assert time
+            self.waiters: dict[str, list[str]] = {}  # paused -> stalled upstream
+            self.stalled: dict[str, tuple] = {}  # upstream -> (job, hop, since)
+            self.loss_chains: dict[str, GilbertElliott] = {}
 
     def inject(self, job, t: float) -> None:
         t = max(t, job.arrival_time)
@@ -220,7 +266,11 @@ class _FifoNetwork:
     def _run(self, horizon: float | None) -> None:
         """The event loop: pop (time, seq)-ordered events until ``horizon``
         (exclusive; ``None`` = until idle). Locals are bound once — this
-        loop runs once per chunk-hop arrival and once per service finish."""
+        loop runs once per chunk-hop arrival and once per service finish.
+        Fabrics with a non-static fault spec run the dynamic loop instead;
+        this static loop is byte-for-byte the pre-dynamics engine."""
+        if self.dyn:
+            return self._run_dyn(horizon)
         finishes = self.finishes
         arrivals = self.hop_arrivals
         injections = self.injections
@@ -285,6 +335,217 @@ class _FifoNetwork:
                 else:
                     start(link, job, hop, t)
 
+    # -- dynamic event loop (link models + PFC/ECN/loss) ---------------------
+
+    def _run_dyn(self, horizon: float | None) -> None:
+        """Dynamics-aware event loop: four (time, seq)-merged sources —
+        service finishes (heap), hop arrivals, injections, and scheduled
+        retransmissions (deques, produced in non-decreasing time order)."""
+        finishes = self.finishes
+        arrivals = self.hop_arrivals
+        injections = self.injections
+        retrans = self.retrans
+        heappop = heapq.heappop
+        bound = _INF if horizon is None else horizon
+        while True:
+            t_n, s_n, src = _INF, 0, -1
+            if finishes:
+                t_n, s_n, src = finishes[0][0], finishes[0][1], 0
+            for cand, tag in ((arrivals, 1), (injections, 2), (retrans, 3)):
+                if cand:
+                    t_c, s_c = cand[0][0], cand[0][1]
+                    if t_c < t_n or (t_c == t_n and s_c < s_n):
+                        t_n, s_n, src = t_c, s_c, tag
+            if t_n >= bound:
+                return
+            if src == 0:
+                self._finish_dyn(heappop(finishes))
+            elif src == 1:
+                t, _s, job, hop = arrivals.popleft()
+                self.now = t
+                self._arrive_dyn(job.path[hop], job, hop, t)
+            else:
+                if src == 2:
+                    t, _s, job = injections.popleft()
+                else:
+                    t, _s, job = retrans.popleft()
+                self.now = t
+                self._arrive_dyn(job.path[0], job, 0, t)
+
+    def _arrive_dyn(self, link: str, job, hop: int, t: float) -> None:
+        """Chunk reaches a link's ingress: ECN-mark against the current
+        backlog, update PFC assertion, then serve or queue."""
+        eng = self.eng
+        backlog = self.queued_bytes[link]
+        ecn = eng._ecn
+        if ecn is not None and backlog >= ecn.mark_bytes and not job.ecn_marked:
+            job.ecn_marked = True
+            eng.ecn_marks[link] += 1
+            for cb in eng._mark_cbs:
+                cb(link, t, job)
+        self.queued_bytes[link] = backlog + job.size
+        pfc = eng._pfc
+        if (
+            pfc is not None
+            and link not in self.asserted
+            and backlog + job.size >= pfc.pause_bytes
+        ):
+            self.asserted[link] = t
+            eng.paused_links.add(link)
+        if self.link_busy[link] or link in self.stalled:
+            self.link_queue[link].append((job, hop))
+        else:
+            self._try_start_dyn(link, job, hop, t)
+
+    def _try_start_dyn(self, link: str, job, hop: int, t: float) -> None:
+        """Start service unless PFC blocks it: a chunk headed into a
+        pause-asserting link stalls its whole upstream link (head-of-line
+        blocking — everything queued behind it waits too)."""
+        eng = self.eng
+        path = job.path
+        if eng._pfc is not None and hop + 1 < len(path):
+            nxt = path[hop + 1]
+            if nxt in self.asserted:
+                self.stalled[link] = (job, hop, t)
+                self.waiters.setdefault(nxt, []).append(link)
+                return
+        self.link_busy[link] = True
+        size = job.size
+        if hop == 0:
+            if job.retries == 0:
+                job.start_time = t
+            # Sender pacing: the ECN rate cut stretches the NIC's effective
+            # serialization time for this sender's subsequent chunks.
+            if eng._ecn is not None:
+                f = eng.sender_factor.get((job.src_domain, job.src_gpu), 1.0)
+                if f < 1.0:
+                    size = size / f
+        finish = self.link_model[link].service_finish(t, size, self.link_rate[link])
+        eng.link_bytes[link] += job.size
+        heapq.heappush(
+            self.finishes, (finish, next(self._seq), job, hop, link, t)
+        )
+
+    def _finish_dyn(self, ev) -> None:
+        """One service completion under dynamics: deassert PFC if drained,
+        draw the loss chain, forward / deliver / retransmit, pull the next
+        queued chunk."""
+        t, _s, job, hop, link, started = ev
+        eng = self.eng
+        self.now = t
+        self.link_busy[link] = False
+        self.queued_bytes[link] -= job.size
+        eng.transmitted_bytes[link] += job.size
+        if eng._service_cbs:
+            for cb in eng._service_cbs:
+                cb(link, started, t, job)
+        pfc = eng._pfc
+        if (
+            pfc is not None
+            and link in self.asserted
+            and self.queued_bytes[link] <= pfc.resume_bytes
+        ):
+            since = self.asserted.pop(link)
+            eng.paused_links.discard(link)
+            eng.pause_time[link] = eng.pause_time.get(link, 0.0) + (t - since)
+            for cb in eng._pause_cbs:
+                cb(link, since, t)
+            # Resume stalled upstream links in sorted order (deterministic).
+            for up in sorted(self.waiters.pop(link, ())):
+                held = self.stalled.pop(up, None)
+                if held is not None:
+                    job2, hop2, since2 = held
+                    eng.stall_time[up] = eng.stall_time.get(up, 0.0) + (t - since2)
+                    self._try_start_dyn(up, job2, hop2, t)
+        loss = eng._loss
+        lost = False
+        if loss is not None and (loss.links == "all" or eng._nic_link[link]):
+            chain = self.loss_chains.get(link)
+            if chain is None:
+                chain = self.loss_chains[link] = GilbertElliott(loss)
+            lost = chain.draw(eng.fault_rng)
+        if lost:
+            # The wire time was spent; the chunk vanishes and re-enters its
+            # first hop once the sender's retransmission timer fires. The
+            # links it already crossed (and will cross again) re-absorb its
+            # bytes into the assigned ledger so backlog estimates stay
+            # consistent — without this, retransmissions push transmitted
+            # past assigned and lossy links read as permanently idle to
+            # the reactive policies.
+            eng.drops[link] = eng.drops.get(link, 0) + 1
+            lane = (job.flow_id, job.path[0])
+            eng._lane_outstanding.setdefault(lane, set()).add(job.chunk_id)
+            for cb in eng._drop_cbs:
+                cb(link, t, job)
+            assigned = eng.assigned_bytes
+            for crossed in job.path[: hop + 1]:
+                assigned[crossed] += job.size
+            job.retries += 1
+            job.ecn_marked = False
+            self.retrans.append((t + loss.rto, next(self._seq), job))
+        elif hop + 1 < len(job.path):
+            self.hop_arrivals.append(
+                (t + eng.hop_latency, next(self._seq), job, hop + 1)
+            )
+        else:
+            self._deliver_dyn(job, t)
+        q = self.link_queue[link]
+        if q and not self.link_busy[link] and link not in self.stalled:
+            job2, hop2 = q.popleft()
+            self._try_start_dyn(link, job2, hop2, t)
+
+    def _deliver_dyn(self, job, t: float) -> None:
+        """Receiver side: go-back-N in-order delivery + ECN echo.
+
+        Sequencing is per transport *lane* — (flow, source NIC), the RC-QP
+        granularity of the paper's SoftRoCE testbed, where each rail pair
+        runs its own queue pair. A chunk arriving while an earlier chunk
+        of its lane is still outstanding (lost, not yet redelivered) is
+        discarded — go-back-N receivers reject out-of-order data — becomes
+        outstanding itself (nothing behind it lands either), and its
+        retransmission is scheduled. In-order chunks deliver exactly once
+        and feed the sender's ECN pacing factor (cut on marked, additive
+        recovery)."""
+        eng = self.eng
+        lane = (job.flow_id, job.path[0])
+        outstanding = eng._lane_outstanding.get(lane)
+        loss = eng._loss
+        if (
+            loss is not None
+            and outstanding
+            and min(outstanding) < job.chunk_id
+        ):
+            outstanding.add(job.chunk_id)
+            eng.gbn_discards += 1
+            job.retries += 1
+            job.ecn_marked = False
+            assigned = eng.assigned_bytes
+            for crossed in job.path:
+                assigned[crossed] += job.size
+            self.retrans.append((t + loss.rto, next(self._seq), job))
+            return
+        if outstanding is not None:
+            outstanding.discard(job.chunk_id)
+            if not outstanding:
+                del eng._lane_outstanding[lane]
+        job.finish_time = t
+        eng.delivered_chunks += 1
+        eng.goodput_bytes += job.size
+        ecn = eng._ecn
+        if ecn is not None:
+            key = (job.src_domain, job.src_gpu)
+            f = eng.sender_factor.get(key, 1.0)
+            if job.ecn_marked:
+                f = max(ecn.min_factor, f * ecn.cut)
+                if f < eng.min_sender_factor:
+                    eng.min_sender_factor = f
+            elif f < 1.0:
+                f = min(1.0, f + ecn.recover)
+            eng.sender_factor[key] = f
+        if eng._completion_cbs:
+            for cb in eng._completion_cbs:
+                cb(job, t)
+
 
 class Engine:
     def __init__(
@@ -305,16 +566,68 @@ class Engine:
         self.transmitted_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
         self._snapshot: dict[str, float] = dict(self.assigned_bytes)
         self.link_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
-        # Pre-parsed link metadata: the up-link's domain (or -1) and the
-        # rate, so the per-chunk estimate path never splits strings.
+        # Pre-parsed link metadata: the up-link's domain (or -1), the rate
+        # and the NIC-lane flag, so the per-chunk estimate path and the
+        # loss filter never split strings.
         self._up_domain: dict[str, int] = {}
         self._link_rate: dict[str, float] = {}
+        self._nic_link: dict[str, bool] = {}
         for name, link in topo.links.items():
             parts = name.split(":")
             self._up_domain[name] = int(parts[1]) if parts[0] == "up" else -1
             self._link_rate[name] = link.rate
+            self._nic_link[name] = parts[0] in ("up", "down")
         self._decisions = 0
         self._flowlets: list[_Flowlet] = []
+        # Fabric dynamics (repro.netsim.linkmodel): active only when the
+        # topology carries a non-static FaultSpec. The static hot path pays
+        # one falsy check at construction and nothing per event.
+        spec = topo.fault_spec
+        self._dynamic = topo.has_dynamics
+        self._pfc = spec.pfc if self._dynamic else None
+        self._ecn = spec.ecn if self._dynamic else None
+        self._loss = spec.loss if self._dynamic else None
+        self._signals = self._pfc is not None or self._ecn is not None
+        if self._dynamic:
+            if coalesce_flowlets:
+                raise ValueError(
+                    "flowlet coalescing merges service events; fabric "
+                    "dynamics (time-varying rails, PFC/ECN/loss) need "
+                    "per-chunk services — drop coalesce=True or the "
+                    "fault_spec"
+                )
+            # Fault-layer RNG is decoupled from the policy seed so one
+            # fault realization replays identically across policies.
+            self.fault_rng = np.random.default_rng(spec.seed)
+            self.ecn_marks: dict[str, int] = {k: 0 for k in topo.links}
+            self.drops: dict[str, int] = {}
+            self.pause_time: dict[str, float] = {}
+            self.stall_time: dict[str, float] = {}
+            self.paused_links: set[str] = set()
+            self.sender_factor: dict[tuple[int, int], float] = {}
+            # Go-back-N windows keyed by transport lane (flow, first-hop
+            # link) — the per-rail RC-QP granularity of the testbed.
+            self._lane_outstanding: dict[tuple[int, str], set[int]] = {}
+            self.gbn_discards = 0
+            self.delivered_chunks = 0
+            self.goodput_bytes = 0.0
+            # Deepest ECN cut any sender took (end-of-run factors recover
+            # additively and would hide it).
+            self.min_sender_factor = 1.0
+            # Stale mark counts (refreshed with the backlog snapshot) plus
+            # per-link penalty scales for the reactive-policy signals.
+            self._recent_marks: dict[str, int] = {}
+            self._marks_at_snapshot: dict[str, int] = {}
+            self._ecn_delay = (
+                {k: self._ecn.mark_bytes / r for k, r in self._link_rate.items()}
+                if self._ecn is not None
+                else {}
+            )
+            self._pause_delay = (
+                {k: self._pfc.pause_bytes / r for k, r in self._link_rate.items()}
+                if self._pfc is not None
+                else {}
+            )
         # Observers receive (link, start, end, job) service intervals and
         # (job, t) completions — telemetry and feedback estimators hook
         # here. Callbacks are resolved once so the no-observer hot path is
@@ -322,6 +635,9 @@ class Engine:
         self.observers: list = []
         self._service_cbs: list = []
         self._completion_cbs: list = []
+        self._mark_cbs: list = []
+        self._drop_cbs: list = []
+        self._pause_cbs: list = []
         for obs in observers:
             self.add_observer(obs)
 
@@ -335,6 +651,16 @@ class Engine:
         record = getattr(obs, "record_completion", None)
         if record is not None:
             self._completion_cbs.append(record)
+        # Dynamics events: ECN marks, chunk drops, PFC pause intervals.
+        record = getattr(obs, "record_mark", None)
+        if record is not None:
+            self._mark_cbs.append(record)
+        record = getattr(obs, "record_drop", None)
+        if record is not None:
+            self._drop_cbs.append(record)
+        record = getattr(obs, "record_pause", None)
+        if record is not None:
+            self._pause_cbs.append(record)
 
     def _notify_service(self, link: str, start: float, end: float, job) -> None:
         for cb in self._service_cbs:
@@ -361,7 +687,10 @@ class Engine:
 
     def path_delay(self, path: list[str], src_domain: int, now: float = 0.0) -> float:
         """Estimated waiting along a path: fresh for the sender's own
-        up-links, stale snapshot for everything remote."""
+        up-links, stale snapshot for everything remote. Under fabric
+        dynamics the estimate also folds in the congestion-control signals
+        a real reactive transport would see — recent ECN marks (stale, via
+        the probe snapshot) and live PFC pause assertions."""
         assigned = self.assigned_bytes
         transmitted = self.transmitted_bytes
         snapshot = self._snapshot
@@ -375,7 +704,33 @@ class Engine:
                 backlog = snapshot[link]
             if backlog > 0.0:
                 total += backlog / rate[link]
+        if self._signals:
+            total += self._signal_delay(path)
         return total
+
+    def _signal_delay(self, path: list[str]) -> float:
+        """Mark/pause penalty in seconds for a candidate path.
+
+        ECN: recent marks (since the last probe snapshot — the same
+        staleness as the backlog view) scaled by the queue-drain time the
+        mark threshold represents. PFC: a currently-asserting link costs a
+        full pause backlog's drain time. Every sender sees the same stale
+        signals at once, which is exactly what makes reactive schemes herd
+        (§VI-E)."""
+        pen = 0.0
+        recent = self._recent_marks
+        if self._ecn is not None and recent:
+            probe = self.probe_every
+            ecn_delay = self._ecn_delay
+            for link in path:
+                m = recent.get(link)
+                if m:
+                    pen += (m / probe) * ecn_delay[link]
+        if self._pfc is not None and self.paused_links:
+            for link in path:
+                if link in self.paused_links:
+                    pen += self._pause_delay[link]
+        return pen
 
     def _commit(self, job, path: list[str]) -> None:
         job.path = path
@@ -387,6 +742,13 @@ class Engine:
         if self._decisions % self.probe_every == 0:
             transmitted = self.transmitted_bytes
             self._snapshot = {k: assigned[k] - transmitted[k] for k in assigned}
+            if self._ecn is not None:
+                # Refresh the stale mark view on the same probe cadence.
+                prev = self._marks_at_snapshot
+                self._recent_marks = {
+                    k: v - prev.get(k, 0) for k, v in self.ecn_marks.items() if v
+                }
+                self._marks_at_snapshot = dict(self.ecn_marks)
 
     # -- flowlet coalescing ---------------------------------------------------
 
@@ -492,4 +854,23 @@ class Engine:
             link_bytes=dict(self.link_bytes),
             makespan=makespan,
             flow_cct=flow_cct,
+            dynamics=self._dynamics_summary(),
         )
+
+    def _dynamics_summary(self) -> dict | None:
+        """Fabric-dynamics telemetry for the finished run (None = static)."""
+        if not self._dynamic:
+            return None
+        drops = sum(self.drops.values())
+        return {
+            "drops": drops,
+            "gbn_discards": self.gbn_discards,
+            "retransmits": drops + self.gbn_discards,
+            "ecn_marks": sum(self.ecn_marks.values()),
+            "pause_time": sum(self.pause_time.values()),
+            "stall_time": sum(self.stall_time.values()),
+            "delivered_chunks": self.delivered_chunks,
+            "goodput_bytes": self.goodput_bytes,
+            "wire_bytes": sum(self.link_bytes.values()),
+            "min_sender_factor": self.min_sender_factor,
+        }

@@ -84,6 +84,12 @@ class LinkIndex:
     """
 
     def __init__(self, topo: RailTopology):
+        if topo.has_dynamics:
+            raise ValueError(
+                "vector backend supports constant-profile link models only; "
+                "time-varying rails and PFC/ECN/loss need the event engine "
+                "(backend='event')"
+            )
         self.topo = topo
         names = list(topo.links)
         self.names = names

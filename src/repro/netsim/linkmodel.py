@@ -1,0 +1,385 @@
+"""Pluggable link-dynamics layer: the fabric stops being a frozen pipe.
+
+The paper's testbed results (§VI-E) hinge on fabric *dynamics*: reactive
+baselines herd because their congestion signals are stale and lossy, while
+RailS's proactive spraying stays balanced. A static ``Link(name, rate)``
+cannot express any of that, so every link now carries a :class:`LinkModel`
+handle and the whole stack (topology → engine → policies → feedback)
+consults it. Four mechanisms, each independently switchable through a
+:class:`FaultSpec`:
+
+* **Time-varying rates** — :class:`PiecewiseRate`: a piecewise-constant
+  rate-factor profile (step degradation via :func:`step_profile`, periodic
+  flapping optics via :func:`flapping_profile`). The static ``rail_speeds``
+  scalar is absorbed as the degenerate case: a :class:`ConstantRate` whose
+  factor is pre-folded into ``Link.rate`` — so a constant-profile fabric is
+  *bit-exact* with the pre-dynamics simulator on both backends.
+* **PFC pause frames** (:class:`PfcConfig`) — a link whose ingress backlog
+  crosses ``pause_bytes`` asserts pause; upstream links whose head-of-queue
+  chunk targets it stall entirely (head-of-line blocking) until the backlog
+  drains below ``resume_bytes``.
+* **ECN marking** (:class:`EcnConfig`) — chunks entering a queue above
+  ``mark_bytes`` are marked; on delivery of a marked chunk the *sender*
+  applies a multiplicative rate cut (DCTCP-style), recovering additively on
+  unmarked deliveries. Marked/paused links also feed the reactive policies'
+  path estimates — the stale herding signal of §VI-E.
+* **Chunk loss + go-back-N** (:class:`LossConfig`) — i.i.d. or bursty
+  (Gilbert–Elliott) loss per link service; a lost chunk is retransmitted
+  from the source after ``rto`` seconds, and a receiver holding an earlier
+  outstanding loss discards later chunks of the same flow (go-back-N
+  in-order delivery), triggering their retransmission too.
+
+Only the event engine (:mod:`repro.netsim.events`) implements the dynamic
+behaviours; the vector backend rejects any non-static spec with an error
+naming the event fallback. A fully static spec (constant profiles, no
+PFC/ECN/loss) costs nothing: the engine never enters its dynamic loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = [
+    "LinkModel",
+    "ConstantRate",
+    "CONSTANT",
+    "PiecewiseRate",
+    "step_profile",
+    "flapping_profile",
+    "as_link_model",
+    "speeds_at",
+    "PfcConfig",
+    "EcnConfig",
+    "LossConfig",
+    "GilbertElliott",
+    "FaultSpec",
+]
+
+_INF = float("inf")
+
+
+class LinkModel:
+    """Protocol for per-link rate dynamics.
+
+    A model answers two questions: what is the link's rate *factor*
+    (relative to the link's static ``rate``) at time ``t``, and when does a
+    transmission of ``size`` bytes starting at ``t`` finish. Constant
+    models short-circuit to ``t + size / rate`` — the exact float op the
+    static engine performs — so attaching them is free.
+    """
+
+    is_constant = True
+
+    def factor_at(self, t: float) -> float:
+        return 1.0
+
+    def next_change(self, t: float) -> float:
+        """First instant strictly after ``t`` where the factor changes."""
+        return _INF
+
+    def service_finish(self, start: float, size: float, rate: float) -> float:
+        """Completion time of ``size`` bytes starting service at ``start``.
+
+        ``rate`` is the link's static rate (any constant speed factor is
+        already folded into it by the topology).
+        """
+        return start + size / rate
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantRate(LinkModel):
+    """Degenerate profile: a fixed speed factor.
+
+    ``rail_speeds`` entries become ``ConstantRate(s)`` models whose factor
+    the topology pre-folds into ``Link.rate`` — ``service_finish`` is the
+    inherited ``start + size / rate``, bit-identical to the static engine.
+    """
+
+    factor: float = 1.0
+
+    def __post_init__(self):
+        if not self.factor > 0.0:
+            raise ValueError("rate factor must be positive")
+
+    def factor_at(self, t: float) -> float:
+        return self.factor
+
+
+#: Shared do-nothing model for frozen links (factor 1.0, pre-folded rates).
+CONSTANT = ConstantRate(1.0)
+
+
+class PiecewiseRate(LinkModel):
+    """Piecewise-constant rate-factor profile.
+
+    ``breakpoints`` are strictly increasing times; ``factors`` has one more
+    entry than ``breakpoints`` (the factor before the first breakpoint,
+    then after each). ``period`` makes the profile repeat (flapping optics):
+    times are folded modulo ``period``, which must then cover the last
+    breakpoint.
+    """
+
+    is_constant = False
+
+    def __init__(self, breakpoints, factors, period: float | None = None):
+        self.breakpoints = tuple(float(b) for b in breakpoints)
+        self.factors = tuple(float(f) for f in factors)
+        self.period = float(period) if period is not None else None
+        if len(self.factors) != len(self.breakpoints) + 1:
+            raise ValueError("need len(factors) == len(breakpoints) + 1")
+        if any(b2 <= b1 for b1, b2 in zip(self.breakpoints, self.breakpoints[1:])):
+            raise ValueError("breakpoints must be strictly increasing")
+        if any(not f > 0.0 for f in self.factors):
+            raise ValueError("rate factors must be positive")
+        if self.period is not None:
+            if self.breakpoints and self.period <= self.breakpoints[-1]:
+                raise ValueError("period must exceed the last breakpoint")
+            if self.breakpoints and self.breakpoints[0] <= 0.0:
+                raise ValueError("periodic breakpoints must be positive")
+
+    def _segment(self, t: float) -> tuple[float, float]:
+        """(factor, local end) of the segment containing local time ``t``."""
+        bp = self.breakpoints
+        # Linear scan: profiles have a handful of breakpoints.
+        for i, b in enumerate(bp):
+            if t < b:
+                return self.factors[i], b
+        return self.factors[len(bp)], _INF if self.period is None else self.period
+
+    def factor_at(self, t: float) -> float:
+        if self.period is not None:
+            t = t % self.period
+        return self._segment(t)[0]
+
+    def next_change(self, t: float) -> float:
+        if self.period is not None:
+            base = math.floor(t / self.period) * self.period
+            local = t - base
+            end = self._segment(local)[1]
+            return base + end
+        return self._segment(t)[1]
+
+    def service_finish(self, start: float, size: float, rate: float) -> float:
+        """Integrate the piecewise rate ``rate * factor(t)`` from ``start``
+        until ``size`` bytes have been transmitted."""
+        remaining = size
+        t = start
+        # Bounded: each iteration consumes a full profile segment.
+        while True:
+            factor = self.factor_at(t)
+            seg_end = self.next_change(t)
+            dt = remaining / (rate * factor)
+            if t + dt <= seg_end:
+                return t + dt
+            remaining -= rate * factor * (seg_end - t)
+            t = seg_end
+
+
+def step_profile(t_step: float, after: float, before: float = 1.0) -> PiecewiseRate:
+    """Mid-run degradation: factor ``before`` until ``t_step``, then ``after``
+    (the slow-leaf / partial-optics-failure scenario)."""
+    return PiecewiseRate((t_step,), (before, after))
+
+
+def flapping_profile(
+    period: float, duty: float, low: float, high: float = 1.0, offset: float = 0.0
+) -> PiecewiseRate:
+    """Periodic flapping optics: ``high`` for ``duty`` of each ``period``,
+    ``low`` for the rest, starting the high phase at ``offset``."""
+    if not 0.0 < duty < 1.0:
+        raise ValueError("duty must lie in (0, 1)")
+    up = duty * period
+    if offset == 0.0:
+        return PiecewiseRate((up,), (high, low), period=period)
+    if not 0.0 < offset < period - up:
+        raise ValueError("offset must keep both phase edges inside the period")
+    return PiecewiseRate((offset, offset + up), (low, high, low), period=period)
+
+
+def as_link_model(value) -> LinkModel:
+    """Coerce a profile spec: LinkModel pass-through, scalar → ConstantRate."""
+    if isinstance(value, LinkModel):
+        return value
+    return ConstantRate(float(value))
+
+
+def speeds_at(profiles, t: float) -> np.ndarray:
+    """Per-rail speed factors of a profile list evaluated at time ``t``.
+
+    Accepts a mixed list of scalars and :class:`LinkModel` instances — the
+    plan-time view :func:`repro.runtime.straggler.degraded_rail_schedule`
+    pre-charges from.
+    """
+    return np.array(
+        [as_link_model(p).factor_at(t) for p in profiles], dtype=np.float64
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PfcConfig:
+    """Priority flow control: per-ingress backlog pause/resume thresholds.
+
+    A link whose queued bytes reach ``pause_bytes`` asserts pause; any
+    upstream link whose head-of-queue chunk targets it stalls (head-of-line
+    blocking — chunks behind the stalled head wait too, which is exactly
+    the §VI-E herding amplifier). Pause deasserts when the backlog drains
+    to ``resume_bytes`` (default: half the pause threshold).
+    """
+
+    pause_bytes: float
+    resume_bytes: float | None = None
+
+    def __post_init__(self):
+        if not self.pause_bytes > 0.0:
+            raise ValueError("pause_bytes must be positive")
+        if self.resume_bytes is None:
+            object.__setattr__(self, "resume_bytes", 0.5 * self.pause_bytes)
+        if not 0.0 <= self.resume_bytes < self.pause_bytes:
+            raise ValueError("need 0 <= resume_bytes < pause_bytes")
+
+
+@dataclasses.dataclass(frozen=True)
+class EcnConfig:
+    """ECN marking + DCTCP-style multiplicative sender rate cut.
+
+    Chunks entering a queue whose backlog is at least ``mark_bytes`` get
+    marked. When a marked chunk is *delivered*, its sender's pacing factor
+    is multiplied by ``cut`` (floored at ``min_factor``); every unmarked
+    delivery recovers the factor additively by ``recover``. The factor
+    scales the sender's first-hop serialization rate — the abstraction of
+    end-host pacing at chunk granularity.
+    """
+
+    mark_bytes: float
+    cut: float = 0.8
+    recover: float = 0.05
+    min_factor: float = 0.25
+
+    def __post_init__(self):
+        if not self.mark_bytes > 0.0:
+            raise ValueError("mark_bytes must be positive")
+        if not 0.0 < self.cut < 1.0:
+            raise ValueError("cut must lie in (0, 1)")
+        if not 0.0 < self.min_factor <= 1.0:
+            raise ValueError("min_factor must lie in (0, 1]")
+        if not self.recover >= 0.0:
+            raise ValueError("recover must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class LossConfig:
+    """Per-link chunk loss with go-back-N recovery.
+
+    ``rate`` is the i.i.d. loss probability per link service. Setting
+    ``bad_rate``/``p_enter_bad``/``p_leave_bad`` overlays a Gilbert–Elliott
+    burst process: each link carries a two-state (good/bad) chain advanced
+    once per service; the good-state loss probability is ``rate`` and the
+    bad-state probability ``bad_rate``. A lost chunk is retransmitted from
+    its source ``rto`` seconds after the failed service ends; a receiver
+    holding an earlier outstanding loss on the same transport lane —
+    (flow, source NIC), the per-rail RC-QP granularity of the paper's
+    testbed — *discards* later chunks of that lane (go-back-N in-order
+    delivery), which become outstanding themselves and are retransmitted
+    too.
+    """
+
+    rate: float
+    rto: float
+    bad_rate: float | None = None
+    p_enter_bad: float = 0.0
+    p_leave_bad: float = 0.25
+    links: str = "nic"  # "nic" (up/down lanes) or "all"
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate < 1.0:
+            raise ValueError("loss rate must lie in [0, 1)")
+        if self.bad_rate is not None and not 0.0 <= self.bad_rate < 1.0:
+            raise ValueError("bad-state loss rate must lie in [0, 1)")
+        if self.bad_rate is not None and not self.p_enter_bad > 0.0:
+            raise ValueError(
+                "bad_rate without p_enter_bad > 0 never enters the bad "
+                "state; set p_enter_bad or drop bad_rate"
+            )
+        if not self.rto > 0.0:
+            raise ValueError("rto must be positive")
+        if not 0.0 <= self.p_enter_bad <= 1.0 or not 0.0 < self.p_leave_bad <= 1.0:
+            raise ValueError("Gilbert-Elliott transition probs out of range")
+        if self.links not in ("nic", "all"):
+            raise ValueError("links must be 'nic' or 'all'")
+
+    @property
+    def bursty(self) -> bool:
+        return self.bad_rate is not None and self.p_enter_bad > 0.0
+
+
+class GilbertElliott:
+    """Two-state burst-loss chain for one link (advanced once per service)."""
+
+    __slots__ = ("cfg", "bad")
+
+    def __init__(self, cfg: LossConfig):
+        self.cfg = cfg
+        self.bad = False
+
+    def draw(self, rng) -> bool:
+        """One service worth of loss: advance the chain, then draw the loss.
+
+        Two RNG draws per call regardless of state, so the stream consumed
+        is a deterministic function of the number of services simulated.
+        """
+        cfg = self.cfg
+        u_state = rng.random()
+        u_loss = rng.random()
+        if cfg.bursty:
+            if self.bad:
+                if u_state < cfg.p_leave_bad:
+                    self.bad = False
+            elif u_state < cfg.p_enter_bad:
+                self.bad = True
+            p = cfg.bad_rate if self.bad else cfg.rate
+        else:
+            p = cfg.rate
+        return u_loss < p
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fabric's dynamics: per-rail rate profiles + PFC/ECN/loss knobs.
+
+    ``rail_profiles`` maps rail index → profile (a :class:`LinkModel` or a
+    bare scalar factor) applied to that rail's NIC lanes (``up``/``down``
+    links) on top of any static ``rail_speeds`` factor. ``seed`` drives the
+    fault-layer RNG (loss draws), decoupled from the policy seed so the
+    same fault realization can be replayed across policies.
+    """
+
+    rail_profiles: dict = dataclasses.field(default_factory=dict)
+    pfc: PfcConfig | None = None
+    ecn: EcnConfig | None = None
+    loss: LossConfig | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(
+            self,
+            "rail_profiles",
+            {int(r): as_link_model(p) for r, p in self.rail_profiles.items()},
+        )
+
+    @property
+    def is_static(self) -> bool:
+        """True when the spec degenerates to a frozen fabric: constant
+        profiles only and no PFC/ECN/loss — the zero-cost case both
+        backends run bit-exactly."""
+        return (
+            self.pfc is None
+            and self.ecn is None
+            and self.loss is None
+            and all(m.is_constant for m in self.rail_profiles.values())
+        )
+
+    def profile_for_rail(self, rail: int) -> LinkModel | None:
+        return self.rail_profiles.get(rail)

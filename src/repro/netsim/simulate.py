@@ -79,6 +79,28 @@ def _check_backend(backend: str) -> None:
         raise ValueError(f"unknown backend {backend!r}; choose {BACKENDS}")
 
 
+def _check_vector_supports(topo: RailTopology, backend: str | None) -> str:
+    """Resolve/validate the backend against the fabric's dynamics.
+
+    Non-static fault specs (time-varying profiles, PFC/ECN/loss) only run
+    on the event engine: an unspecified backend falls back to it, an
+    explicit ``vector`` request is an error naming that fallback. Unknown
+    backend names are rejected before the fallback so typos never run
+    silently.
+    """
+    if backend is not None:
+        _check_backend(backend)
+    if topo.has_dynamics:
+        if backend == "vector":
+            raise ValueError(
+                "backend='vector' supports constant-profile link models "
+                "only; this fault_spec needs the event fallback "
+                "(backend='event')"
+            )
+        return "event"
+    return backend if backend is not None else "vector"
+
+
 def _run_collective_vector(
     topo: RailTopology,
     tm: TrafficMatrix,
@@ -127,6 +149,8 @@ def run_collective(
     probe_every: int = 64,
     coalesce: bool = False,
     backend: str | None = None,
+    rail_speeds=None,
+    fault_spec=None,
 ) -> CollectiveMetrics:
     """Simulate one all-to-all under one policy; return §VI-A metrics.
 
@@ -137,16 +161,25 @@ def run_collective(
     service events) — so it defaults to the event backend, and asking for
     ``backend="vector"`` together with it is an error (mirroring
     :func:`run_streaming_collective`).
+
+    ``rail_speeds`` are static per-rail speed factors; ``fault_spec`` (a
+    :class:`repro.netsim.linkmodel.FaultSpec`) attaches the link-dynamics
+    layer — time-varying rate profiles, PFC, ECN, loss + go-back-N. A
+    non-static spec forces the event backend (the vector simulator rejects
+    it by name); a fully static spec runs on either backend bit-exactly.
     """
-    if backend is None:
-        backend = "event" if coalesce else "vector"
-    _check_backend(backend)
+    if coalesce and backend is None:
+        backend = "event"
+    topo = RailTopology(
+        tm.num_domains, tm.num_rails, r1=r1, r2=r2,
+        rail_speeds=rail_speeds, fault_spec=fault_spec,
+    )
+    backend = _check_vector_supports(topo, backend)
     if coalesce and backend == "vector":
         raise ValueError(
             "flowlet coalescing is an event-engine approximation; drop "
             "coalesce=True or use backend='event'"
         )
-    topo = RailTopology(tm.num_domains, tm.num_rails, r1=r1, r2=r2)
     opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
     if backend == "vector":
         result = _run_collective_vector(
@@ -267,6 +300,7 @@ def run_streaming_collective(
     seed: int = 0,
     probe_every: int = 64,
     rail_speeds=None,
+    fault_spec=None,
     feedback: bool = False,
     window: int | None = None,
     replay=None,
@@ -283,10 +317,17 @@ def run_streaming_collective(
       policy_name: any registered policy; reactive baselines run unchanged
         (they always decided chunk-by-chunk), ``rails-online`` engages the
         online control plane.
-      rail_speeds: optional per-rail degradation factors in (0, 1] — the
-        straggler-rail scenario.
+      rail_speeds: optional static per-rail speed factors (> 0; below 1.0
+        models the straggler-rail scenario, above 1.0 an over-provisioned
+        rail).
+      fault_spec: optional :class:`repro.netsim.linkmodel.FaultSpec` — the
+        link-dynamics layer (time-varying rate profiles, PFC pause, ECN
+        marking, chunk loss + go-back-N recovery). Non-static specs need
+        the event backend.
       feedback: attach a :class:`RailHealthEstimator` to the engine and, for
         ``rails-online``, fold its speed estimates into the LoadState.
+        Pass an estimator instance (e.g. with ``track_history=True``) to
+        use it directly instead of the default-constructed one.
       window: re-planning window for ``rails-online`` (None = whole batch).
       replay: optional ``RoutingReplayState`` forecast for ``rails-online``;
         updated in place with this run's realized per-domain loads.
@@ -310,9 +351,19 @@ def run_streaming_collective(
     for _t, tm in rounds:
         if (tm.num_domains, tm.num_rails) != (m, n):
             raise ValueError("all rounds must share one (M, N) fabric shape")
-    topo = RailTopology(m, n, r1=r1, r2=r2, rail_speeds=rail_speeds)
+    topo = RailTopology(
+        m, n, r1=r1, r2=r2, rail_speeds=rail_speeds, fault_spec=fault_spec
+    )
     jobs = build_streaming_jobs(rounds, chunk_bytes)
-    health = RailHealthEstimator(n, nominal_rate=r2) if feedback else None
+    if isinstance(feedback, RailHealthEstimator):
+        if feedback.num_rails != n:
+            raise ValueError(
+                f"feedback estimator covers {feedback.num_rails} rails, "
+                f"fabric has {n}"
+            )
+        health = feedback
+    else:
+        health = RailHealthEstimator(n, nominal_rate=r2) if feedback else None
     kwargs: dict = {}
     policy_cls = POLICIES.get(policy_name, Policy)
     if issubclass(policy_cls, OnlineRailSPolicy):
@@ -320,6 +371,7 @@ def run_streaming_collective(
     policy = make_policy(policy_name, topo, seed=seed, **kwargs)
     policy.prepare(jobs)
     if backend == "vector":
+        _check_vector_supports(topo, backend)  # dynamics need the event engine
         if feedback or recorder is not None or coalesce:
             raise ValueError(
                 "vector streaming is feedback-free: rail-health estimation, "

@@ -12,21 +12,38 @@ occupies. Two path families exist, matching the paper's Challenge 1:
   both sides (the one-to-one mapping RailS exploits).
 * **spine**: ``NIC(src,n) → S_n → spine_p → S_m → NIC(dst,m)`` — crosses
   rails via the spine; this is what ECMP hashing uses.
+
+Every link carries a :class:`~repro.netsim.linkmodel.LinkModel` handle (the
+pluggable dynamics layer). Static ``rail_speeds`` are sugar for degenerate
+constant profiles — their factor is pre-folded into ``Link.rate`` so a
+constant-profile fabric is bit-identical to the historical static one. A
+:class:`~repro.netsim.linkmodel.FaultSpec` attaches time-varying profiles
+(and the PFC/ECN/loss knobs the event engine implements) per rail.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
+
+from .linkmodel import CONSTANT, FaultSpec, LinkModel
 
 __all__ = ["Link", "RailTopology"]
 
 
 @dataclasses.dataclass(frozen=True)
 class Link:
-    """A unidirectional serialization resource with rate in bytes/sec."""
+    """A unidirectional serialization resource.
+
+    ``rate`` is the static rate in bytes/sec with any constant speed factor
+    already folded in; ``model`` holds the dynamics handle (a constant
+    model for frozen links — its factor is *not* applied again on top of
+    ``rate``; non-constant profiles scale ``rate`` over time).
+    """
 
     name: str
     rate: float
+    model: LinkModel = CONSTANT
 
 
 class RailTopology:
@@ -38,9 +55,10 @@ class RailTopology:
         num_rails: int,
         r1: float = 400e9,
         r2: float = 50e9,
-        num_spines: int = None,  # type: ignore[assignment]
-        spine_rate: float = None,  # type: ignore[assignment]
+        num_spines: Optional[int] = None,
+        spine_rate: Optional[float] = None,
         rail_speeds=None,
+        fault_spec: Optional[FaultSpec] = None,
     ):
         if num_spines is None:
             # Non-blocking spine: each leaf has M NIC-facing ports at R2, so
@@ -55,16 +73,21 @@ class RailTopology:
         self.r1 = r1
         self.r2 = r2
         self.num_spines = num_spines
-        # Per-rail degradation factors in (0, 1]: rail n's NIC links run at
-        # r2 * rail_speeds[n] (a slow leaf/optics lane — the straggler-rail
-        # scenario repro.sched.feedback learns to route around).
+        # Per-rail speed factors: rail n's NIC links run at
+        # r2 * rail_speeds[n]. Values below 1.0 model a slow leaf/optics
+        # lane (the straggler-rail scenario repro.sched.feedback learns to
+        # route around); values above 1.0 an over-provisioned rail.
         if rail_speeds is None:
             rail_speeds = [1.0] * self.n
         if len(rail_speeds) != self.n:
             raise ValueError(f"rail_speeds must have {self.n} entries")
-        if any(not 0.0 < s <= 1.0 for s in rail_speeds):
-            raise ValueError("rail_speeds must lie in (0, 1]")
+        if any(not s > 0.0 for s in rail_speeds):
+            raise ValueError(
+                "rail_speeds must be positive (values > 1.0 mean an "
+                "over-provisioned rail)"
+            )
         self.rail_speeds = tuple(float(s) for s in rail_speeds)
+        self.fault_spec = fault_spec
         self.links: dict[str, Link] = {}
         # Memoized path lists — policies ask for the same few thousand
         # paths once per chunk; building the strings each time dominated
@@ -72,17 +95,42 @@ class RailTopology:
         # paths as read-only, so sharing one list per key is safe.
         self._rail_paths: dict[tuple, list[str]] = {}
         self._spine_paths: dict[tuple, list[str]] = {}
+        rail_models = self._rail_models(fault_spec)
         for d in range(self.m):
             for n in range(self.n):
-                self._add(f"up:{d}:{n}", r2 * self.rail_speeds[n])  # NIC(d,n) -> leaf S_n
-                self._add(f"down:{d}:{n}", r2 * self.rail_speeds[n])  # leaf S_n -> NIC(d,n)
+                rate, model = rail_models[n]
+                self._add(f"up:{d}:{n}", rate, model)  # NIC(d,n) -> leaf S_n
+                self._add(f"down:{d}:{n}", rate, model)  # leaf S_n -> NIC(d,n)
         for n in range(self.n):
             for p in range(num_spines):
                 self._add(f"l2s:{n}:{p}", spine_rate)  # leaf S_n -> spine p
                 self._add(f"s2l:{p}:{n}", spine_rate)  # spine p -> leaf S_n
 
-    def _add(self, name: str, rate: float) -> None:
-        self.links[name] = Link(name, rate)
+    def _rail_models(self, fault_spec: Optional[FaultSpec]):
+        """Per-rail (static rate, model): constant profile factors fold into
+        the rate — bit-exact with the historical static fabric — while
+        time-varying profiles ride on the model handle."""
+        out = []
+        for n in range(self.n):
+            rate = self.r2 * self.rail_speeds[n]
+            model = CONSTANT
+            profile = fault_spec.profile_for_rail(n) if fault_spec else None
+            if profile is not None:
+                if profile.is_constant:
+                    rate = rate * profile.factor_at(0.0)
+                else:
+                    model = profile
+            out.append((rate, model))
+        return out
+
+    def _add(self, name: str, rate: float, model: LinkModel = CONSTANT) -> None:
+        self.links[name] = Link(name, rate, model)
+
+    @property
+    def has_dynamics(self) -> bool:
+        """True when the fabric needs the event engine's dynamic loop
+        (non-constant profiles or any PFC/ECN/loss knob)."""
+        return self.fault_spec is not None and not self.fault_spec.is_static
 
     # -- path families ------------------------------------------------------
 

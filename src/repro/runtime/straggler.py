@@ -46,18 +46,27 @@ class StragglerDetector:
 
 
 def degraded_rail_schedule(
-    weights: np.ndarray, num_rails: int, rail_speeds: np.ndarray
+    weights: np.ndarray, num_rails: int, rail_speeds, at_time: float = 0.0
 ):
     """LPT with speed-aware pre-charging (the paper's scheduler as
     straggler mitigation).
 
-    ``rail_speeds[j]`` in (0, 1]: a rail at speed s behaves like a rail with
+    ``rail_speeds[j]`` > 0: a rail at speed s behaves like a rail with
     ``(1/s - 1) * mean_load`` of pre-existing load, so LPT routes around it.
-    The pre-charge is the shared :func:`repro.sched.feedback.speed_precharge`
-    formula — the same one the online control plane derives from EWMA
-    health estimates, so offline mitigation and online feedback agree.
+    Entries may also be :class:`repro.netsim.linkmodel.LinkModel` rate
+    profiles (step degradation, flapping optics) — they are evaluated at
+    ``at_time``, the *plan* time, so a schedule cut while a rail is in its
+    degraded phase pre-charges against the speed that phase will actually
+    deliver. The pre-charge is the shared
+    :func:`repro.sched.feedback.speed_precharge` formula — the same one the
+    online control plane derives from EWMA health estimates, so offline
+    mitigation and online feedback agree.
     Returns the LptResult plus the *time* each rail finishes (load/speed).
     """
+    from ..netsim.linkmodel import LinkModel, speeds_at
+
+    if any(isinstance(s, LinkModel) for s in rail_speeds):
+        rail_speeds = speeds_at(rail_speeds, at_time)
     rail_speeds = np.asarray(rail_speeds, dtype=np.float64)
     total = float(np.sum(weights))
     # Ideal per-rail load proportional to speed.

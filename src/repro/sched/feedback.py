@@ -53,22 +53,36 @@ class RailHealthEstimator:
     ``precharge``). Rates are learned from NIC links only (``up:``/
     ``down:``); spine hops say nothing about rail lane health.
 
+    The estimator is deliberately *non-stationary-aware*: the EWMA forgets
+    geometrically, so when a rail's true speed steps mid-run (degradation,
+    flapping optics — :mod:`repro.netsim.linkmodel` profiles) the estimate
+    tracks the new level instead of converging once and freezing. With
+    ``track_history=True`` every post-observation estimate is kept as a
+    ``(time, rail, speed)`` record, from which :meth:`time_to_detect` and
+    :meth:`steady_state_error` quantify the tracking loop — how many
+    seconds/observations a step takes to show up, and how far the settled
+    estimate sits from truth.
+
     Attributes:
       num_rails: N.
       nominal_rate: the healthy per-NIC rate R2 (bytes/s).
       alpha: EWMA smoothing factor for new observations.
       floor: lower clamp on the speed estimate — keeps a dying rail
         schedulable (the paper never blackholes a lane, it de-weights it).
+      track_history: record per-observation speed estimates (off by
+        default; 10⁶-chunk sweeps do not want the memory).
     """
 
     num_rails: int
     nominal_rate: float
     alpha: float = 0.3
     floor: float = 0.05
+    track_history: bool = False
 
     def __post_init__(self) -> None:
         self._rates = np.full(self.num_rails, float(self.nominal_rate))
         self._observations = np.zeros(self.num_rails, dtype=np.int64)
+        self._history: list[tuple[float, int, float]] = []
 
     # -- engine observer protocol -------------------------------------------
 
@@ -86,6 +100,9 @@ class RailHealthEstimator:
             self.alpha * rate + (1 - self.alpha) * self._rates[j]
         )
         self._observations[j] = k + 1
+        if self.track_history:
+            speed = float(np.clip(self._rates[j] / self.nominal_rate, self.floor, 1.0))
+            self._history.append((end, j, speed))
 
     # -- scheduler-facing view ----------------------------------------------
 
@@ -101,6 +118,47 @@ class RailHealthEstimator:
         """LoadState pre-charge for ``total_weight`` pending bytes."""
         return speed_precharge(total_weight, self.speeds())
 
+    # -- tracking metrics (require track_history=True) -----------------------
+
+    def history(self, rail: int | None = None) -> list[tuple[float, int, float]]:
+        """Recorded ``(time, rail, speed)`` estimates, optionally filtered."""
+        if rail is None:
+            return list(self._history)
+        return [h for h in self._history if h[1] == rail]
+
+    def time_to_detect(
+        self, rail: int, target_speed: float, tol: float = 0.15, after: float = 0.0
+    ):
+        """Tracking latency of a speed change: ``(seconds, observations)``
+        until the rail's estimate first lands within ``tol`` (relative) of
+        ``target_speed``, counting from ``after`` (the true change time).
+        Returns ``None`` if the estimate never got there.
+        """
+        if not self.track_history:
+            raise ValueError("time_to_detect needs track_history=True")
+        seen = 0
+        for t, r, speed in self._history:
+            if r != rail or t < after:
+                continue
+            seen += 1
+            if abs(speed - target_speed) <= tol * target_speed:
+                return (t - after, seen)
+        return None
+
+    def steady_state_error(
+        self, rail: int, target_speed: float, tail: int = 10
+    ) -> float:
+        """Mean relative error of the rail's last ``tail`` estimates —
+        where the EWMA settles once the transient has passed."""
+        if not self.track_history:
+            raise ValueError("steady_state_error needs track_history=True")
+        speeds = [s for _t, r, s in self._history if r == rail][-tail:]
+        if not speeds:
+            return float("nan")
+        err = np.abs(np.array(speeds) - target_speed) / target_speed
+        return float(err.mean())
+
     def reset(self) -> None:
         self._rates[:] = self.nominal_rate
         self._observations[:] = 0
+        self._history.clear()

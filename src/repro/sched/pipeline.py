@@ -76,6 +76,7 @@ def run_pipeline(
     r2: float = 50e9,
     seed: int = 0,
     rail_speeds=None,
+    fault_spec=None,
     feedback: bool = False,
     window: int | None = None,
     use_replay: bool = True,
@@ -86,6 +87,11 @@ def run_pipeline(
 
     Args:
       tms: per-round traffic matrices (micro-batches / iterations).
+      fault_spec: optional :class:`repro.netsim.linkmodel.FaultSpec` — the
+        link-dynamics layer (time-varying rails, PFC/ECN/loss), passed
+        through to every simulated collective (the standalone rounds of
+        ``compare_sequential`` included, so the comparison is
+        apples-to-apples on the same faulty fabric).
       chunk_bytes: atomic chunk size; ``None`` lets the
         :class:`AdaptiveChunker` size it from the replayed totals.
       use_replay: warm a :class:`RoutingReplayState` covering the whole
@@ -131,6 +137,7 @@ def run_pipeline(
         chunk_bytes=chunk_bytes,
         seed=seed,
         rail_speeds=rail_speeds,
+        fault_spec=fault_spec,
         feedback=feedback,
         window=window,
         replay=replay,
@@ -148,6 +155,7 @@ def run_pipeline(
                 chunk_bytes=chunk_bytes,
                 seed=seed + i,
                 rail_speeds=rail_speeds,
+                fault_spec=fault_spec,
                 feedback=feedback,
                 window=window,
             )

@@ -76,6 +76,24 @@ def test_golden_cct_parity(policy):
 
 
 @pytest.mark.parametrize("policy", ["rails", "minrtt"])
+def test_golden_cct_parity_with_constant_fault_spec(policy):
+    """The link-dynamics layer costs nothing when inactive: attaching a
+    FaultSpec of all-constant profiles (no PFC/ECN/loss) must leave every
+    golden CCT bit-identical — the engine never enters its dynamic loop."""
+    from repro.netsim import FaultSpec
+
+    spec = FaultSpec(rail_profiles={n: 1.0 for n in range(N)})
+    assert spec.is_static
+    for name, tm in _workloads().items():
+        m = run_collective(
+            tm, policy, chunk_bytes=CHUNK, seed=3, backend="event", fault_spec=spec
+        )
+        makespan, p99 = GOLDEN[(name, policy)]
+        assert m.makespan == makespan, (name, policy)
+        assert m.cct["p99"] == p99, (name, policy)
+
+
+@pytest.mark.parametrize("policy", ["rails", "minrtt"])
 def test_streaming_bitmatches_oneshot_at_t0(policy):
     for name, tm in _workloads().items():
         off = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3, backend="event")

@@ -135,6 +135,44 @@ def test_unknown_backend_rejected():
         run_collective(tm, "rails", chunk_bytes=CHUNK, backend="gpu")
 
 
+@pytest.mark.parametrize("policy", ("rails", "minrtt"))
+def test_vector_bit_exact_with_constant_fault_spec(policy):
+    """Constant-profile fault specs fold into static rates: the vector
+    backend accepts them and stays bit-exact with the event engine."""
+    from repro.netsim import FaultSpec
+
+    spec = FaultSpec(rail_profiles={0: 1.0, 1: 0.5})
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    e = run_collective(
+        tm, policy, chunk_bytes=CHUNK, seed=3, backend="event", fault_spec=spec
+    )
+    v = run_collective(
+        tm, policy, chunk_bytes=CHUNK, seed=3, backend="vector", fault_spec=spec
+    )
+    assert v.makespan == e.makespan
+    assert v.cct == e.cct
+    # And the degraded rail actually bites: slower than the clean fabric.
+    clean = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3, backend="vector")
+    assert v.makespan > clean.makespan
+
+
+def test_vector_rejects_dynamic_fault_spec_naming_fallback():
+    """Any non-constant LinkModel on the vector backend is a clear error
+    that names the event fallback."""
+    from repro.netsim import FaultSpec, step_profile
+
+    tm = uniform_workload(2, 2, bytes_per_pair=CHUNK)
+    spec = FaultSpec(rail_profiles={0: step_profile(1e-3, 0.5)})
+    with pytest.raises(ValueError, match="backend='event'"):
+        run_collective(tm, "rails", chunk_bytes=CHUNK, backend="vector", fault_spec=spec)
+    with pytest.raises(ValueError, match="backend='event'"):
+        run_streaming_collective(
+            tm, "rails", chunk_bytes=CHUNK, backend="vector", fault_spec=spec
+        )
+    with pytest.raises(ValueError, match="backend='event'"):
+        LinkIndex(RailTopology(2, 2, fault_spec=spec))
+
+
 # -- randomized release times (direct harness) --------------------------------
 
 

@@ -1,0 +1,453 @@
+"""Link-dynamics layer: profiles, PFC/ECN/loss mechanics, and the §VI-E
+fault regression.
+
+Covers the contract the refactor promises: constant profiles cost nothing
+(bit-exact with the static fabric on both backends), the vector backend
+rejects non-static specs by name, go-back-N delivers every chunk exactly
+once, the EWMA health estimator *tracks* a mid-run speed step, and the
+seeded 1%-loss + flapping-rail scenario reproduces the paper's qualitative
+§VI-E ordering (proactive rails + feedback < reactive baselines).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.theorems import theorem2_optimal_time
+from repro.core.traffic import (
+    bursty_release_times,
+    microbatch_stream,
+    receiver_skew_workload,
+    uniform_workload,
+)
+from repro.netsim import (
+    EcnConfig,
+    Engine,
+    FaultSpec,
+    LinkIndex,
+    LossConfig,
+    PfcConfig,
+    PiecewiseRate,
+    RailTopology,
+    build_jobs,
+    flapping_profile,
+    run_collective,
+    run_streaming_collective,
+    speeds_at,
+    step_profile,
+)
+from repro.netsim.balancers import make_policy
+from repro.runtime.straggler import degraded_rail_schedule
+from repro.sched.feedback import RailHealthEstimator
+
+M, N = 4, 4
+B = 8 * 2**20
+CHUNK = 1 * 2**20
+
+
+def _stream(rounds=6, seed=1, rel_seed=2):
+    tms = microbatch_stream(M, N, rounds, bytes_per_pair=B / rounds, seed=seed)
+    gap = 0.5 * theorem2_optimal_time(tms[0].d2, N, 50e9)
+    releases = bursty_release_times(rounds, gap, seed=rel_seed)
+    return list(zip(releases, tms))
+
+
+# -- profiles ----------------------------------------------------------------
+
+
+def test_piecewise_profile_integration():
+    p = step_profile(5.0, 0.5)
+    assert p.factor_at(0.0) == 1.0 and p.factor_at(5.0) == 0.5
+    assert p.next_change(0.0) == 5.0 and p.next_change(5.0) == float("inf")
+    # 10 bytes at rate 1: 5 bytes by t=5, the rest at 0.5 B/s -> t=15.
+    assert p.service_finish(0.0, 10.0, 1.0) == 15.0
+    # Entirely inside one segment: plain division.
+    assert p.service_finish(0.0, 2.0, 1.0) == 2.0
+    assert p.service_finish(6.0, 2.0, 1.0) == 10.0
+
+
+def test_flapping_profile_is_periodic():
+    p = flapping_profile(period=10.0, duty=0.5, low=0.25)
+    assert p.factor_at(1.0) == 1.0 and p.factor_at(6.0) == 0.25
+    assert p.factor_at(11.0) == 1.0 and p.factor_at(16.0) == 0.25
+    assert p.next_change(1.0) == 5.0
+    assert p.next_change(6.0) == 10.0
+    assert p.next_change(12.0) == 15.0
+    # One full period at mean rate 0.625: 6.25 bytes per 10 s at rate 1.
+    assert p.service_finish(0.0, 6.25, 1.0) == 10.0
+
+
+def test_profile_validation():
+    with pytest.raises(ValueError, match="increasing"):
+        PiecewiseRate((2.0, 1.0), (1.0, 0.5, 0.25))
+    with pytest.raises(ValueError, match="factors"):
+        PiecewiseRate((1.0,), (1.0,))
+    with pytest.raises(ValueError, match="positive"):
+        PiecewiseRate((1.0,), (1.0, 0.0))
+    with pytest.raises(ValueError, match="period"):
+        PiecewiseRate((2.0,), (1.0, 0.5), period=1.5)
+    with pytest.raises(ValueError, match="duty"):
+        flapping_profile(10.0, 1.5, 0.5)
+
+
+# -- constant profiles cost nothing ------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["event", "vector"])
+@pytest.mark.parametrize("policy", ["rails", "reps"])
+def test_constant_profile_bit_exact(backend, policy):
+    """A FaultSpec of constant profiles is the static fabric, bit for bit,
+    on both backends — the dynamics layer costs nothing when inactive."""
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    base = run_collective(tm, policy, chunk_bytes=CHUNK, seed=3, backend=backend)
+    spec = FaultSpec(rail_profiles={0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0})
+    assert spec.is_static
+    got = run_collective(
+        tm, policy, chunk_bytes=CHUNK, seed=3, backend=backend, fault_spec=spec
+    )
+    assert got.makespan == base.makespan
+    assert got.cct == base.cct
+
+
+def test_constant_profile_folds_like_rail_speeds():
+    """rail_speeds sugar == the same factors delivered as constant
+    profiles (both fold into the static link rate)."""
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    speeds = [1.0, 0.8, 1.0, 0.5]
+    a = run_collective(
+        tm, "rails", chunk_bytes=CHUNK, backend="event", rail_speeds=speeds
+    )
+    b = run_collective(
+        tm, "rails", chunk_bytes=CHUNK, backend="event",
+        fault_spec=FaultSpec(rail_profiles=dict(enumerate(speeds))),
+    )
+    assert a.makespan == b.makespan
+    assert a.cct == b.cct
+
+
+def test_vector_backend_rejects_dynamics():
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    spec = FaultSpec(loss=LossConfig(rate=0.01, rto=1e-4))
+    with pytest.raises(ValueError, match="event"):
+        run_collective(tm, "rails", chunk_bytes=CHUNK, backend="vector", fault_spec=spec)
+    with pytest.raises(ValueError, match="event"):
+        run_streaming_collective(
+            tm, "rails", chunk_bytes=CHUNK, backend="vector", fault_spec=spec
+        )
+    with pytest.raises(ValueError, match="event"):
+        LinkIndex(RailTopology(M, N, fault_spec=spec))
+    # Unspecified backend silently falls back to the event engine.
+    m = run_collective(tm, "rails", chunk_bytes=CHUNK, fault_spec=spec)
+    assert m.makespan > 0
+
+
+def test_dynamics_reject_flowlet_coalescing():
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    spec = FaultSpec(loss=LossConfig(rate=0.01, rto=1e-4))
+    with pytest.raises(ValueError, match="coalesc"):
+        run_collective(tm, "rails", chunk_bytes=CHUNK, coalesce=True, fault_spec=spec)
+
+
+# -- topology validation (satellite) -----------------------------------------
+
+
+def test_rail_speeds_overprovisioned_allowed():
+    topo = RailTopology(M, N, rail_speeds=[1.0, 2.0, 1.0, 1.0])
+    assert topo.links["up:0:1"].rate == 2.0 * topo.r2
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    fast = run_collective(
+        tm, "rails", chunk_bytes=CHUNK, rail_speeds=[2.0] * N, backend="event"
+    )
+    base = run_collective(tm, "rails", chunk_bytes=CHUNK, backend="event")
+    assert fast.makespan < base.makespan
+
+
+@pytest.mark.parametrize("bad", [[0.0, 1.0, 1.0, 1.0], [1.0, -0.5, 1.0, 1.0]])
+def test_rail_speeds_must_be_positive(bad):
+    with pytest.raises(ValueError, match="positive"):
+        RailTopology(M, N, rail_speeds=bad)
+
+
+def test_num_spines_optional_defaults():
+    topo = RailTopology(3, 2)
+    assert topo.num_spines == 3  # non-blocking default: one per domain
+    topo = RailTopology(3, 2, num_spines=5)
+    assert topo.num_spines == 5
+
+
+# -- time-varying rates end to end -------------------------------------------
+
+
+def test_step_degradation_slows_collective():
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    base = run_collective(tm, "rails", chunk_bytes=CHUNK, backend="event")
+    spec = FaultSpec(rail_profiles={N - 1: step_profile(base.makespan / 3, 0.4)})
+    assert not spec.is_static
+    slow = run_collective(tm, "rails", chunk_bytes=CHUNK, fault_spec=spec)
+    assert slow.makespan > base.makespan
+    # Degrading after the run ends changes nothing.
+    spec_late = FaultSpec(rail_profiles={N - 1: step_profile(base.makespan * 10, 0.4)})
+    late = run_collective(tm, "rails", chunk_bytes=CHUNK, fault_spec=spec_late)
+    assert late.makespan == base.makespan
+
+
+# -- loss + go-back-N --------------------------------------------------------
+
+
+class _DeliveryAudit:
+    """Observer mirroring the go-back-N contract: every chunk delivered
+    exactly once, never while an earlier chunk of its transport lane —
+    (flow, source NIC), the per-rail QP — is lost and outstanding."""
+
+    def __init__(self):
+        self.delivered: dict[int, int] = {}
+        self.outstanding: dict[tuple, set] = {}
+        self.violations = 0
+
+    def record_drop(self, link, t, job):
+        lane = (job.flow_id, job.path[0])
+        self.outstanding.setdefault(lane, set()).add(job.chunk_id)
+
+    def record_completion(self, job, t):
+        out = self.outstanding.get((job.flow_id, job.path[0]))
+        if out and min(out) < job.chunk_id:
+            self.violations += 1
+        if out is not None:
+            out.discard(job.chunk_id)
+        self.delivered[job.chunk_id] = self.delivered.get(job.chunk_id, 0) + 1
+
+
+@pytest.mark.parametrize("bursty", [False, True])
+def test_loss_gbn_delivers_every_chunk_exactly_once(bursty):
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    loss = (
+        LossConfig(rate=0.02, rto=3e-4, bad_rate=0.3, p_enter_bad=0.05, p_leave_bad=0.3)
+        if bursty
+        else LossConfig(rate=0.03, rto=3e-4)
+    )
+    topo = RailTopology(M, N, fault_spec=FaultSpec(loss=loss, seed=5))
+    jobs = build_jobs(tm, CHUNK)
+    num_chunks = sum(len(js) for js in jobs.values())
+    audit = _DeliveryAudit()
+    eng = Engine(topo, observers=(audit,))
+    policy = make_policy("rails", topo)
+    policy.prepare(jobs)
+    res = eng.run(jobs, policy)
+    dyn = res.dynamics
+    # Every chunk delivered exactly once, in go-back-N order.
+    assert sorted(audit.delivered) == list(range(num_chunks))
+    assert set(audit.delivered.values()) == {1}
+    assert audit.violations == 0
+    assert dyn["delivered_chunks"] == num_chunks
+    np.testing.assert_allclose(dyn["goodput_bytes"], tm.total_bytes(), rtol=1e-9)
+    # The fault realization actually lost something, and retransmissions
+    # paid extra wire bytes for it.
+    assert dyn["drops"] > 0
+    assert dyn["retransmits"] >= dyn["drops"]
+    assert dyn["wire_bytes"] > 2 * tm.total_bytes() * 0.99  # 2 NIC hops/chunk
+
+
+def test_loss_makes_collective_slower_and_is_seeded():
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    base = run_collective(tm, "rails", chunk_bytes=CHUNK, backend="event")
+    spec = lambda: FaultSpec(loss=LossConfig(rate=0.02, rto=3e-4), seed=9)
+    a = run_collective(tm, "rails", chunk_bytes=CHUNK, fault_spec=spec())
+    b = run_collective(tm, "rails", chunk_bytes=CHUNK, fault_spec=spec())
+    assert a.makespan > base.makespan
+    assert a.makespan == b.makespan and a.cct == b.cct  # seeded determinism
+
+
+def test_loss_config_validation():
+    with pytest.raises(ValueError, match="rate"):
+        LossConfig(rate=1.0, rto=1e-4)
+    with pytest.raises(ValueError, match="rto"):
+        LossConfig(rate=0.01, rto=0.0)
+    with pytest.raises(ValueError, match="links"):
+        LossConfig(rate=0.01, rto=1e-4, links="spineonly")
+    # bad_rate without p_enter_bad > 0 would silently never burst.
+    with pytest.raises(ValueError, match="p_enter_bad"):
+        LossConfig(rate=0.01, rto=1e-4, bad_rate=0.5)
+
+
+def test_feedback_estimator_shape_checked():
+    tm = uniform_workload(M, N, bytes_per_pair=B)
+    with pytest.raises(ValueError, match="rails"):
+        run_streaming_collective(
+            tm, "rails-online", chunk_bytes=CHUNK,
+            feedback=RailHealthEstimator(2, nominal_rate=50e9),
+        )
+
+
+# -- PFC + ECN ---------------------------------------------------------------
+
+
+class _PauseAudit:
+    def __init__(self):
+        self.intervals = []
+
+    def record_pause(self, link, start, end):
+        self.intervals.append((link, start, end))
+
+
+def test_pfc_pause_creates_hol_blocking():
+    # Receiver skew drives incast on the hot domain's down links.
+    tm = receiver_skew_workload(M, N, total_bytes=B * 16, seed=1)
+    base = run_collective(tm, "ecmp", chunk_bytes=CHUNK, backend="event")
+    audit = _PauseAudit()
+    spec = FaultSpec(pfc=PfcConfig(pause_bytes=3 * CHUNK))
+    topo = RailTopology(M, N, fault_spec=spec)
+    jobs = build_jobs(tm, CHUNK)
+    eng = Engine(topo, observers=(audit,))
+    res = eng.run(jobs, make_policy("ecmp", topo))
+    assert audit.intervals, "pause thresholds were never crossed"
+    assert all(end > start for _l, start, end in audit.intervals)
+    assert res.dynamics["pause_time"] > 0
+    # Head-of-line blocking can only delay the collective.
+    assert res.makespan >= base.makespan * 0.999
+
+
+def test_ecn_marks_and_sender_rate_cut():
+    tm = receiver_skew_workload(M, N, total_bytes=B * 16, seed=1)
+    spec = FaultSpec(ecn=EcnConfig(mark_bytes=2 * CHUNK, cut=0.7))
+    m = run_collective(tm, "reps", chunk_bytes=CHUNK, seed=3, fault_spec=spec)
+    base = run_collective(tm, "reps", chunk_bytes=CHUNK, seed=3, backend="event")
+    # Marks happened and some sender took a multiplicative cut.
+    topo = RailTopology(M, N, fault_spec=spec)
+    jobs = build_jobs(tm, CHUNK)
+    eng = Engine(topo, seed=3)
+    res = eng.run(jobs, make_policy("reps", topo, seed=3))
+    assert res.dynamics["ecn_marks"] > 0
+    assert res.dynamics["min_sender_factor"] < 1.0
+    # Pacing stretches the cut senders' serialization: never faster.
+    assert res.makespan >= base.makespan * 0.999
+
+
+def test_path_delay_reads_mark_and_pause_signals():
+    spec = FaultSpec(
+        pfc=PfcConfig(pause_bytes=4 * CHUNK), ecn=EcnConfig(mark_bytes=2 * CHUNK)
+    )
+    topo = RailTopology(M, N, fault_spec=spec)
+    eng = Engine(topo)
+    path = topo.rail_path(0, 1, 0)
+    clean = eng.path_delay(path, src_domain=0)
+    # A live pause assertion on the down link penalizes the path.
+    eng.paused_links.add("down:1:0")
+    paused = eng.path_delay(path, src_domain=0)
+    assert paused > clean
+    eng.paused_links.clear()
+    # Recent (stale-snapshot) ECN marks penalize it too.
+    eng._recent_marks = {"up:0:0": 8}
+    marked = eng.path_delay(path, src_domain=0)
+    assert marked > clean
+
+
+def test_pfc_ecn_config_validation():
+    with pytest.raises(ValueError, match="pause_bytes"):
+        PfcConfig(pause_bytes=0.0)
+    with pytest.raises(ValueError, match="resume"):
+        PfcConfig(pause_bytes=100.0, resume_bytes=200.0)
+    assert PfcConfig(pause_bytes=100.0).resume_bytes == 50.0
+    with pytest.raises(ValueError, match="cut"):
+        EcnConfig(mark_bytes=100.0, cut=1.5)
+
+
+# -- EWMA tracking on a step profile (satellite) -----------------------------
+
+
+def test_ewma_tracks_step_profile():
+    """The health estimator must *track* a mid-run degradation: detect the
+    step within a bounded number of observations and settle near truth."""
+    stream = _stream(rounds=8)
+    t_step = stream[3][0]
+    slow = 0.5
+    spec = FaultSpec(rail_profiles={N - 1: step_profile(t_step, slow)})
+    est = RailHealthEstimator(N, nominal_rate=50e9, track_history=True)
+    res = run_streaming_collective(
+        stream, "rails-online", chunk_bytes=CHUNK, fault_spec=spec, feedback=est
+    )
+    assert res.health is est
+    detect = est.time_to_detect(N - 1, slow, tol=0.15, after=t_step)
+    assert detect is not None, "step never detected"
+    seconds, observations = detect
+    assert observations <= 30  # pinned: EWMA(0.3) needs ~6 obs for 85% settle
+    assert seconds >= 0.0
+    # Settled estimate within 20% of the true post-step speed.
+    assert est.steady_state_error(N - 1, slow, tail=10) < 0.20
+    # Healthy rails keep reading healthy.
+    assert est.speeds()[0] > 0.8
+
+
+def test_tracking_metrics_need_history():
+    est = RailHealthEstimator(N, nominal_rate=50e9)
+    with pytest.raises(ValueError, match="track_history"):
+        est.time_to_detect(0, 0.5)
+    with pytest.raises(ValueError, match="track_history"):
+        est.steady_state_error(0, 0.5)
+
+
+# -- plan-time profile pre-charge (satellite) --------------------------------
+
+
+def test_straggler_precharge_from_profile():
+    weights = np.full(64, 4.0 * 2**20)
+    profile = step_profile(10.0, 0.5)
+    speeds = [1.0, 1.0, 1.0, profile]
+    # Planned before the step: the profile reads healthy.
+    res_before, loads_b, _f, _i = degraded_rail_schedule(weights, 4, speeds, at_time=0.0)
+    ref_before = degraded_rail_schedule(weights, 4, [1.0, 1.0, 1.0, 1.0])
+    np.testing.assert_allclose(loads_b, ref_before[1])
+    # Planned inside the degraded phase: pre-charge matches the scalar 0.5.
+    _res, loads_a, _f, _i = degraded_rail_schedule(weights, 4, speeds, at_time=20.0)
+    ref_after = degraded_rail_schedule(weights, 4, [1.0, 1.0, 1.0, 0.5])
+    np.testing.assert_allclose(loads_a, ref_after[1])
+    assert loads_a[3] < loads_a[0]
+    np.testing.assert_allclose(speeds_at(speeds, 20.0), [1.0, 1.0, 1.0, 0.5])
+
+
+def test_pipeline_threads_fault_spec():
+    from repro.core.traffic import microbatch_stream
+    from repro.sched import run_pipeline
+
+    tms = microbatch_stream(M, N, 3, bytes_per_pair=B / 3, seed=4)
+    clean = run_pipeline(tms, chunk_bytes=CHUNK, use_replay=False)
+    spec = FaultSpec(loss=LossConfig(rate=0.02, rto=3e-4), seed=3)
+    faulty = run_pipeline(tms, chunk_bytes=CHUNK, use_replay=False, fault_spec=spec)
+    assert faulty.streaming.sim.dynamics["retransmits"] > 0
+    assert faulty.makespan > clean.makespan
+
+
+# -- the §VI-E fault regression ----------------------------------------------
+
+
+def test_sec6e_rails_feedback_beats_reactive_under_faults():
+    """Seeded 1% Gilbert–Elliott loss + one rail stepping to 0.5× mid-run:
+    proactive rails-online with EWMA feedback completes the stream faster
+    than the reactive baselines (the paper's §VI-E ordering), and faster
+    than rails-online flying blind."""
+    stream = _stream(rounds=6)
+    t_mid = stream[3][0]
+
+    def spec():
+        return FaultSpec(
+            rail_profiles={N - 1: step_profile(t_mid, 0.5)},
+            loss=LossConfig(
+                rate=0.01, rto=5e-4, bad_rate=0.25, p_enter_bad=0.02, p_leave_bad=0.3
+            ),
+            seed=11,
+        )
+
+    def run(pol, fb):
+        return run_streaming_collective(
+            stream, pol, chunk_bytes=CHUNK, fault_spec=spec(), feedback=fb
+        )
+
+    rails_fb = run("rails-online", True)
+    rails_blind = run("rails-online", False)
+    plb = run("plb", False)
+    reps = run("reps", False)
+    assert rails_fb.sim.dynamics["drops"] > 0  # the faults actually fired
+    assert rails_fb.metrics.makespan < plb.metrics.makespan
+    assert rails_fb.metrics.makespan < reps.metrics.makespan
+    assert rails_fb.metrics.cct["p99"] < plb.metrics.cct["p99"]
+    assert rails_fb.metrics.cct["p99"] < reps.metrics.cct["p99"]
+    # Feedback is what closes the loop on the flapping rail.
+    assert rails_fb.metrics.makespan < rails_blind.metrics.makespan
