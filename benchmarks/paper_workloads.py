@@ -14,6 +14,7 @@ from repro.core.traffic import (
     mixtral_trace_workload,
     receiver_skew_workload,
     sender_skew_workload,
+    serve_workload,
     sparse_topk_workload,
     uniform_workload,
 )
@@ -106,4 +107,27 @@ def drift_stream(num_rounds: int = 6, seed: int = 3):
     return drifting_gating_stream(
         M, N, num_rounds, tokens_per_round=tokens,
         bytes_per_token=BYTES / (N * N), seed=seed,
+    )
+
+
+# -- serving workloads (bench_serving) ---------------------------------------
+
+
+def serve_requests(mean_gap: float, process: str = "poisson", seed: int = 12):
+    """Request stream for ``bench_serving`` at the current scale: prefill +
+    decode rounds per request, expert-routed, arrivals paced by
+    ``mean_gap`` (smaller gap = higher offered load). Prefill is sized so
+    each round splits into ~10² chunks — enough multiplicity that the
+    slow-rail structural effect (not per-chunk loss luck) sets the tail."""
+    return serve_workload(
+        M, N,
+        num_requests=16 if QUICK else 48,
+        mean_gap=mean_gap,
+        process=process,
+        prefill_tokens=512 if QUICK else 1024,
+        decode_rounds=2 if QUICK else 4,
+        decode_tokens=8,
+        decode_gap=1e-4,
+        bytes_per_token=16 * 2**10,
+        seed=seed,
     )

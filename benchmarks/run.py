@@ -494,6 +494,69 @@ def bench_fault_sweep() -> None:
             )
 
 
+def bench_serving() -> None:
+    """Serving-path tail-latency grid: arrival rate × fault × policy.
+
+    Each cell runs one seeded request stream (prefill + decode rounds per
+    request, Poisson arrivals) through ``repro.serve.run_serving`` and
+    reports release-relative TTFT percentiles (p50/p99/p99.9 — the SLO
+    metrics of the serving regime) plus the per-cell ordering row:
+    reactive-over-rails p99-TTFT ratios under the PR-4 degraded fabrics.
+    Structured bench key ``serve_g<gap>_<fault>`` feeds
+    ``perf_report.py --serving``.
+    """
+    from repro.sched.serving import run_serving
+
+    gaps = (5e-4, 1.25e-4)  # moderate load / near-saturation
+    faults = {
+        "clean": lambda: None,
+        "degraded": lambda: FaultSpec(
+            rail_profiles={W.N - 1: step_profile(0.0, 0.25)},
+            loss=LossConfig(rate=0.01, rto=1e-4, bad_rate=0.3,
+                            p_enter_bad=0.02, p_leave_bad=0.3),
+            seed=11,
+        ),
+    }
+    if not W.QUICK:
+        faults["loss"] = lambda: FaultSpec(
+            loss=LossConfig(rate=0.02, rto=1e-4, bad_rate=0.3,
+                            p_enter_bad=0.02, p_leave_bad=0.3),
+            seed=11,
+        )
+    for gap in gaps:
+        wl = W.serve_requests(mean_gap=gap)
+        for fname, make_spec in faults.items():
+            cell = f"serve_g{gap:g}_{fname}"
+            p99_ttft, us_tot = {}, 0.0
+            for pol, fb in (("rails-online", True), ("plb", False), ("reps", False)):
+                res, us = _timed(
+                    lambda pol=pol, fb=fb: run_serving(
+                        wl, pol, chunk_bytes=256 * 2**10,
+                        fault_spec=make_spec(), feedback=fb,
+                    )
+                )
+                row = res.row()
+                p99_ttft[pol] = row["ttft_p99_s"]
+                us_tot += us
+                # No structured bench key: the full row name (unique per
+                # policy, still `serve_`-prefixed) keys the trajectory, so
+                # these never collide with the cell's ordering row.
+                _emit(
+                    f"{cell}_{pol}", us,
+                    f"ttft_p50={row['ttft_p50_s']:.3e}s"
+                    f"_p99={row['ttft_p99_s']:.3e}s"
+                    f"_p99.9={row['ttft_p99.9_s']:.3e}s"
+                    f"_retr={row['retransmits']}",
+                )
+            rails = p99_ttft["rails-online"]
+            _emit(
+                f"{cell}_ordering", us_tot,
+                f"plb={p99_ttft['plb'] / rails:.3f}x"
+                f"_reps={p99_ttft['reps'] / rails:.3f}x_rails_p99_ttft",
+                bench=cell, backend="event",
+            )
+
+
 def bench_online_window_sweep() -> None:
     """ROADMAP windowed re-planning sweep: CCT vs decision latency as the
     re-planning window goes 1 (greedy on arrival) → ∞ (whole-batch LPT),
@@ -574,6 +637,7 @@ BENCHES = {
     "online_replay": bench_online_replay,
     "online_window_sweep": bench_online_window_sweep,
     "fault_sweep": bench_fault_sweep,
+    "serving": bench_serving,
 }
 
 

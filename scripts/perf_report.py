@@ -4,12 +4,18 @@ render the netsim benchmark trajectory across BENCH_netsim.json snapshots.
     PYTHONPATH=src python scripts/perf_report.py results/perf
     PYTHONPATH=src python scripts/perf_report.py BENCH_a.json BENCH_b.json
     PYTHONPATH=src python scripts/perf_report.py --fault-sweep BENCH_a.json ...
+    PYTHONPATH=src python scripts/perf_report.py --serving BENCH_a.json ...
 
 ``--fault-sweep`` restricts the trajectory to the fault-sweep grid (rows
 whose bench key starts with ``fault_``): one row per (loss rate ×
 degradation depth) cell and policy, so the §VI-E ordering margins —
 reactive-over-rails CCT ratios under loss + mid-run degradation — read as
 their own table across snapshots.
+
+``--serving`` restricts it to the serving-path grid (bench keys starting
+with ``serve_``): one row per (arrival rate × fault) cell and policy,
+carrying p50/p99/p99.9 TTFT plus the per-cell reactive-over-rails
+p99-TTFT ordering.
 
 Netsim trajectory rows are keyed by **(bench, backend, size)** — not by
 bench name alone — so the event and vector measurements of one benchmark
@@ -125,10 +131,17 @@ def netsim_trajectory(paths: list[str], bench_prefix: str | None = None) -> None
 if __name__ == "__main__":
     args = sys.argv[1:]
     fault_sweep = "--fault-sweep" in args
-    args = [a for a in args if a != "--fault-sweep"]
+    serving = "--serving" in args
+    args = [a for a in args if a not in ("--fault-sweep", "--serving")]
+    if fault_sweep and serving:
+        raise SystemExit("--fault-sweep and --serving are mutually exclusive")
+    prefix = "fault_" if fault_sweep else "serve_" if serving else None
     if args and all(a.endswith(".json") for a in args):
-        netsim_trajectory(args, bench_prefix="fault_" if fault_sweep else None)
-    elif fault_sweep:
-        raise SystemExit("--fault-sweep needs one or more BENCH_*.json paths")
+        netsim_trajectory(args, bench_prefix=prefix)
+    elif prefix is not None:
+        raise SystemExit(
+            f"--{'fault-sweep' if fault_sweep else 'serving'} needs one or "
+            "more BENCH_*.json paths"
+        )
     else:
         main(args[0] if args else "results/perf")

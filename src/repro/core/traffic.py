@@ -35,10 +35,16 @@ __all__ = [
     "sender_skew_workload",
     "receiver_skew_workload",
     "mixtral_trace_workload",
+    "expert_counts_to_matrix",
     "moe_gating_traffic",
     "microbatch_stream",
     "bursty_release_times",
     "drifting_gating_stream",
+    "ServeRequest",
+    "ServeRound",
+    "ServeWorkload",
+    "request_arrival_times",
+    "serve_workload",
     "WORKLOADS",
 ]
 
@@ -311,6 +317,26 @@ def mixtral_trace_workload(
 # ---------------------------------------------------------------------------
 
 
+def expert_counts_to_matrix(counts, num_domains: int) -> np.ndarray:
+    """Per-expert token counts -> ``(M, M)`` shard-to-shard gating counts.
+
+    The repo-wide placement convention: experts sit round-robin over
+    domains, senders are uniform (every domain contributes equally to
+    each expert domain's ingress), and intra-domain traffic stays on
+    NVLink (zero diagonal). Shared by the training-loop hook
+    (:class:`~repro.sched.online.GatingFeedbackHook`) and the serving
+    trace replay (:func:`~repro.sched.serving.simulate_decode_trace`) so
+    a placement change lands in exactly one spot.
+    """
+    counts = np.asarray(counts, dtype=np.float64).ravel()
+    m = num_domains
+    domain_tokens = np.zeros(m)
+    np.add.at(domain_tokens, np.arange(counts.size) % m, counts)
+    c2 = np.tile(domain_tokens / max(m - 1, 1), (m, 1))
+    np.fill_diagonal(c2, 0.0)
+    return c2
+
+
 def moe_gating_traffic(
     counts: np.ndarray,
     bytes_per_token: float,
@@ -436,6 +462,215 @@ def drifting_gating_stream(
         out.append(TrafficMatrix(d1=tm.d1, d2=tm.d2, name="drifting-gating"))
         log_pop = log_pop + rng.normal(0.0, drift, size=num_experts)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Serving workloads (the request-level regime of `repro.serve`)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One inference request: a prefill burst plus autoregressive decode.
+
+    ``arrival`` is the instant the request reaches the serving stack — the
+    origin every latency metric (TTFT, sojourn) is measured from.
+    ``home_domain`` is the expert-parallel shard hosting the request's
+    activations (its tokens enter the fabric from that domain's NICs).
+    """
+
+    req_id: int
+    arrival: float
+    home_domain: int
+    prefill_tokens: int
+    decode_rounds: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRound:
+    """One fabric round of a request: its prefill or one decode step.
+
+    ``step`` is 0 for the prefill round, 1..decode_rounds for decode
+    steps. ``release`` is when the round's all-to-all hits the fabric.
+    """
+
+    release: float
+    req_id: int
+    kind: str  # "prefill" | "decode"
+    step: int
+    tm: TrafficMatrix
+
+
+@dataclasses.dataclass
+class ServeWorkload:
+    """A request stream lowered to release-timed all-to-all rounds.
+
+    ``rounds`` is sorted by release time, so after
+    ``run_streaming_collective`` the streaming ``round_id`` equals the
+    index into this list (the driver relies on that to map completions
+    back to requests).
+    """
+
+    requests: list[ServeRequest]
+    rounds: list[ServeRound]
+    num_domains: int
+    num_rails: int
+
+    def shifted(self, delta: float) -> "ServeWorkload":
+        """The same workload translated ``delta`` seconds later in time.
+
+        Latency metrics are release-relative, so a shifted workload must
+        report identical TTFT/sojourn statistics — the property the tests
+        pin down.
+        """
+        return ServeWorkload(
+            requests=[
+                dataclasses.replace(r, arrival=r.arrival + delta)
+                for r in self.requests
+            ],
+            rounds=[
+                dataclasses.replace(r, release=r.release + delta)
+                for r in self.rounds
+            ],
+            num_domains=self.num_domains,
+            num_rails=self.num_rails,
+        )
+
+
+def request_arrival_times(
+    num_requests: int,
+    mean_gap: float,
+    process: str = "poisson",
+    burstiness: float = 3.0,
+    diurnal_depth: float = 0.8,
+    diurnal_periods: float = 2.0,
+    seed: int = 0,
+) -> np.ndarray:
+    """Request arrival instants for the three serving regimes.
+
+    * ``poisson`` — memoryless arrivals (exponential gaps, the open-loop
+      load-test default).
+    * ``bursty`` — gamma gaps with CoV ``burstiness`` (>1 clusters
+      requests into bursts separated by idle stretches — the incast-prone
+      regime).
+    * ``diurnal`` — a nonhomogeneous Poisson process whose rate swings
+      sinusoidally by ``±diurnal_depth`` around the mean over
+      ``diurnal_periods`` full cycles across the trace (peak-hour /
+      trough-hour load shape). Implemented by time-warping a homogeneous
+      process through the inverse cumulative rate.
+
+    First arrival is at t=0; gaps average ``mean_gap`` in every regime.
+    """
+    if num_requests < 1:
+        raise ValueError("need at least one request")
+    if mean_gap < 0:
+        raise ValueError("mean_gap must be >= 0")
+    rng = np.random.default_rng(seed)
+    if process == "poisson":
+        gaps = rng.exponential(mean_gap, size=num_requests - 1)
+        return np.concatenate([[0.0], np.cumsum(gaps)])
+    if process == "bursty":
+        return bursty_release_times(num_requests, mean_gap, burstiness, seed=seed)
+    if process == "diurnal":
+        if not 0.0 <= diurnal_depth < 1.0:
+            raise ValueError("diurnal_depth must be in [0, 1)")
+        gaps = rng.exponential(mean_gap, size=num_requests - 1)
+        u = np.concatenate([[0.0], np.cumsum(gaps)])  # homogeneous arrivals
+        horizon = max(float(u[-1]), mean_gap)
+        if horizon <= 0.0:  # mean_gap=0: everything arrives at once
+            return u
+        # rate(t) = 1 + depth*sin(2π·periods·t/horizon); warp through the
+        # inverse of Λ(t) = ∫rate so arrivals bunch where the rate peaks.
+        grid = np.linspace(0.0, horizon, 4096)
+        omega = 2.0 * np.pi * diurnal_periods / horizon
+        lam = grid + (diurnal_depth / omega) * (1.0 - np.cos(omega * grid))
+        return np.interp(u, lam, grid)
+    raise ValueError(f"unknown arrival process {process!r}; "
+                     "choose poisson|bursty|diurnal")
+
+
+def serve_workload(
+    num_domains: int,
+    num_rails: int,
+    num_requests: int,
+    mean_gap: float,
+    process: str = "poisson",
+    prefill_tokens: int = 128,
+    decode_rounds: int = 4,
+    decode_tokens: int = 8,
+    decode_gap: float = 1e-3,
+    bytes_per_token: float = 16 * 2**10,
+    num_experts: int = 8,
+    top_k: int = 2,
+    popularity_alpha: float = 0.8,
+    burstiness: float = 3.0,
+    seed: int = 0,
+) -> ServeWorkload:
+    """Request-level serving workload: arrivals → expert-routed rounds.
+
+    Each request lands on a ``home_domain`` (round-robin over domains) and
+    emits one *prefill* round at its arrival (``prefill_tokens`` routed
+    through the gate) followed by ``decode_rounds`` *decode* rounds at a
+    fixed ``decode_gap`` cadence (the per-token compute step), each
+    carrying ``decode_tokens`` routed tokens — small and latency-critical,
+    the regime where tail sojourn (p99 TTFT) replaces makespan as the
+    figure of merit. Tokens choose ``top_k`` of ``num_experts`` experts
+    drawn from a Zipf(``popularity_alpha``) popularity profile; experts
+    sit round-robin on domains (the `GatingFeedbackHook` convention), and
+    traffic to the home domain's own experts stays on NVLink.
+    """
+    if num_domains < 2:
+        raise ValueError("serving fabric needs at least 2 domains")
+    m, n = num_domains, num_rails
+    rng = np.random.default_rng(seed)
+    arrivals = request_arrival_times(
+        num_requests, mean_gap, process, burstiness=burstiness, seed=seed
+    )
+    popularity = _zipf_weights(num_experts, popularity_alpha)
+    rng.shuffle(popularity)
+    expert_domain = np.arange(num_experts) % m
+
+    def round_tm(home: int, tokens: int, kind: str) -> TrafficMatrix:
+        # Every token routes to top_k experts (drawn by popularity; the
+        # rare same-expert repeat just doubles that expert's share, which
+        # is fine for traffic purposes). Tokens landing on the home
+        # domain's own experts stay on NVLink — drop them from the matrix
+        # so the Theorem-2 bound only counts fabric bytes.
+        draws = rng.choice(num_experts, size=(tokens, top_k), p=popularity)
+        counts = np.zeros((m, m))
+        np.add.at(counts[home], expert_domain[draws].ravel(), 1.0)
+        counts[home, home] = 0.0
+        tm = moe_gating_traffic(counts, bytes_per_token, n)
+        return TrafficMatrix(d1=tm.d1, d2=tm.d2, name=f"serve-{kind}")
+
+    requests: list[ServeRequest] = []
+    rounds: list[ServeRound] = []
+    for i in range(num_requests):
+        home = i % m
+        arrival = float(arrivals[i])
+        requests.append(
+            ServeRequest(
+                req_id=i,
+                arrival=arrival,
+                home_domain=home,
+                prefill_tokens=prefill_tokens,
+                decode_rounds=decode_rounds,
+            )
+        )
+        rounds.append(
+            ServeRound(arrival, i, "prefill", 0, round_tm(home, prefill_tokens, "prefill"))
+        )
+        for k in range(1, decode_rounds + 1):
+            rounds.append(
+                ServeRound(
+                    arrival + k * decode_gap, i, "decode", k,
+                    round_tm(home, decode_tokens, "decode"),
+                )
+            )
+    rounds.sort(key=lambda r: r.release)
+    return ServeWorkload(
+        requests=requests, rounds=rounds, num_domains=m, num_rails=n
+    )
 
 
 WORKLOADS: dict[str, Callable[..., TrafficMatrix]] = {

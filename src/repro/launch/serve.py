@@ -4,9 +4,19 @@ Small-scale runnable (CPU, reduced config) and production-mesh lowering
 share the same step functions. Requests are batched; decode is a jit'd
 single-token step donated in place.
 
+``--sim-fabric`` closes the loop with the RailS simulator: the decode
+loop's *real* per-step expert routing counts (MoE archs; uniform synthetic
+counts for dense ones) and measured step timestamps are replayed as
+release-timed all-to-all rounds through
+:func:`repro.sched.serving.simulate_decode_trace`, reporting the p50/p99/
+p99.9 per-token fabric latency those decode batches would pay on the
+chosen policy — optionally under a degraded fabric (``--sim-fault``).
+
 Example:
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --reduced \
         --batch 4 --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
+        --batch 2 --prompt-len 8 --gen 8 --sim-fabric --sim-fault degraded
 """
 
 from __future__ import annotations
@@ -27,6 +37,52 @@ from repro.parallel.mesh_view import build_mesh_context
 from repro.parallel.sharding import param_shardings
 
 
+def _sim_fault_spec(kind: str, num_rails: int):
+    """The --sim-fault presets: the PR-4 fault grid's serving-path cells."""
+    if kind == "none":
+        return None
+    from repro.netsim import FaultSpec, LossConfig, step_profile
+
+    if kind == "loss":
+        return FaultSpec(
+            loss=LossConfig(rate=0.01, rto=5e-4, bad_rate=0.3,
+                            p_enter_bad=0.02, p_leave_bad=0.3),
+            seed=11,
+        )
+    if kind == "degraded":
+        return FaultSpec(
+            rail_profiles={num_rails - 1: step_profile(0.0, 0.25)},
+            loss=LossConfig(rate=0.005, rto=5e-4, bad_rate=0.15,
+                            p_enter_bad=0.02, p_leave_bad=0.3),
+            seed=11,
+        )
+    raise ValueError(f"unknown --sim-fault {kind!r}")
+
+
+def _run_sim_fabric(args, cfg, counts_per_step, releases) -> dict:
+    """Replay the recorded decode trace onto the simulated rail fabric."""
+    from repro.sched.serving import simulate_decode_trace
+
+    res = simulate_decode_trace(
+        counts_per_step,
+        releases,
+        num_domains=args.sim_domains,
+        num_rails=args.sim_rails,
+        bytes_per_token=float(cfg.d_model * 2),  # bf16 activations
+        policy=args.sim_policy,
+        fault_spec=_sim_fault_spec(args.sim_fault, args.sim_rails),
+        feedback=args.sim_policy == "rails-online",
+    )
+    s = res.summary()
+    print(
+        f"sim-fabric [{args.sim_policy}, fault={args.sim_fault}, "
+        f"{args.sim_domains}x{args.sim_rails}]: per-token fabric latency "
+        f"p50 {s['p50'] * 1e6:.1f}us p99 {s['p99'] * 1e6:.1f}us "
+        f"p99.9 {s['p99.9'] * 1e6:.1f}us"
+    )
+    return {"summary": s, "token_latency": res.token_latency}
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -36,6 +92,21 @@ def main(argv=None) -> dict:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument(
+        "--sim-fabric",
+        action="store_true",
+        help="replay the decode loop's routing counts + step timing onto "
+        "the simulated rail fabric and report per-token p99/p99.9 latency",
+    )
+    ap.add_argument("--sim-domains", type=int, default=8,
+                    help="fabric domains (M) for --sim-fabric")
+    ap.add_argument("--sim-rails", type=int, default=8,
+                    help="rails per domain (N) for --sim-fabric")
+    ap.add_argument("--sim-policy", type=str, default="rails-online",
+                    help="load-balancing policy for --sim-fabric")
+    ap.add_argument("--sim-fault", choices=("none", "loss", "degraded"),
+                    default="none",
+                    help="degraded-fabric preset for --sim-fabric")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -45,15 +116,31 @@ def main(argv=None) -> dict:
     ctx = build_mesh_context(mesh, cfg)
     max_len = args.prompt_len + args.gen
 
+    # Real gating counts exist only for MoE archs; --sim-fabric on dense
+    # models falls back to uniform synthetic counts (batch tokens spread
+    # evenly over 8 pseudo-experts) so the timing replay still works.
+    trace_counts = args.sim_fabric and bool(cfg.num_experts)
+
     key = jax.random.PRNGKey(args.seed)
     with ctx.mesh:
         params = init_params(cfg, key)
         params = jax.tree.map(jax.device_put, params, param_shardings(cfg, ctx, params))
-        decode = jax.jit(make_decode_step(cfg, ctx), donate_argnums=(1,))
+        decode = jax.jit(
+            make_decode_step(cfg, ctx, return_counts=trace_counts),
+            donate_argnums=(1,),
+        )
 
         rng = np.random.default_rng(args.seed)
         prompts = rng.integers(2, cfg.vocab_size, size=(args.batch, args.prompt_len))
         cache = init_cache(cfg, args.batch, max_len)
+
+        def step(logits_cache_args):
+            """One decode call, normalizing the optional counts output."""
+            out = decode(*logits_cache_args)
+            if trace_counts:
+                return out
+            logits, new_cache = out
+            return logits, new_cache, None
 
         # Prefill via repeated decode steps (token-at-a-time priming keeps
         # one compiled program; a fused prefill path exists for the dry-run).
@@ -61,17 +148,22 @@ def main(argv=None) -> dict:
         logits = None
         for pos in range(args.prompt_len):
             batch = {"tokens": jnp.asarray(prompts[:, pos : pos + 1], jnp.int32)}
-            logits, cache = decode(params, cache, batch, jnp.int32(pos))
+            logits, cache, _ = step((params, cache, batch, jnp.int32(pos)))
         t_prefill = time.time() - t0
 
         generated = []
+        step_counts: list[np.ndarray] = []
+        step_times: list[float] = []
         t1 = time.time()
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         for i in range(args.gen):
             generated.append(np.asarray(tok))
-            logits, cache = decode(
-                params, cache, {"tokens": tok}, jnp.int32(args.prompt_len + i)
+            step_times.append(time.time())
+            logits, cache, counts = step(
+                (params, cache, {"tokens": tok}, jnp.int32(args.prompt_len + i))
             )
+            if counts is not None:
+                step_counts.append(np.asarray(counts))
             if args.temperature > 0:
                 key, sub = jax.random.split(key)
                 tok = jax.random.categorical(sub, logits / args.temperature)[:, None]
@@ -84,7 +176,18 @@ def main(argv=None) -> dict:
     print(f"prefill {args.prompt_len} tok x{args.batch}: {t_prefill:.2f}s")
     print(f"decode {args.gen} tok x{args.batch}: {t_gen:.2f}s  ({tput:.1f} tok/s)")
     print("sample:", out_tokens[0][:12])
-    return {"tokens": out_tokens, "tput": tput}
+    result = {"tokens": out_tokens, "tput": tput}
+    if args.sim_fabric and args.gen > 0:
+        if not step_counts:
+            # Dense arch: uniform synthetic routing (the step's batch
+            # tokens spread evenly over enough pseudo-experts to cover
+            # every fabric domain), real cadence.
+            k = max(8, args.sim_domains)
+            step_counts = [np.full(k, args.batch / k) for _ in step_times]
+        result["sim_fabric"] = _run_sim_fabric(
+            args, cfg, step_counts, np.asarray(step_times)
+        )
+    return result
 
 
 if __name__ == "__main__":

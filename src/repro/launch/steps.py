@@ -148,9 +148,21 @@ def make_prefill_step(cfg: ModelConfig, ctx: MeshContext, shape: Optional[ShapeS
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, ctx: MeshContext):
+def make_decode_step(cfg: ModelConfig, ctx: MeshContext, return_counts: bool = False):
+    """Decode-step factory. ``return_counts=True`` surfaces the step's
+    per-expert routed-token counts (``(logits, cache, counts)``) — the
+    gating trace `launch/serve.py --sim-fabric` replays onto the
+    simulated rail fabric."""
     shard_fn = make_shard_fn(ctx)
     ep_info = ctx.ep_info
+
+    if return_counts:
+        def decode_step_counts(params, cache, batch, pos):
+            return decode_fn(
+                params, cfg, cache, batch["tokens"], pos, ep_info, shard_fn,
+                return_counts=True,
+            )
+        return decode_step_counts
 
     def decode_step(params, cache, batch, pos):
         logits, new_cache = decode_fn(

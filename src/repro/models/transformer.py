@@ -475,10 +475,15 @@ def _scan_layers_inplace(body, params_stack, cache, x, n_layers: int):
 
 
 def decode_fn(params, cfg: ModelConfig, cache: dict, tokens, pos, ep_info=None,
-              shard_fn: Callable = Identity):
+              shard_fn: Callable = Identity, return_counts: bool = False):
     """One decode step. ``tokens: (B, 1)``, ``pos``: scalar position.
 
-    Returns ``(logits (B, V-softcapped), new_cache)``.
+    Returns ``(logits (B, V-softcapped), new_cache)``, or with
+    ``return_counts=True`` ``(logits, new_cache, moe_counts)`` where
+    ``moe_counts`` is the step's per-expert routed-token counts summed
+    over layers (``(num_experts,)`` int32; all zeros for non-MoE
+    families) — the real gating trace the serving-path fabric replay
+    (``launch/serve.py --sim-fabric``) consumes.
     """
     dt = dtype_of(cfg)
     x = params["embed"][tokens]
@@ -487,9 +492,17 @@ def decode_fn(params, cfg: ModelConfig, cache: dict, tokens, pos, ep_info=None,
     fam = cfg.family
     bl = params["blocks"]
     new_cache: dict = {}
+    moe_counts = jnp.zeros((max(cfg.num_experts, 1),), jnp.int32)
 
     if fam in ("dense", "vlm", "moe"):
         is_moe = fam == "moe"
+        if return_counts and is_moe and cfg.attn_pattern == "alt_local_global":
+            # The alt-pattern branch has no MoE layers to count; failing
+            # loudly beats replaying an all-zero gating trace.
+            raise ValueError(
+                "return_counts is not supported for MoE configs with "
+                "attn_pattern='alt_local_global'"
+            )
         if cfg.attn_pattern == "alt_local_global":
             def pair(xc, p, c):
                 c_l, c_g = c["local"], c["global"]
@@ -516,6 +529,21 @@ def decode_fn(params, cfg: ModelConfig, cache: dict, tokens, pos, ep_info=None,
                 pair, bl, {"local": cache["local"], "global": cache["global"]},
                 x, cfg.num_layers // 2,
             )
+        elif is_moe and return_counts:
+            # Thread a per-expert count accumulator through the layer-scan
+            # carry: the gating trace of this decode step, summed over
+            # layers — what forward_hidden reports for training steps.
+            def body_counts(carry, p, c):
+                xc, cnts = carry
+                h, c = attn_decode(p["attn"], cfg, rmsnorm(xc, p["ln1"], cfg.rms_eps),
+                                   c, pos, window=_window_for(cfg, "swa"))
+                xc = xc + h
+                out, _a, cnt = moe_apply(p["moe"], cfg, rmsnorm(xc, p["ln2"], cfg.rms_eps), ep_info)
+                return (xc + out, cnts + cnt), c
+            (x, moe_counts), kv = _scan_layers_inplace(
+                body_counts, bl, cache["kv"], (x, moe_counts), cfg.num_layers
+            )
+            new_cache = {"kv": kv}
         else:
             def body(xc, p, c):
                 h, c = attn_decode(p["attn"], cfg, rmsnorm(xc, p["ln1"], cfg.rms_eps),
@@ -597,4 +625,7 @@ def decode_fn(params, cfg: ModelConfig, cache: dict, tokens, pos, ep_info=None,
         raise ValueError(fam)
 
     x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
-    return logits_last(params, cfg, x), new_cache
+    logits = logits_last(params, cfg, x)
+    if return_counts:
+        return logits, new_cache, moe_counts
+    return logits, new_cache

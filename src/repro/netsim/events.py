@@ -95,12 +95,31 @@ import numpy as np
 from .linkmodel import GilbertElliott
 from .topology import RailTopology
 
-__all__ = ["ChunkJob", "SimResult", "Engine", "cct_percentile_dict"]
+__all__ = [
+    "ChunkJob",
+    "SimResult",
+    "Engine",
+    "DEFAULT_QS",
+    "cct_percentile_dict",
+    "quantile_label",
+]
 
 _INF = float("inf")
 
 
-def cct_percentile_dict(values, qs=(50.0, 80.0, 95.0, 99.0)) -> dict[str, float]:
+#: Default quantile set for CCT/latency summaries. 99.9 rides along so the
+#: serving-path tail (p99.9 TTFT) is reported everywhere without another pass.
+DEFAULT_QS = (50.0, 80.0, 95.0, 99.0, 99.9)
+
+
+def quantile_label(q: float) -> str:
+    """``p50`` / ``p99`` / ``p99.9`` — fractional quantiles keep their
+    fraction. The old ``f"p{int(q)}"`` silently collapsed 99.9 onto p99
+    (the later assignment overwrote the p99 value with the p99.9 one)."""
+    return f"p{q:g}"
+
+
+def cct_percentile_dict(values, qs=DEFAULT_QS) -> dict[str, float]:
     """CCT summary dict shared by the event and vector backends.
 
     Sorting before the mean keeps the summation order (and hence the last
@@ -110,10 +129,10 @@ def cct_percentile_dict(values, qs=(50.0, 80.0, 95.0, 99.0)) -> dict[str, float]
     """
     vals = np.sort(np.asarray(values, dtype=np.float64))
     if vals.size == 0:
-        return {"mean": 0.0, **{f"p{int(q)}": 0.0 for q in qs}, "max": 0.0}
+        return {"mean": 0.0, **{quantile_label(q): 0.0 for q in qs}, "max": 0.0}
     out = {"mean": float(vals.mean())}
     for q in qs:
-        out[f"p{int(q)}"] = float(np.percentile(vals, q))
+        out[quantile_label(q)] = float(np.percentile(vals, q))
     out["max"] = float(vals.max())
     return out
 
@@ -183,16 +202,24 @@ class SimResult:
     jobs: list[ChunkJob]
     link_bytes: dict[str, float]
     makespan: float
-    flow_cct: dict[int, float]  # per parent-flow completion time
+    # Per parent-flow *sojourn* time: last-chunk finish minus the flow's
+    # release. The paper's completion-time claims are release-relative; a
+    # flow released late must not report its absolute finish as "CCT".
+    # For t=0 one-shot collectives sojourn == absolute finish bit-exactly
+    # (x - 0.0 == x), which is what keeps the pre-fix goldens valid.
+    flow_cct: dict[int, float]
+    # Release time of each flow (min over its chunks); empty for the
+    # hand-built empty-result case.
+    flow_release: dict[int, float] = dataclasses.field(default_factory=dict)
     # Fabric-dynamics summary (drops / retransmits / marks / pause time);
     # None for static fabrics, where none of these mechanisms exist.
     dynamics: dict | None = None
 
-    def cct_percentiles(self, qs=(50.0, 80.0, 95.0, 99.0)) -> dict[str, float]:
+    def cct_percentiles(self, qs=DEFAULT_QS) -> dict[str, float]:
         return cct_percentile_dict(list(self.flow_cct.values()), qs)
 
     def round_completion_times(self) -> dict[int, float]:
-        """Finish time of the last chunk of each streaming round.
+        """Absolute finish time of the last chunk of each streaming round.
 
         Empty job lists yield an empty mapping (no rounds ever released).
         """
@@ -200,6 +227,30 @@ class SimResult:
         for j in self.jobs:
             out[j.round_id] = max(out.get(j.round_id, 0.0), j.finish_time)
         return out
+
+    def round_times(self) -> tuple[dict[int, float], dict[int, float]]:
+        """(absolute finish, sojourn) per round — one pass over the jobs.
+
+        The sojourn (last finish minus earliest release) is the engine-side
+        version of the ``cct - releases[rnd]`` bookkeeping the pipeline
+        driver used to hand-compute; the streaming driver wants both views,
+        so they share the scan.
+        """
+        finish: dict[int, float] = {}
+        release: dict[int, float] = {}
+        for j in self.jobs:
+            rnd = j.round_id
+            prev_f = finish.get(rnd)
+            if prev_f is None or j.finish_time > prev_f:
+                finish[rnd] = j.finish_time
+            prev_r = release.get(rnd)
+            if prev_r is None or j.arrival_time < prev_r:
+                release[rnd] = j.arrival_time
+        return finish, {rnd: finish[rnd] - release[rnd] for rnd in finish}
+
+    def round_sojourn_times(self) -> dict[int, float]:
+        """Per-round sojourn: last finish minus the round's earliest release."""
+        return self.round_times()[1]
 
 
 class _FifoNetwork:
@@ -843,17 +894,28 @@ class Engine:
         return self._result(all_jobs)
 
     def _result(self, all_jobs: list[ChunkJob]) -> SimResult:
-        flow_cct: dict[int, float] = {}
+        # Track last finish AND earliest release per flow so the reported
+        # CCT is the sojourn (finish - release). All chunks of a flow share
+        # one release in practice (a flow belongs to one round), but min()
+        # keeps the accounting honest for hand-built job lists.
+        flow_finish: dict[int, float] = {}
+        flow_release: dict[int, float] = {}
         for j in all_jobs:
-            prev = flow_cct.get(j.flow_id)
+            fid = j.flow_id
+            prev = flow_finish.get(fid)
             if prev is None or j.finish_time > prev:
-                flow_cct[j.flow_id] = j.finish_time
+                flow_finish[fid] = j.finish_time
+            prev_r = flow_release.get(fid)
+            if prev_r is None or j.arrival_time < prev_r:
+                flow_release[fid] = j.arrival_time
+        flow_cct = {fid: flow_finish[fid] - flow_release[fid] for fid in flow_finish}
         makespan = max((j.finish_time for j in all_jobs), default=0.0)
         return SimResult(
             jobs=all_jobs,
             link_bytes=dict(self.link_bytes),
             makespan=makespan,
             flow_cct=flow_cct,
+            flow_release=flow_release,
             dynamics=self._dynamics_summary(),
         )
 

@@ -53,7 +53,7 @@ import dataclasses
 import numpy as np
 
 from ..core.plan import split_sizes_vector
-from .events import ChunkJob, cct_percentile_dict
+from .events import DEFAULT_QS, ChunkJob, cct_percentile_dict
 from .topology import RailTopology
 
 __all__ = [
@@ -757,8 +757,10 @@ class ArraySimResult:
 
     Duck-types the surface ``compute_metrics`` and the streaming driver
     touch: ``link_bytes``/``makespan`` fields plus ``cct_percentiles`` /
-    ``round_completion_times``; ``flow_cct`` materializes a dict lazily for
-    API compatibility.
+    ``round_completion_times`` / ``round_sojourn_times``; ``flow_cct``
+    materializes a dict lazily for API compatibility. Like the event
+    engine, per-flow CCT is the *sojourn* (finish − release) — identical
+    float op on both backends, so parity still holds bit for bit.
     """
 
     finish: np.ndarray  # (F,) per-chunk completion times
@@ -766,21 +768,37 @@ class ArraySimResult:
     link_bytes: dict[str, float]
     makespan: float
     flow_ids: np.ndarray  # present parent-flow ids, chunk order
-    flow_finish: np.ndarray  # completion per present flow
+    flow_finish: np.ndarray  # absolute completion per present flow
     round_ids: np.ndarray  # present round ids
-    round_finish: np.ndarray  # completion per present round
+    round_finish: np.ndarray  # absolute completion per present round
+    flow_release: np.ndarray  # earliest release per present flow
+    round_release: np.ndarray  # earliest release per present round
 
-    def cct_percentiles(self, qs=(50.0, 80.0, 95.0, 99.0)) -> dict[str, float]:
-        return cct_percentile_dict(self.flow_finish, qs)
+    @property
+    def flow_sojourn(self) -> np.ndarray:
+        return self.flow_finish - self.flow_release
+
+    def cct_percentiles(self, qs=DEFAULT_QS) -> dict[str, float]:
+        return cct_percentile_dict(self.flow_sojourn, qs)
 
     def round_completion_times(self) -> dict[int, float]:
         return {
             int(r): float(t) for r, t in zip(self.round_ids, self.round_finish)
         }
 
+    def round_sojourn_times(self) -> dict[int, float]:
+        return {
+            int(r): float(t - rel)
+            for r, t, rel in zip(self.round_ids, self.round_finish, self.round_release)
+        }
+
+    def round_times(self) -> tuple[dict[int, float], dict[int, float]]:
+        """(absolute finish, sojourn) per round — already materialized."""
+        return self.round_completion_times(), self.round_sojourn_times()
+
     @property
     def flow_cct(self) -> dict[int, float]:
-        return {int(i): float(t) for i, t in zip(self.flow_ids, self.flow_finish)}
+        return {int(i): float(t) for i, t in zip(self.flow_ids, self.flow_sojourn)}
 
 
 def _segment_max(values: np.ndarray, keys: np.ndarray):
@@ -794,6 +812,20 @@ def _segment_max(values: np.ndarray, keys: np.ndarray):
         raise ValueError("segment keys must be non-decreasing in chunk order")
     starts = np.concatenate(([0], np.flatnonzero(d) + 1))
     return keys[starts], np.maximum.reduceat(values, starts)
+
+
+def _segment_min_like(values: np.ndarray, keys: np.ndarray):
+    """Min of ``values`` over the same contiguous key runs as ``_segment_max``.
+
+    Used for per-flow / per-round release times; the key validation
+    already happened in the paired ``_segment_max`` call.
+    """
+    if values.size == 0:
+        return np.empty(0)
+    if keys[0] == keys[-1]:
+        return np.array([values.min()])
+    starts = np.concatenate(([0], np.flatnonzero(np.diff(keys)) + 1))
+    return np.minimum.reduceat(values, starts)
 
 
 def simulate_chunk_arrays(
@@ -876,8 +908,11 @@ def simulate_chunk_arrays(
         flow_id = np.arange(f, dtype=np.int64)
     if round_id is None:
         round_id = np.zeros(f, dtype=np.int64)
+    release_arr = np.asarray(release, dtype=np.float64)
     flow_ids, flow_finish = _segment_max(finish, np.asarray(flow_id))
     round_ids, round_finish = _segment_max(finish, np.asarray(round_id))
+    flow_release = _segment_min_like(release_arr, np.asarray(flow_id))
+    round_release = _segment_min_like(release_arr, np.asarray(round_id))
     return ArraySimResult(
         finish=finish,
         start=start0,
@@ -887,4 +922,6 @@ def simulate_chunk_arrays(
         flow_finish=flow_finish,
         round_ids=round_ids,
         round_finish=round_finish,
+        flow_release=flow_release,
+        round_release=round_release,
     )

@@ -234,7 +234,11 @@ class StreamingResult:
 
     metrics: CollectiveMetrics
     sim: SimResult
-    round_cct: dict[int, float]  # round_id -> last completion time
+    round_cct: dict[int, float]  # round_id -> last *absolute* completion time
+    # round_id -> sojourn (last completion minus the round's release);
+    # the release-relative counterpart of round_cct, computed by the
+    # simulation backends themselves.
+    round_sojourn: dict[int, float] = dataclasses.field(default_factory=dict)
     health: RailHealthEstimator | None = None
 
     @property
@@ -412,10 +416,12 @@ def run_streaming_collective(
             [sent[d] for d in range(m)],
             [loads.get(d, np.zeros(n)) for d in range(m)] if loads else None,
         )
+    round_cct, round_sojourn = result.round_times()
     return StreamingResult(
         metrics=metrics,
         sim=result,
-        round_cct=result.round_completion_times(),
+        round_cct=round_cct,
+        round_sojourn=round_sojourn,
         health=health,
     )
 

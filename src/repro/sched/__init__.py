@@ -22,6 +22,10 @@ package layers that regime on the offline core without changing it:
   per-rail completion histograms, Chrome-trace JSON export.
 * :mod:`~repro.sched.pipeline` — multi-round streaming driver that
   overlaps round k's tail with round k+1's head.
+* :mod:`~repro.sched.serving` — request-level serving driver: Poisson /
+  bursty / diurnal request streams lowered to prefill + decode rounds,
+  scored by release-relative tails (p99/p99.9 TTFT, per-token sojourn)
+  instead of makespan; ``repro.serve`` is the façade.
 
 Entry points: ``netsim.simulate.run_streaming_collective`` (one streaming
 collective, any policy), ``sched.pipeline.run_pipeline`` (overlapped
@@ -40,20 +44,34 @@ from .online import (
     windowed_lpt_schedule,
 )
 from .pipeline import PipelineResult, plan_releases, run_pipeline
+from .serving import (
+    DecodeTraceResult,
+    RequestMetrics,
+    ServingResult,
+    expert_counts_to_matrix,
+    run_serving,
+    simulate_decode_trace,
+)
 from .telemetry import ServiceRecord, TraceRecorder
 
 __all__ = [
     "AdaptiveChunker",
+    "DecodeTraceResult",
     "GatingFeedbackHook",
     "PipelineResult",
     "PlanCache",
     "RailHealthEstimator",
+    "RequestMetrics",
     "RoutingReplayState",
     "ServiceRecord",
+    "ServingResult",
     "TraceRecorder",
+    "expert_counts_to_matrix",
     "online_greedy_schedule",
     "plan_releases",
     "run_pipeline",
+    "run_serving",
+    "simulate_decode_trace",
     "speed_precharge",
     "windowed_lpt_schedule",
 ]

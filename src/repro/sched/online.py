@@ -296,15 +296,9 @@ class GatingFeedbackHook:
         self.plan_cache = PlanCache() if plan_cache is None else plan_cache
 
     def _counts_matrix(self, expert_counts: np.ndarray) -> np.ndarray:
-        counts = np.asarray(expert_counts, dtype=np.float64).ravel()
-        m = self.num_domains
-        domain_tokens = np.zeros(m)
-        np.add.at(domain_tokens, np.arange(counts.size) % m, counts)
-        # Uniform senders: every domain contributes equally to each expert
-        # domain's ingress; intra-domain traffic stays on NVLink.
-        c2 = np.tile(domain_tokens / max(m - 1, 1), (m, 1))
-        np.fill_diagonal(c2, 0.0)
-        return c2
+        from ..core.traffic import expert_counts_to_matrix
+
+        return expert_counts_to_matrix(expert_counts, self.num_domains)
 
     def on_step(self, expert_counts: np.ndarray) -> dict:
         """Consume one iteration's gating counts; return the plan forecast."""

@@ -160,10 +160,11 @@ def run_pipeline(
                 window=window,
             )
             sequential += solo.metrics.makespan
+    # The simulation backends report release-relative sojourns directly
+    # (SimResult.round_sojourn_times); the old `cct - releases[rnd]`
+    # hand-correction lives in the engine now.
     round_cct = streaming.round_cct
-    round_latency = {
-        rnd: cct - releases[rnd] for rnd, cct in round_cct.items()
-    }
+    round_latency = dict(streaming.round_sojourn)
     return PipelineResult(
         streaming=streaming,
         releases=releases,

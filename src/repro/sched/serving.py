@@ -1,0 +1,292 @@
+"""Request-level serving driver: tail latency under degraded fabrics.
+
+Training judges the fabric by makespan — one big collective, everyone
+waits for the last chunk. Serving judges it by *per-request tails*:
+decode-batch all-to-alls are small and latency-critical, and the figure
+of merit is p99/p99.9 time-to-first-token (TTFT) and per-token sojourn,
+exactly the metric regime that motivates REPS-style multipath spraying
+and the MoE-serving latency analyses in PAPERS.md.
+
+This module maps a :class:`~repro.core.traffic.ServeWorkload` (requests →
+release-timed prefill/decode rounds) through
+:func:`~repro.netsim.simulate.run_streaming_collective` — any policy, any
+:class:`~repro.netsim.linkmodel.FaultSpec` — and folds the per-round
+completions back into per-request metrics:
+
+* **TTFT** — prefill-round completion minus the request's *arrival*
+  (release-relative, like every latency here; the first token cannot be
+  emitted before its all-to-all drains).
+* **per-token latency** — each decode round's sojourn (finish − release).
+* **request sojourn** — last round completion minus arrival.
+
+**Shift invariance by construction.** The driver normalizes the workload
+to its earliest release before simulating and measures every metric
+against normalized arrivals, so translating the whole workload by Δ
+seconds reproduces bit-identical statistics — the property
+``tests/test_serving.py`` pins down. (Absolute time origins are
+arbitrary; only the physics between releases matters.) Normalized times
+are snapped to a 1 ns grid first: ``(r + Δ) − (t0 + Δ)`` differs from
+``r − t0`` by an ulp of Δ, and the snap absorbs that rounding (sub-ns
+release placement is far below NIC timestamping resolution anyway), so
+the invariance is exact for any |Δ| up to ~10⁵ s rather than merely
+within fp tolerance.
+
+:func:`simulate_decode_trace` is the replay half: per-step expert counts
+recorded from a *real* decode loop (``launch/serve.py --sim-fabric``)
+drive the simulated fabric at the loop's measured cadence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.traffic import (
+    ServeWorkload,
+    TrafficMatrix,
+    expert_counts_to_matrix,
+    moe_gating_traffic,
+)
+from ..netsim.events import cct_percentile_dict
+
+__all__ = [
+    "SERVE_QS",
+    "RequestMetrics",
+    "ServingResult",
+    "DecodeTraceResult",
+    "run_serving",
+    "expert_counts_to_matrix",
+    "simulate_decode_trace",
+]
+
+#: Serving-path quantiles: the tail is the product (p50 for the body,
+#: p99/p99.9 for the SLO).
+SERVE_QS = (50.0, 90.0, 99.0, 99.9)
+
+#: Release-time grid (seconds). Normalized releases/arrivals snap to this
+#: before simulation so whole-workload time shifts are *exactly* invariant
+#: (the snap absorbs the ulp the shift's own rounding introduces).
+RELEASE_TICK = 1e-9
+
+
+def _snap(t: float) -> float:
+    """Quantize a normalized (release-relative) time to the 1 ns grid."""
+    return round(t / RELEASE_TICK) * RELEASE_TICK
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Per-request latency vectors, all release-relative.
+
+    ``ttft[i]`` / ``sojourn[i]`` align with ``workload.requests[i]``;
+    ``token_latency`` is one entry per decode round (across requests, in
+    round-release order).
+    """
+
+    ttft: np.ndarray
+    token_latency: np.ndarray
+    sojourn: np.ndarray
+
+    def ttft_percentiles(self, qs=SERVE_QS) -> dict[str, float]:
+        return cct_percentile_dict(self.ttft, qs)
+
+    def token_percentiles(self, qs=SERVE_QS) -> dict[str, float]:
+        return cct_percentile_dict(self.token_latency, qs)
+
+    def sojourn_percentiles(self, qs=SERVE_QS) -> dict[str, float]:
+        return cct_percentile_dict(self.sojourn, qs)
+
+    def summary(self, qs=SERVE_QS) -> dict[str, dict[str, float]]:
+        return {
+            "ttft": self.ttft_percentiles(qs),
+            "token_latency": self.token_percentiles(qs),
+            "sojourn": self.sojourn_percentiles(qs),
+        }
+
+
+@dataclasses.dataclass
+class ServingResult:
+    """Outcome of one simulated serving run."""
+
+    workload: ServeWorkload
+    policy: str
+    streaming: object  # netsim.simulate.StreamingResult
+    request: RequestMetrics
+
+    @property
+    def makespan(self) -> float:
+        return self.streaming.metrics.makespan
+
+    def row(self) -> dict:
+        """Flat benchmark row (grid sweeps / BENCH_netsim.json)."""
+        s = self.request.summary()
+        dyn = getattr(self.streaming.sim, "dynamics", None) or {}
+        return {
+            "policy": self.policy,
+            "num_requests": len(self.workload.requests),
+            "ttft_p50_s": s["ttft"]["p50"],
+            "ttft_p99_s": s["ttft"]["p99"],
+            "ttft_p99.9_s": s["ttft"]["p99.9"],
+            "token_p99_s": s["token_latency"]["p99"],
+            "sojourn_p99_s": s["sojourn"]["p99"],
+            "retransmits": dyn.get("retransmits", 0),
+        }
+
+
+def run_serving(
+    workload: ServeWorkload,
+    policy: str = "rails-online",
+    r1: float = 400e9,
+    r2: float = 50e9,
+    chunk_bytes: float = 256 * 2**10,
+    seed: int = 0,
+    probe_every: int = 64,
+    rail_speeds=None,
+    fault_spec=None,
+    feedback: bool = False,
+    window: int | None = None,
+    backend: str = "event",
+) -> ServingResult:
+    """Simulate one serving workload under one policy; return tail metrics.
+
+    Arguments mirror :func:`~repro.netsim.simulate.run_streaming_collective`
+    (``fault_spec`` attaches the PR-4 link-dynamics layer — degraded
+    fabrics are the whole point of a p99 study). The default chunk size is
+    small: decode rounds move tens of KiB, and Theorem-4 multiplicity
+    needs several chunks per rail even then.
+    """
+    from ..netsim.simulate import run_streaming_collective
+
+    if not workload.rounds:
+        raise ValueError("serving workload has no rounds")
+    # Order by release (stable; serve_workload already sorts, but the
+    # mutable dataclass doesn't enforce it and the streaming round_id
+    # mapping below depends on it). Then normalize to the earliest
+    # release and snap to the 1 ns grid: identical simulations for
+    # time-shifted workloads (exact shift invariance), and the engine's
+    # release>=0 contract holds for any absolute arrival origin.
+    ordered = sorted(workload.rounds, key=lambda r: r.release)
+    t0 = ordered[0].release
+    releases = [_snap(r.release - t0) for r in ordered]
+    rounds = [(rel, r.tm) for rel, r in zip(releases, ordered)]
+    streaming = run_streaming_collective(
+        rounds,
+        policy,
+        r1=r1,
+        r2=r2,
+        chunk_bytes=chunk_bytes,
+        seed=seed,
+        probe_every=probe_every,
+        rail_speeds=rail_speeds,
+        fault_spec=fault_spec,
+        feedback=feedback,
+        window=window,
+        backend=backend,
+    )
+    round_cct = streaming.round_cct
+    num_req = len(workload.requests)
+    ttft = np.zeros(num_req)
+    sojourn = np.zeros(num_req)
+    token_latency: list[float] = []
+    for i, rnd in enumerate(ordered):
+        # A round whose traffic matrix is empty (every routed token stayed
+        # on the home domain's NVLink) produces no chunks and never appears
+        # in round_cct — it completes at its own release.
+        fin = round_cct.get(i, releases[i])
+        req = workload.requests[rnd.req_id]
+        arrival = _snap(req.arrival - t0)
+        if rnd.kind == "prefill":
+            ttft[rnd.req_id] = fin - arrival
+        else:
+            # Engine-side sojourn; 0.0 for empty (all-NVLink) rounds —
+            # same convention as simulate_decode_trace.
+            token_latency.append(streaming.round_sojourn.get(i, 0.0))
+        sojourn[rnd.req_id] = max(sojourn[rnd.req_id], fin - arrival)
+    return ServingResult(
+        workload=workload,
+        policy=policy,
+        streaming=streaming,
+        request=RequestMetrics(
+            ttft=ttft,
+            token_latency=np.asarray(token_latency),
+            sojourn=sojourn,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Replay from a real decode loop (launch/serve.py --sim-fabric)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DecodeTraceResult:
+    """Simulated-fabric view of one recorded decode trace."""
+
+    streaming: object  # netsim.simulate.StreamingResult
+    token_latency: np.ndarray  # per decode step, release-relative
+
+    def summary(self, qs=SERVE_QS) -> dict[str, float]:
+        return cct_percentile_dict(self.token_latency, qs)
+
+
+def simulate_decode_trace(
+    counts_per_step,
+    releases,
+    num_domains: int,
+    num_rails: int,
+    bytes_per_token: float,
+    policy: str = "rails-online",
+    chunk_bytes: float = 256 * 2**10,
+    fault_spec=None,
+    feedback: bool = False,
+    r1: float = 400e9,
+    r2: float = 50e9,
+    seed: int = 0,
+) -> DecodeTraceResult:
+    """Drive the simulated fabric with a *real* decode loop's routing.
+
+    ``counts_per_step`` are per-step expert token counts recorded from the
+    model's gate (``decode_fn(..., return_counts=True)``); ``releases``
+    are the loop's measured step timestamps (any origin — normalized
+    internally). Each step becomes one streaming round; the result's
+    per-token latencies are what those decode all-to-alls would have cost
+    on the chosen fabric/policy — closing the trace half of the ROADMAP's
+    "replay from real gating traces" item for the serving path.
+    """
+    from ..netsim.simulate import run_streaming_collective
+
+    releases = np.asarray(releases, dtype=np.float64)
+    if len(counts_per_step) != releases.size:
+        raise ValueError("one release timestamp per decode step required")
+    if releases.size == 0:
+        raise ValueError("decode trace is empty")
+    order = np.argsort(releases, kind="stable")
+    t0 = float(releases[order[0]])
+    rounds: list[tuple[float, TrafficMatrix]] = []
+    for i in order.tolist():
+        c2 = expert_counts_to_matrix(counts_per_step[i], num_domains)
+        tm = moe_gating_traffic(c2, bytes_per_token, num_rails)
+        rounds.append(
+            (
+                _snap(float(releases[i]) - t0),
+                TrafficMatrix(d1=tm.d1, d2=tm.d2, name="decode-trace"),
+            )
+        )
+    streaming = run_streaming_collective(
+        rounds,
+        policy,
+        r1=r1,
+        r2=r2,
+        chunk_bytes=chunk_bytes,
+        seed=seed,
+        fault_spec=fault_spec,
+        feedback=feedback,
+    )
+    # Engine-side sojourns (finish − release); a step whose counts all map
+    # intra-domain produces no chunks and costs the fabric nothing.
+    latency = np.array(
+        [streaming.round_sojourn.get(i, 0.0) for i in range(len(rounds))]
+    )
+    return DecodeTraceResult(streaming=streaming, token_latency=latency)

@@ -1,0 +1,55 @@
+"""Request-level serving simulation layer (``repro.serve``).
+
+Façade over the serving-path subsystem:
+
+* workload generation — :func:`~repro.core.traffic.serve_workload`
+  (Poisson / bursty / diurnal request arrivals; per-request prefill +
+  autoregressive decode rounds, each decode round emitting a small
+  expert-routed all-to-all);
+* simulation driver — :func:`~repro.sched.serving.run_serving` (any
+  policy, any :class:`~repro.netsim.linkmodel.FaultSpec` degraded
+  fabric), scoring release-relative tails: TTFT, per-token latency and
+  request sojourn at p50/p90/p99/p99.9;
+* trace replay — :func:`~repro.sched.serving.simulate_decode_trace`
+  drives the simulated fabric with per-step expert counts recorded from
+  a real decode loop (``python -m repro.launch.serve --sim-fabric``).
+
+Quick start::
+
+    from repro.serve import serve_workload, run_serving
+    wl = serve_workload(8, 8, num_requests=64, mean_gap=2e-3)
+    res = run_serving(wl, "rails-online", feedback=True)
+    print(res.request.ttft_percentiles())   # {'p50': ..., 'p99.9': ...}
+"""
+
+from .core.traffic import (
+    ServeRequest,
+    ServeRound,
+    ServeWorkload,
+    request_arrival_times,
+    serve_workload,
+)
+from .sched.serving import (
+    SERVE_QS,
+    DecodeTraceResult,
+    RequestMetrics,
+    ServingResult,
+    expert_counts_to_matrix,
+    run_serving,
+    simulate_decode_trace,
+)
+
+__all__ = [
+    "SERVE_QS",
+    "DecodeTraceResult",
+    "RequestMetrics",
+    "ServeRequest",
+    "ServeRound",
+    "ServeWorkload",
+    "ServingResult",
+    "expert_counts_to_matrix",
+    "request_arrival_times",
+    "run_serving",
+    "serve_workload",
+    "simulate_decode_trace",
+]

@@ -27,6 +27,12 @@ CHUNK = 1 * 2**20
 
 # (workload, policy) -> (makespan, cct_p99), captured from the pre-rewrite
 # engine (heap-per-link `_FifoNetwork`) on these exact inputs.
+#
+# Release-relative CCT note: flow_cct became sojourn time (finish − release)
+# when the serving path landed. These goldens are all t=0 one-shot
+# collectives, where sojourn == absolute finish bit for bit (x - 0.0 == x),
+# so the pinned values carry over unchanged — only nonzero-release
+# streaming runs report different (smaller, correct) CCTs now.
 GOLDEN = {
     ("fig7_uniform", "rails"): (0.0033774147199999924, 0.0033373591167999927),
     ("fig7_uniform", "minrtt"): (0.003545186879999992, 0.003505131276799992),
