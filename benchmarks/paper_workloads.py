@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from repro.core.traffic import (
     bursty_release_times,
+    drifting_expert_counts,
     drifting_gating_stream,
     microbatch_stream,
     mixtral_trace_workload,
@@ -108,6 +109,33 @@ def drift_stream(num_rounds: int = 6, seed: int = 3):
         M, N, num_rounds, tokens_per_round=tokens,
         bytes_per_token=BYTES / (N * N), seed=seed,
     )
+
+
+# -- placement workloads (bench_placement) -----------------------------------
+
+
+def placement_drift_counts(drift: float, num_rounds: int | None = None, seed: int = 21):
+    """Mixtral-shaped drifting gating counts for ``bench_placement``.
+
+    Emits raw per-(shard, expert) count matrices (Zipf expert popularity
+    random-walking at ``drift`` per round, skewed senders) at the figure
+    byte scale, plus the lowering constants: ``(counts_rounds,
+    bytes_per_token, expert_weight_bytes)``. Experts number ``2M`` so a
+    hot pair can collide on one shard under round-robin — the regime where
+    re-layout has something to fix (at ``E == M`` every capacity-1
+    placement is a permutation and ingress is immovable). Expert weights
+    are 1/16 of a round's payload: heavy enough that migrations must
+    amortize, light enough that the online controller can afford them.
+    """
+    rounds = 6 if num_rounds is None else num_rounds
+    tokens = M * (M - 1) * N * N
+    bytes_per_token = BYTES / (N * N)
+    counts, _ = drifting_expert_counts(
+        M, 2 * M, rounds, tokens_per_round=tokens,
+        popularity_alpha=1.2, drift=drift, sender_alpha=0.8, seed=seed,
+    )
+    expert_bytes = tokens * bytes_per_token / 16
+    return counts, bytes_per_token, expert_bytes
 
 
 # -- serving workloads (bench_serving) ---------------------------------------

@@ -557,6 +557,58 @@ def bench_serving() -> None:
             )
 
 
+def bench_placement() -> None:
+    """Placement × spraying grid: drift rate × placement mode (ISSUE 6).
+
+    Each cell replays one seeded Mixtral-shaped drifting gating trace
+    (``W.placement_drift_counts``) end to end through
+    ``repro.placement.run_relayout_trace`` under every placement mode —
+    spraying-only ``static`` round-robin, one-shot ``greedy``/``lp``
+    re-layouts, and the ``online`` drift-triggered migration controller.
+    Per-mode rows carry raw CCT plus migration bytes (the re-layout cost
+    rides the simulated fabric); the per-cell ``ordering`` row (structured
+    key ``bench=plc_d<drift>``) tracks the static-over-mode CCT ratios —
+    the placement+spraying vs spraying-only RailS headline — across the
+    repo's perf trajectory via ``perf_report.py --placement``.
+    """
+    from repro.placement import RelayoutConfig, run_relayout_trace
+
+    drifts = (0.05, 0.4) if W.QUICK else (0.05, 0.2, 0.4)
+    modes = ("static", "greedy", "lp", "online")
+    # Faster EWMA + shorter cooldown than the library default: the bench
+    # traces are short (6 rounds), so the controller must react within a
+    # round or two of a collision appearing to amortize before trace end.
+    cfg = RelayoutConfig(alpha=0.7, cooldown=1, hysteresis=0.05)
+    for drift in drifts:
+        counts, bpt, expert_bytes = W.placement_drift_counts(drift)
+        cell = f"plc_d{drift:g}"
+        cct, mig, us_tot = {}, {}, 0.0
+        for mode in modes:
+            res, us = _timed(
+                lambda mode=mode: run_relayout_trace(
+                    counts, W.M, W.N, bpt, mode=mode,
+                    weight_bytes=expert_bytes, chunk_bytes=W.CHUNK,
+                    config=cfg,
+                )
+            )
+            cct[mode], mig[mode] = res.makespan, res.migration_bytes
+            us_tot += us
+            _emit(
+                f"{cell}_{mode}", us,
+                f"cct={res.makespan:.4e}s"
+                f"_mig={res.migration_bytes / 2**20:.1f}MiB"
+                f"_moves={res.num_migrations}",
+            )
+        static = cct["static"]
+        _emit(
+            f"{cell}_ordering", us_tot,
+            f"greedy={static / cct['greedy']:.3f}x"
+            f"_lp={static / cct['lp']:.3f}x"
+            f"_online={static / cct['online']:.3f}x_static_cct",
+            bench=cell, backend="event",
+        )
+
+
 def bench_online_window_sweep() -> None:
     """ROADMAP windowed re-planning sweep: CCT vs decision latency as the
     re-planning window goes 1 (greedy on arrival) → ∞ (whole-batch LPT),
@@ -638,6 +690,7 @@ BENCHES = {
     "online_window_sweep": bench_online_window_sweep,
     "fault_sweep": bench_fault_sweep,
     "serving": bench_serving,
+    "placement": bench_placement,
 }
 
 

@@ -5,6 +5,7 @@ render the netsim benchmark trajectory across BENCH_netsim.json snapshots.
     PYTHONPATH=src python scripts/perf_report.py BENCH_a.json BENCH_b.json
     PYTHONPATH=src python scripts/perf_report.py --fault-sweep BENCH_a.json ...
     PYTHONPATH=src python scripts/perf_report.py --serving BENCH_a.json ...
+    PYTHONPATH=src python scripts/perf_report.py --placement BENCH_a.json ...
 
 ``--fault-sweep`` restricts the trajectory to the fault-sweep grid (rows
 whose bench key starts with ``fault_``): one row per (loss rate ×
@@ -16,6 +17,12 @@ their own table across snapshots.
 with ``serve_``): one row per (arrival rate × fault) cell and policy,
 carrying p50/p99/p99.9 TTFT plus the per-cell reactive-over-rails
 p99-TTFT ordering.
+
+``--placement`` restricts it to the expert-placement grid (bench keys
+starting with ``plc_``): one row per drift-rate cell and placement mode,
+carrying end-to-end CCT + migration bytes plus the per-cell
+static-over-mode ordering — the placement+spraying vs spraying-only
+margin across snapshots.
 
 Netsim trajectory rows are keyed by **(bench, backend, size)** — not by
 bench name alone — so the event and vector measurements of one benchmark
@@ -130,18 +137,21 @@ def netsim_trajectory(paths: list[str], bench_prefix: str | None = None) -> None
 
 if __name__ == "__main__":
     args = sys.argv[1:]
-    fault_sweep = "--fault-sweep" in args
-    serving = "--serving" in args
-    args = [a for a in args if a not in ("--fault-sweep", "--serving")]
-    if fault_sweep and serving:
-        raise SystemExit("--fault-sweep and --serving are mutually exclusive")
-    prefix = "fault_" if fault_sweep else "serve_" if serving else None
+    flags = {
+        "--fault-sweep": "fault_",
+        "--serving": "serve_",
+        "--placement": "plc_",
+    }
+    selected = [f for f in flags if f in args]
+    args = [a for a in args if a not in flags]
+    if len(selected) > 1:
+        raise SystemExit(f"{' and '.join(selected)} are mutually exclusive")
+    prefix = flags[selected[0]] if selected else None
     if args and all(a.endswith(".json") for a in args):
         netsim_trajectory(args, bench_prefix=prefix)
     elif prefix is not None:
         raise SystemExit(
-            f"--{'fault-sweep' if fault_sweep else 'serving'} needs one or "
-            "more BENCH_*.json paths"
+            f"{selected[0]} needs one or more BENCH_*.json paths"
         )
     else:
         main(args[0] if args else "results/perf")

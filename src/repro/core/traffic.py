@@ -35,11 +35,14 @@ __all__ = [
     "sender_skew_workload",
     "receiver_skew_workload",
     "mixtral_trace_workload",
+    "default_expert_shard",
     "expert_counts_to_matrix",
+    "uniform_sender_counts",
     "moe_gating_traffic",
     "microbatch_stream",
     "bursty_release_times",
     "drifting_gating_stream",
+    "drifting_expert_counts",
     "ServeRequest",
     "ServeRound",
     "ServeWorkload",
@@ -267,6 +270,7 @@ def mixtral_trace_workload(
     seed: int = 0,
     popularity_alpha: float = 0.8,
     noise_sigma: float = 1.0,
+    expert_shard: np.ndarray | None = None,
 ) -> TrafficMatrix:
     """Replay of the Mixtral 8x7B trace pattern (paper Figs. 12–13).
 
@@ -287,9 +291,17 @@ def mixtral_trace_workload(
         raise ValueError(f"mode must be dense|sparse, got {mode!r}")
     m, n = num_domains, num_rails
     rng = np.random.default_rng(seed)
-    # Experts are placed round-robin on domains; token input stays uniform
-    # while the gating popularity and per-pair variability skew the matrix.
-    expert_domain = np.arange(num_experts) % m
+    # Experts default to the round-robin layout (``expert_shard=None``);
+    # token input stays uniform while the gating popularity and per-pair
+    # variability skew the matrix. An explicit expert→shard map re-lays-out
+    # the experts (the `repro.placement` co-optimization knob).
+    expert_domain = (
+        np.arange(num_experts) % m
+        if expert_shard is None
+        else np.asarray(expert_shard, dtype=np.int64)
+    )
+    if expert_domain.shape != (num_experts,):
+        raise ValueError(f"expert_shard must be ({num_experts},)")
     popularity = _zipf_weights(num_experts, popularity_alpha)
     rng.shuffle(popularity)
     total_bytes = MIXTRAL_PHASE_BYTES[phase] * num_experts * (top_k / num_experts)
@@ -317,24 +329,79 @@ def mixtral_trace_workload(
 # ---------------------------------------------------------------------------
 
 
-def expert_counts_to_matrix(counts, num_domains: int) -> np.ndarray:
-    """Per-expert token counts -> ``(M, M)`` shard-to-shard gating counts.
+def default_expert_shard(num_experts: int, num_domains: int) -> np.ndarray:
+    """The repo's historical layout: experts round-robin over domains."""
+    return np.arange(num_experts, dtype=np.int64) % num_domains
 
-    The repo-wide placement convention: experts sit round-robin over
-    domains, senders are uniform (every domain contributes equally to
-    each expert domain's ingress), and intra-domain traffic stays on
-    NVLink (zero diagonal). Shared by the training-loop hook
-    (:class:`~repro.sched.online.GatingFeedbackHook`) and the serving
-    trace replay (:func:`~repro.sched.serving.simulate_decode_trace`) so
-    a placement change lands in exactly one spot.
+
+def expert_counts_to_matrix(
+    counts, num_domains: int, expert_shard: np.ndarray | None = None
+) -> np.ndarray:
+    """Expert token counts -> ``(M, M)`` shard-to-shard gating counts.
+
+    ``counts`` is either a flat ``(E,)`` per-expert vector (uniform
+    senders: every other domain contributes equally to each expert
+    domain's ingress — the historical convention) or a full ``(M, E)``
+    per-(shard, expert) matrix recorded from a real gate (``counts[s, e]``
+    = tokens shard ``s`` routes to expert ``e``). ``expert_shard`` is the
+    explicit expert→shard placement map; ``None`` keeps the default
+    round-robin layout bit-identically. Intra-domain traffic stays on
+    NVLink (zero diagonal) either way. Shared by the training-loop hook
+    (:class:`~repro.sched.online.GatingFeedbackHook`), the serving trace
+    replay (:func:`~repro.sched.serving.simulate_decode_trace`) and the
+    placement subsystem (:mod:`repro.placement`) so a placement change
+    lands in exactly one spot.
     """
-    counts = np.asarray(counts, dtype=np.float64).ravel()
+    counts = np.asarray(counts, dtype=np.float64)
     m = num_domains
+    if counts.ndim == 2:
+        if counts.shape[0] != m:
+            raise ValueError(
+                f"per-(shard, expert) counts must have {m} rows, got {counts.shape}"
+            )
+        if expert_shard is None:
+            expert_shard = default_expert_shard(counts.shape[1], m)
+        expert_shard = np.asarray(expert_shard, dtype=np.int64)
+        if expert_shard.shape != (counts.shape[1],):
+            raise ValueError(
+                f"expert_shard must be ({counts.shape[1]},), got {expert_shard.shape}"
+            )
+        c2 = np.zeros((m, m))
+        # c2[s, f] += counts[s, e] for every expert e placed on shard f.
+        np.add.at(c2.T, expert_shard, counts.T)
+        np.fill_diagonal(c2, 0.0)
+        return c2
+    counts = counts.ravel()
+    if expert_shard is None:
+        expert_shard = np.arange(counts.size) % m
+    expert_shard = np.asarray(expert_shard, dtype=np.int64)
     domain_tokens = np.zeros(m)
-    np.add.at(domain_tokens, np.arange(counts.size) % m, counts)
+    np.add.at(domain_tokens, expert_shard, counts)
     c2 = np.tile(domain_tokens / max(m - 1, 1), (m, 1))
     np.fill_diagonal(c2, 0.0)
     return c2
+
+
+def uniform_sender_counts(
+    expert_tokens: np.ndarray,
+    expert_shard: np.ndarray,
+    num_domains: int,
+) -> np.ndarray:
+    """Expand per-expert totals into ``(M, E)`` per-(shard, expert) counts.
+
+    The uniform-sender convention behind the flat-counts path of
+    :func:`expert_counts_to_matrix`: every domain except the expert's own
+    shard contributes ``T_e / (M - 1)`` tokens (the host's tokens stay on
+    NVLink, so its fabric contribution is zero). Round-tripping through
+    the ``(M, E)`` path therefore reproduces the flat path's ``(M, M)``
+    matrix up to float reassociation.
+    """
+    expert_tokens = np.asarray(expert_tokens, dtype=np.float64).ravel()
+    expert_shard = np.asarray(expert_shard, dtype=np.int64)
+    m = num_domains
+    counts = np.tile(expert_tokens / max(m - 1, 1), (m, 1))
+    counts[expert_shard, np.arange(expert_tokens.size)] = 0.0
+    return counts
 
 
 def moe_gating_traffic(
@@ -434,34 +501,96 @@ def drifting_gating_stream(
     popularity_alpha: float = 0.8,
     drift: float = 0.15,
     seed: int = 0,
-) -> list[TrafficMatrix]:
+    expert_shard: np.ndarray | None = None,
+    return_counts: bool = False,
+):
     """Gating counts that random-walk between rounds (paper Fig. 2d drift).
 
     Expert popularity starts Zipf(``popularity_alpha``) and drifts in log
     space by ``drift`` per round — adjacent rounds are similar (which is
     what makes routing replay a usable forecast) while distant rounds can
-    look completely different. Experts sit round-robin on domains; token
-    input stays uniform across senders.
+    look completely different. Experts sit on ``expert_shard`` (default:
+    round-robin over domains, bit-identical to the historical output);
+    token input stays uniform across senders.
+
+    ``return_counts=True`` additionally returns the per-round ``(M, E)``
+    per-(shard, expert) count matrices and the expert→shard map — the raw
+    gating view the placement subsystem re-optimizes — as
+    ``(tms, counts_rounds, expert_shard)``.
     """
     if num_rounds < 1:
         raise ValueError("need at least one round")
     m, n = num_domains, num_rails
     rng = np.random.default_rng(seed)
-    expert_domain = np.arange(num_experts) % m
+    expert_domain = (
+        np.arange(num_experts) % m
+        if expert_shard is None
+        else np.asarray(expert_shard, dtype=np.int64)
+    )
     log_pop = np.log(_zipf_weights(num_experts, popularity_alpha))
     rng.shuffle(log_pop)
     out = []
+    counts_rounds: list[np.ndarray] = []
     for _ in range(num_rounds):
         popularity = np.exp(log_pop)
         popularity /= popularity.sum()
-        domain_tokens = np.zeros(m)
-        np.add.at(domain_tokens, expert_domain, popularity * tokens_per_round)
-        counts = np.tile(domain_tokens / max(m - 1, 1), (m, 1))
-        np.fill_diagonal(counts, 0.0)
+        expert_tokens = popularity * tokens_per_round
+        counts = expert_counts_to_matrix(expert_tokens, m, expert_domain)
         tm = moe_gating_traffic(counts, bytes_per_token, n)
         out.append(TrafficMatrix(d1=tm.d1, d2=tm.d2, name="drifting-gating"))
+        if return_counts:
+            counts_rounds.append(
+                uniform_sender_counts(expert_tokens, expert_domain, m)
+            )
         log_pop = log_pop + rng.normal(0.0, drift, size=num_experts)
+    if return_counts:
+        return out, counts_rounds, expert_domain.copy()
     return out
+
+
+def drifting_expert_counts(
+    num_shards: int,
+    num_experts: int,
+    num_rounds: int,
+    tokens_per_round: float,
+    popularity_alpha: float = 0.8,
+    drift: float = 0.15,
+    sender_alpha: float = 0.0,
+    seed: int = 0,
+) -> tuple[list[np.ndarray], np.ndarray]:
+    """Per-(shard, expert) gating counts random-walking between rounds.
+
+    The placement-native sibling of :func:`drifting_gating_stream`: instead
+    of pre-aggregated traffic matrices it emits the raw ``(M, E)`` count
+    matrices (``counts[s, e]`` = tokens shard ``s`` routes to expert ``e``)
+    plus the default round-robin expert→shard map, leaving the d2
+    derivation to whatever placement is in force
+    (:func:`expert_counts_to_matrix` / :class:`repro.placement.Placement`).
+
+    ``sender_alpha > 0`` skews token input across shards with a
+    Zipf(``sender_alpha``) sender profile — the regime where moving an
+    expert *toward* its heaviest sender pays on both egress and ingress.
+    Tokens a shard routes to its own experts are included (they stay on
+    NVLink; the d2 derivation drops the diagonal).
+    """
+    if num_rounds < 1:
+        raise ValueError("need at least one round")
+    m = num_shards
+    rng = np.random.default_rng(seed)
+    log_pop = np.log(_zipf_weights(num_experts, popularity_alpha))
+    rng.shuffle(log_pop)
+    if sender_alpha > 0:
+        sender_w = _zipf_weights(m, sender_alpha)
+        rng.shuffle(sender_w)
+    else:
+        sender_w = np.full(m, 1.0 / m)
+    counts_rounds: list[np.ndarray] = []
+    for _ in range(num_rounds):
+        popularity = np.exp(log_pop)
+        popularity /= popularity.sum()
+        counts_rounds.append(tokens_per_round * np.outer(sender_w, popularity))
+        log_pop = log_pop + rng.normal(0.0, drift, size=num_experts)
+    return counts_rounds, default_expert_shard(num_experts, m)
 
 
 # ---------------------------------------------------------------------------
@@ -605,6 +734,7 @@ def serve_workload(
     popularity_alpha: float = 0.8,
     burstiness: float = 3.0,
     seed: int = 0,
+    expert_shard: np.ndarray | None = None,
 ) -> ServeWorkload:
     """Request-level serving workload: arrivals → expert-routed rounds.
 
@@ -628,7 +758,13 @@ def serve_workload(
     )
     popularity = _zipf_weights(num_experts, popularity_alpha)
     rng.shuffle(popularity)
-    expert_domain = np.arange(num_experts) % m
+    expert_domain = (
+        np.arange(num_experts) % m
+        if expert_shard is None
+        else np.asarray(expert_shard, dtype=np.int64)
+    )
+    if expert_domain.shape != (num_experts,):
+        raise ValueError(f"expert_shard must be ({num_experts},)")
 
     def round_tm(home: int, tokens: int, kind: str) -> TrafficMatrix:
         # Every token routes to top_k experts (drawn by popularity; the

@@ -62,6 +62,20 @@ def main(argv=None) -> dict:
                     help="fabric domains (M) for the --sched-replay planner")
     ap.add_argument("--sched-rails", type=int, default=8,
                     help="rails per domain (N) for the --sched-replay planner")
+    ap.add_argument(
+        "--placement",
+        choices=["static", "greedy", "lp", "online"],
+        default="static",
+        help="expert layout for the --sched-replay planner: static "
+        "round-robin, a one-shot greedy/LP re-layout planned after "
+        "--placement-warmup steps, or the online drift-triggered "
+        "migration controller (repro.placement)",
+    )
+    ap.add_argument(
+        "--placement-warmup", type=int, default=10,
+        help="gating-count steps accumulated before a one-shot "
+        "greedy/lp re-layout is planned",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -105,13 +119,31 @@ def main(argv=None) -> dict:
     # routing-replay planner, which forecasts and LPT-plans the *next*
     # iteration's expert all-to-all (repro.sched control plane).
     sched_hook = None
+    placement_state = None  # (method, warmup_sum) until the one-shot re-layout
     if args.sched_replay and cfg.num_experts:
         from repro.sched import GatingFeedbackHook
 
+        bytes_per_token = float(cfg.d_model * 2)  # bf16 activations
+        # One expert's parameter footprint: w1/w2/w3 of the FFN, bf16.
+        expert_bytes = float(3 * cfg.d_model * cfg.moe_d_ff * 2)
+        controller = None
+        if args.placement == "online":
+            from repro.placement import OnlinePlacementController, Placement
+
+            controller = OnlinePlacementController(
+                Placement.round_robin(
+                    cfg.num_experts, args.sched_domains, expert_bytes
+                ),
+                num_rails=args.sched_rails,
+                bytes_per_token=bytes_per_token,
+            )
+        elif args.placement in ("greedy", "lp"):
+            placement_state = (args.placement, expert_bytes, None)
         sched_hook = GatingFeedbackHook(
             num_domains=args.sched_domains,
             num_rails=args.sched_rails,
-            bytes_per_token=float(cfg.d_model * 2),  # bf16 activations
+            bytes_per_token=bytes_per_token,
+            controller=controller,
         )
 
     losses = []
@@ -121,12 +153,43 @@ def main(argv=None) -> dict:
             batch = {k: jax.numpy.asarray(v) for k, v in data.batch(step).items()}
             params, opt_state, metrics = jit_step(params, opt_state, batch)
             if sched_hook is not None and "moe_counts" in metrics:
-                plan = sched_hook.on_step(np.asarray(metrics["moe_counts"]))
+                counts = np.asarray(metrics["moe_counts"], dtype=np.float64)
+                if placement_state is not None:
+                    # One-shot greedy/LP re-layout: accumulate gating counts
+                    # through the warmup, then fix the searched placement.
+                    method, expert_bytes, acc = placement_state
+                    acc = counts if acc is None else acc + counts
+                    placement_state = (method, expert_bytes, acc)
+                    if step - start_step + 1 >= args.placement_warmup:
+                        from repro.placement import Placement, search_placement
+
+                        cand = search_placement(
+                            acc, args.sched_domains, args.sched_rails,
+                            sched_hook.bytes_per_token, method=method,
+                            weight_bytes=expert_bytes, score=False,
+                        ).placement
+                        _, mig_bytes = Placement.round_robin(
+                            cfg.num_experts, args.sched_domains, expert_bytes
+                        ).migration_to(cand)
+                        sched_hook.placement = cand
+                        placement_state = None
+                        print(
+                            f"  placement[{method}]: re-layout after "
+                            f"{args.placement_warmup} steps, migrating "
+                            f"{mig_bytes / 2**20:.1f}MiB of expert weights"
+                        )
+                plan = sched_hook.on_step(counts)
+                if plan["migrated"]:
+                    print(
+                        f"  placement[online]: migrated "
+                        f"{plan['migration_bytes'] / 2**20:.1f}MiB at step {step}"
+                    )
                 if step % args.log_every == 0:
                     print(
                         f"  a2a plan: chunk {plan['chunk_bytes'] / 2**20:.2f}MiB "
                         f"send_mse {plan['pred_send_mse']:.2e} "
-                        f"opt {plan['opt_time_s'] * 1e3:.2f}ms"
+                        f"opt {plan['opt_time_s'] * 1e3:.2f}ms "
+                        f"fc_err {plan['forecast_err']:.2f}"
                     )
             if step % args.log_every == 0 or step == args.steps - 1:
                 loss = float(metrics["loss"])

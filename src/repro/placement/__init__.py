@@ -1,0 +1,49 @@
+"""Expert placement × spraying co-optimization (`repro.placement`).
+
+RailS sprays a *given* all-to-all matrix optimally (split → LPT → spray);
+this subsystem reshapes the matrix itself by choosing where experts live
+and migrating them as gating load drifts, trading weight-transfer cost
+against projected CCT savings. See ``README.md`` § Expert placement.
+"""
+
+from .controller import (
+    OnlinePlacementController,
+    RelayoutConfig,
+    RelayoutDecision,
+    RelayoutResult,
+    run_relayout_trace,
+)
+from .search import (
+    PLACEMENT_METHODS,
+    PlacementCandidate,
+    greedy_placement,
+    lp_placement,
+    score_placement,
+    search_placement,
+    static_placement,
+)
+from .state import (
+    Placement,
+    as_shard_expert_counts,
+    placement_bound,
+    placement_loads,
+)
+
+__all__ = [
+    "Placement",
+    "as_shard_expert_counts",
+    "placement_loads",
+    "placement_bound",
+    "PlacementCandidate",
+    "PLACEMENT_METHODS",
+    "static_placement",
+    "greedy_placement",
+    "lp_placement",
+    "score_placement",
+    "search_placement",
+    "RelayoutConfig",
+    "RelayoutDecision",
+    "OnlinePlacementController",
+    "RelayoutResult",
+    "run_relayout_trace",
+]

@@ -1,0 +1,304 @@
+"""Online expert re-layout: drift-triggered, migration-cost-amortized.
+
+The controller watches per-(shard, expert) gating counts through an EWMA
+(the same slow-drift premise behind routing replay: paper Fig. 2d), and
+re-lays-out experts only when both gates pass:
+
+* **Hysteresis** — the candidate layout must beat the current one by at
+  least ``hysteresis`` of the current Theorem-2 drain time on the EWMA
+  counts. Small drifts that LPT spraying already absorbs never trigger a
+  migration; a real phase change (a hot expert moving) does.
+* **Amortization** — the projected per-round saving times ``horizon``
+  rounds must exceed the migration's own drain time (its weight bytes
+  ride the same fabric, modeled as extra all-to-all flows injected into
+  the next round's plan). Expert weights are large relative to one
+  round's activations, so this is the gate that keeps the controller from
+  thrashing at high drift.
+
+:func:`run_relayout_trace` is the end-to-end driver behind the headline
+result: a gating-count trace → per-round placed traffic (+ migration
+flows) → one overlapped streaming collective via
+:func:`repro.sched.pipeline.run_pipeline` — iteration-time curves of
+placement+spraying vs spraying-only RailS.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .search import greedy_placement, lp_placement, search_placement
+from .state import Placement, as_shard_expert_counts, placement_bound
+
+__all__ = [
+    "RelayoutConfig",
+    "RelayoutDecision",
+    "OnlinePlacementController",
+    "RelayoutResult",
+    "run_relayout_trace",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RelayoutConfig:
+    """Knobs of the online controller.
+
+    Attributes:
+      alpha: EWMA weight of the newest round's counts.
+      check_every: rounds between candidate searches (1 = every round).
+      horizon: rounds over which a migration's cost must amortize —
+        projected per-round saving × horizon must exceed the migration's
+        own Theorem-2 drain time.
+      hysteresis: minimum relative bound improvement (fraction of the
+        current drain time) before a migration is even considered.
+      cooldown: rounds after a migration during which no new search runs
+        (lets the EWMA re-converge on the post-migration regime).
+      method: candidate generator (``greedy`` or ``lp``).
+    """
+
+    alpha: float = 0.5
+    check_every: int = 1
+    horizon: float = 8.0
+    hysteresis: float = 0.1
+    cooldown: int = 2
+    method: str = "greedy"
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        if self.check_every < 1 or self.cooldown < 0:
+            raise ValueError("check_every >= 1 and cooldown >= 0 required")
+        if self.horizon <= 0 or self.hysteresis < 0:
+            raise ValueError("horizon > 0 and hysteresis >= 0 required")
+        if self.method not in ("greedy", "lp"):
+            raise ValueError(f"method must be greedy|lp, got {self.method!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RelayoutDecision:
+    """Outcome of one controller tick."""
+
+    migrated: bool
+    placement: Placement
+    migration_d2: np.ndarray | None  # (M, M) weight bytes in flight this round
+    migration_bytes: float
+    current_bound_s: float  # EWMA drain time under the pre-tick placement
+    candidate_bound_s: float  # EWMA drain time under the searched candidate
+    projected_gain_s: float  # per-round saving the migration was judged on
+
+
+class OnlinePlacementController:
+    """Hysteresis-thresholded expert migration driven by EWMA gating drift."""
+
+    def __init__(
+        self,
+        placement: Placement,
+        num_rails: int,
+        bytes_per_token: float,
+        r2: float = 50e9,
+        capacity: int | None = None,
+        config: RelayoutConfig | None = None,
+    ):
+        self.placement = placement
+        self.num_rails = int(num_rails)
+        self.bytes_per_token = float(bytes_per_token)
+        self.r2 = float(r2)
+        self.capacity = capacity
+        self.config = RelayoutConfig() if config is None else config
+        self._ewma: np.ndarray | None = None
+        self.rounds_seen = 0
+        self._last_migration_round = -(10**9)
+        self.total_migration_bytes = 0.0
+        self.migrations: list[tuple[int, float]] = []  # (round, bytes)
+
+    def ewma_counts(self) -> np.ndarray | None:
+        """The drift-tracking ``(M, E)`` gating history (None before data)."""
+        return None if self._ewma is None else self._ewma.copy()
+
+    def _search(self) -> Placement:
+        if self.config.method == "lp":
+            return lp_placement(
+                self._ewma,
+                self.placement.num_shards,
+                self.placement.weight_bytes,
+                capacity=self.capacity,
+            )
+        return greedy_placement(
+            self._ewma,
+            self.placement.num_shards,
+            self.placement.weight_bytes,
+            capacity=self.capacity,
+            start=self.placement,
+        )
+
+    def observe(self, counts: np.ndarray) -> RelayoutDecision:
+        """Fold one round's gating counts in; maybe migrate.
+
+        Returns the decision for *this* round: the placement its traffic
+        should be derived under and, when a migration fires, the weight
+        flows to inject into the same round's plan.
+        """
+        counts_se = as_shard_expert_counts(counts, self.placement.num_shards)
+        if self._ewma is None:
+            self._ewma = counts_se.astype(np.float64).copy()
+        else:
+            a = self.config.alpha
+            self._ewma = a * counts_se + (1.0 - a) * self._ewma
+        rnd = self.rounds_seen
+        self.rounds_seen += 1
+        cur = placement_bound(
+            self._ewma, self.placement, self.num_rails, self.bytes_per_token, self.r2
+        )
+        due = (
+            rnd % self.config.check_every == 0
+            and rnd - self._last_migration_round > self.config.cooldown
+        )
+        if not due:
+            return RelayoutDecision(False, self.placement, None, 0.0, cur, cur, 0.0)
+        candidate = self._search()
+        cand = placement_bound(
+            self._ewma, candidate, self.num_rails, self.bytes_per_token, self.r2
+        )
+        gain = cur - cand
+        if gain <= self.config.hysteresis * cur:
+            return RelayoutDecision(False, self.placement, None, 0.0, cur, cand, gain)
+        mig_d2, mig_bytes = self.placement.migration_to(candidate)
+        from ..core.theorems import theorem2_optimal_time
+
+        mig_time = (
+            theorem2_optimal_time(mig_d2, self.num_rails, self.r2)
+            if mig_bytes > 0
+            else 0.0
+        )
+        if gain * self.config.horizon <= mig_time:
+            return RelayoutDecision(False, self.placement, None, 0.0, cur, cand, gain)
+        self.placement = candidate
+        self._last_migration_round = rnd
+        self.total_migration_bytes += mig_bytes
+        self.migrations.append((rnd, mig_bytes))
+        return RelayoutDecision(True, candidate, mig_d2, mig_bytes, cur, cand, gain)
+
+
+@dataclasses.dataclass
+class RelayoutResult:
+    """End-to-end outcome of a placed gating trace."""
+
+    pipeline: object  # repro.sched.pipeline.PipelineResult
+    placements: list[Placement]  # per-round placement (post-decision)
+    decisions: list[RelayoutDecision]  # online mode only, else []
+    migration_bytes: float
+    mode: str
+
+    @property
+    def makespan(self) -> float:
+        return self.pipeline.makespan
+
+    @property
+    def num_migrations(self) -> int:
+        return sum(1 for d in self.decisions if d.migrated)
+
+
+def run_relayout_trace(
+    counts_rounds: list[np.ndarray],
+    num_shards: int,
+    num_rails: int,
+    bytes_per_token: float,
+    mode: str = "static",
+    weight_bytes=0.0,
+    capacity: int | None = None,
+    config: RelayoutConfig | None = None,
+    policy: str = "rails-online",
+    chunk_bytes: float | None = None,
+    gap_fraction: float = 0.5,
+    r1: float = 400e9,
+    r2: float = 50e9,
+    seed: int = 0,
+    backend: str = "event",
+) -> RelayoutResult:
+    """Run a gating-count trace under a placement mode, end to end.
+
+    Modes: ``static`` (round-robin — spraying-only RailS), ``greedy`` /
+    ``lp`` (one up-front re-layout planned from the first round's counts,
+    then fixed; its migration flows from round-robin ride round 0), and
+    ``online`` (the :class:`OnlinePlacementController` migrates mid-trace
+    as the EWMA drifts, injecting weight flows into the round that
+    triggered them).
+
+    Release cadence is derived from the *round-robin* lowering of each
+    round (``gap_fraction`` of its Theorem-2 time) for every mode, so the
+    makespans of different placements are comparable on an identical
+    arrival process.
+    """
+    from ..sched.pipeline import run_pipeline
+
+    if not counts_rounds:
+        raise ValueError("need at least one round of gating counts")
+    counts_rounds = [as_shard_expert_counts(c, num_shards) for c in counts_rounds]
+    rr = Placement.round_robin(counts_rounds[0].shape[1], num_shards, weight_bytes)
+    # Placement-independent release cadence (see docstring).
+    releases, t = [], 0.0
+    for c in counts_rounds[:-1]:
+        releases.append(t)
+        t += gap_fraction * placement_bound(c, rr, num_rails, bytes_per_token, r2)
+    releases.append(t)
+
+    placements: list[Placement] = []
+    decisions: list[RelayoutDecision] = []
+    tms = []
+    migration_total = 0.0
+    if mode == "static":
+        for c in counts_rounds:
+            placements.append(rr)
+            tms.append(rr.traffic(c, bytes_per_token, num_rails))
+    elif mode in ("greedy", "lp"):
+        cand = search_placement(
+            counts_rounds[0], num_shards, num_rails, bytes_per_token,
+            method=mode, weight_bytes=weight_bytes, capacity=capacity,
+            chunk_bytes=chunk_bytes or 256 * 2**10, r2=r2, score=False,
+        ).placement
+        mig_d2, migration_total = rr.migration_to(cand)
+        for i, c in enumerate(counts_rounds):
+            placements.append(cand)
+            tms.append(
+                cand.traffic(
+                    c, bytes_per_token, num_rails,
+                    migration_d2=mig_d2 if i == 0 and migration_total > 0 else None,
+                )
+            )
+    elif mode == "online":
+        ctl = OnlinePlacementController(
+            rr, num_rails, bytes_per_token, r2=r2, capacity=capacity, config=config
+        )
+        for c in counts_rounds:
+            dec = ctl.observe(c)
+            decisions.append(dec)
+            placements.append(dec.placement)
+            tms.append(
+                dec.placement.traffic(
+                    c, bytes_per_token, num_rails, migration_d2=dec.migration_d2
+                )
+            )
+        migration_total = ctl.total_migration_bytes
+    else:
+        raise ValueError(
+            f"unknown mode {mode!r}; choose static|greedy|lp|online"
+        )
+    pipe = run_pipeline(
+        tms,
+        policy=policy,
+        gap_fraction=gap_fraction,
+        chunk_bytes=chunk_bytes,
+        r1=r1,
+        r2=r2,
+        seed=seed,
+        releases=releases,
+        backend=backend,
+    )
+    return RelayoutResult(
+        pipeline=pipe,
+        placements=placements,
+        decisions=decisions,
+        migration_bytes=migration_total,
+        mode=mode,
+    )

@@ -1,0 +1,293 @@
+"""Placement candidate generators + simulated-CCT scoring.
+
+Three generators, all returning a :class:`~repro.placement.state.Placement`
+respecting a per-shard capacity (default ``ceil(E / M)`` experts — the
+memory budget of an even layout):
+
+* :func:`static_placement` — the round-robin baseline (what RailS-only
+  assumes today).
+* :func:`greedy_placement` — swap/move hill descent on the Theorem-2
+  max-load objective (the LPT-load imbalance of the placed d2). Cheap
+  enough to run per control-loop tick.
+* :func:`lp_placement` — an LP relaxation solved with the in-tree simplex
+  (:mod:`repro.core.lp`): fractional expert→shard assignment minimizing
+  the max of per-shard egress/ingress, greedily rounded under capacity.
+
+Candidates are *ranked* by :func:`score_placement` — the simulated CCT of
+the placed traffic on the vector prefix-scan backend, i.e. what the fabric
+actually does once LPT spraying runs on the reshaped matrix. The bound
+descends monotonically during search; the simulation decides ties and
+catches bound/simulation divergence (e.g. chunk-granularity effects).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.lp import simplex
+from .state import Placement, as_shard_expert_counts, placement_bound
+
+__all__ = [
+    "PlacementCandidate",
+    "static_placement",
+    "greedy_placement",
+    "lp_placement",
+    "score_placement",
+    "search_placement",
+    "PLACEMENT_METHODS",
+]
+
+
+def _default_capacity(num_experts: int, num_shards: int) -> int:
+    return -(-num_experts // num_shards)  # ceil
+
+
+def _objective(counts_se: np.ndarray, expert_shard: np.ndarray, m: int) -> float:
+    """Theorem-2 numerator: max per-shard egress/ingress tokens."""
+    d2 = np.zeros((m, m))
+    np.add.at(d2.T, expert_shard, counts_se.T)
+    np.fill_diagonal(d2, 0.0)
+    return float(max(d2.sum(axis=1).max(), d2.sum(axis=0).max()))
+
+
+def static_placement(
+    num_experts: int, num_shards: int, weight_bytes=0.0
+) -> Placement:
+    """Round-robin (the spraying-only RailS baseline)."""
+    return Placement.round_robin(num_experts, num_shards, weight_bytes)
+
+
+def greedy_placement(
+    counts: np.ndarray,
+    num_shards: int,
+    weight_bytes=0.0,
+    capacity: int | None = None,
+    start: Placement | None = None,
+    max_rounds: int = 64,
+) -> Placement:
+    """Swap/move hill descent on the placed max-load objective.
+
+    Starts from ``start`` (default round-robin) and repeatedly applies the
+    best strictly-improving single-expert move (to a shard with spare
+    capacity) or expert pair swap until a local optimum or ``max_rounds``.
+    Deterministic: ties break toward the lowest expert/shard index.
+    """
+    counts_se = as_shard_expert_counts(counts, num_shards)
+    m, e = num_shards, counts_se.shape[1]
+    cap = _default_capacity(e, m) if capacity is None else int(capacity)
+    if cap * m < e:
+        raise ValueError(f"capacity {cap} cannot host {e} experts on {m} shards")
+    pl = Placement.round_robin(e, m, weight_bytes) if start is None else start
+    es = pl.expert_shard.copy()
+    occupancy = np.bincount(es, minlength=m)
+    if occupancy.max() > cap:
+        raise ValueError("start placement exceeds capacity")
+    best = _objective(counts_se, es, m)
+    for _ in range(max_rounds):
+        move_best, move_arg = best, None
+        # Single-expert moves into shards with spare capacity.
+        for ex in range(e):
+            src = es[ex]
+            for dst in range(m):
+                if dst == src or occupancy[dst] >= cap:
+                    continue
+                es[ex] = dst
+                obj = _objective(counts_se, es, m)
+                if obj < move_best - 1e-12:
+                    move_best, move_arg = obj, ("move", ex, dst)
+                es[ex] = src
+        # Pairwise swaps (capacity-neutral).
+        for e1 in range(e):
+            for e2 in range(e1 + 1, e):
+                if es[e1] == es[e2]:
+                    continue
+                es[e1], es[e2] = es[e2], es[e1]
+                obj = _objective(counts_se, es, m)
+                if obj < move_best - 1e-12:
+                    move_best, move_arg = obj, ("swap", e1, e2)
+                es[e1], es[e2] = es[e2], es[e1]
+        if move_arg is None:
+            break
+        kind, a, b = move_arg
+        if kind == "move":
+            occupancy[es[a]] -= 1
+            es[a] = b
+            occupancy[b] += 1
+        else:
+            es[a], es[b] = es[b], es[a]
+        best = move_best
+    return dataclasses.replace(pl, expert_shard=es)
+
+
+def lp_placement(
+    counts: np.ndarray,
+    num_shards: int,
+    weight_bytes=0.0,
+    capacity: int | None = None,
+) -> Placement:
+    """LP relaxation of min-max placed load, rounded under capacity.
+
+    Variables ``x[e, f] ∈ [0, 1]`` (fraction of expert ``e`` on shard
+    ``f``) and the bottleneck ``t``::
+
+        min t
+        s.t.  egress[s]  = Σ_e C[s,e] (1 − x[e,s])      ≤ t   ∀s
+              ingress[f] = Σ_e (T_e − C[f,e]) x[e,f]    ≤ t   ∀f
+              Σ_f x[e,f] = 1                                  ∀e
+              Σ_e x[e,f] ≤ capacity                           ∀f
+
+    with ``C`` the ``(M, E)`` counts and ``T_e = Σ_s C[s,e]``. Both load
+    expressions drop the host's own tokens (NVLink), so the relaxation
+    models exactly the fabric bytes of :meth:`Placement.counts_d2`.
+    Rounding: experts in decreasing ``T_e`` order go to their largest
+    fractional shard with spare capacity.
+    """
+    counts_se = as_shard_expert_counts(counts, num_shards)
+    m, e = num_shards, counts_se.shape[1]
+    cap = _default_capacity(e, m) if capacity is None else int(capacity)
+    if cap * m < e:
+        raise ValueError(f"capacity {cap} cannot host {e} experts on {m} shards")
+    totals = counts_se.sum(axis=0)
+    nvar = e * m + 1
+    t_idx = nvar - 1
+
+    def xidx(ex, f):
+        return ex * m + f
+
+    a_ub = np.zeros((3 * m, nvar))
+    b_ub = np.zeros(3 * m)
+    for s in range(m):  # egress: -Σ_e C[s,e] x[e,s] - t <= -Σ_e C[s,e]
+        for ex in range(e):
+            a_ub[s, xidx(ex, s)] = -counts_se[s, ex]
+        a_ub[s, t_idx] = -1.0
+        b_ub[s] = -counts_se[s].sum()
+    for f in range(m):  # ingress: Σ_e (T_e - C[f,e]) x[e,f] - t <= 0
+        row = m + f
+        for ex in range(e):
+            a_ub[row, xidx(ex, f)] = totals[ex] - counts_se[f, ex]
+        a_ub[row, t_idx] = -1.0
+    for f in range(m):  # capacity
+        row = 2 * m + f
+        for ex in range(e):
+            a_ub[row, xidx(ex, f)] = 1.0
+        b_ub[row] = float(cap)
+    a_eq = np.zeros((e, nvar))
+    for ex in range(e):
+        a_eq[ex, xidx(ex, 0) : xidx(ex, 0) + m] = 1.0
+    b_eq = np.ones(e)
+    c = np.zeros(nvar)
+    c[t_idx] = 1.0
+    sol = simplex(c, a_ub, b_ub, a_eq, b_eq)
+    if sol.status != "optimal":
+        # Degenerate inputs (all-zero counts etc.) fall back to round-robin.
+        return Placement.round_robin(e, m, weight_bytes)
+    x = sol.x[: e * m].reshape(e, m)
+    es = np.full(e, -1, dtype=np.int64)
+    occupancy = np.zeros(m, dtype=np.int64)
+    for ex in np.argsort(-totals, kind="stable"):
+        order = np.argsort(-x[ex], kind="stable")
+        dst = next((int(f) for f in order if occupancy[f] < cap), None)
+        if dst is None:  # cap*m >= e guarantees a slot exists
+            dst = int(np.argmin(occupancy))
+        es[ex] = dst
+        occupancy[dst] += 1
+    return Placement(es, m, weight_bytes)
+
+
+def score_placement(
+    counts: np.ndarray,
+    placement: Placement,
+    num_rails: int,
+    bytes_per_token: float,
+    chunk_bytes: float = 256 * 2**10,
+    r1: float = 400e9,
+    r2: float = 50e9,
+    policy: str = "rails",
+    backend: str = "vector",
+    migration_d2: np.ndarray | None = None,
+    seed: int = 0,
+) -> float:
+    """Simulated CCT (seconds) of the placed traffic under LPT spraying.
+
+    Lowers ``counts`` (plus optional in-flight migration flows) through
+    the placement and runs one collective on the chosen backend — the
+    vector prefix-scan simulator by default, which is what makes
+    candidate scoring cheap enough for an online inner loop.
+    """
+    from ..netsim.simulate import run_collective  # netsim imports sched; keep lazy
+
+    tm = placement.traffic(
+        counts, bytes_per_token, num_rails, migration_d2=migration_d2
+    )
+    if tm.total_bytes() <= 0:
+        return 0.0
+    return run_collective(
+        tm, policy, r1=r1, r2=r2, chunk_bytes=chunk_bytes,
+        backend=backend, seed=seed,
+    ).makespan
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementCandidate:
+    """A scored placement: simulated CCT + the bound it descended on."""
+
+    placement: Placement
+    method: str
+    cct_s: float
+    bound_s: float
+
+
+PLACEMENT_METHODS = ("static", "greedy", "lp")
+
+
+def search_placement(
+    counts: np.ndarray,
+    num_shards: int,
+    num_rails: int,
+    bytes_per_token: float,
+    method: str = "greedy",
+    weight_bytes=0.0,
+    capacity: int | None = None,
+    chunk_bytes: float = 256 * 2**10,
+    r2: float = 50e9,
+    start: Placement | None = None,
+    score: bool = True,
+) -> PlacementCandidate:
+    """Generate one candidate with ``method`` and score it.
+
+    ``score=False`` skips the vector simulation (bound only) — the
+    controller's drift check uses that cheap path and simulates only when
+    a migration is actually on the table.
+    """
+    if method == "static":
+        pl = (
+            static_placement(
+                as_shard_expert_counts(counts, num_shards).shape[1],
+                num_shards,
+                weight_bytes,
+            )
+            if start is None
+            else start
+        )
+    elif method == "greedy":
+        pl = greedy_placement(
+            counts, num_shards, weight_bytes, capacity=capacity, start=start
+        )
+    elif method == "lp":
+        pl = lp_placement(counts, num_shards, weight_bytes, capacity=capacity)
+    else:
+        raise ValueError(
+            f"unknown placement method {method!r}; choose {PLACEMENT_METHODS}"
+        )
+    bound = placement_bound(counts, pl, num_rails, bytes_per_token, r2)
+    cct = (
+        score_placement(
+            counts, pl, num_rails, bytes_per_token,
+            chunk_bytes=chunk_bytes, r2=r2,
+        )
+        if score
+        else float("nan")
+    )
+    return PlacementCandidate(placement=pl, method=method, cct_s=cct, bound_s=bound)

@@ -1,0 +1,233 @@
+"""Expert-placement state and cost model (`repro.placement`).
+
+RailS balances a *given* traffic matrix by LPT-spraying chunks over
+rails; this layer reshapes the matrix itself by choosing *where experts
+live*. The state is an explicit expert→shard map plus per-expert weight
+sizes; the cost model exposes the two quantities every placement decision
+trades off:
+
+* **Gating cost** — the shard-to-shard traffic a gating-count matrix
+  induces under a placement (``counts_d2``), and its Theorem-2 optimal
+  drain time (``placement_bound``) — the CCT floor LPT spraying
+  approaches.
+* **Migration cost** — re-laying-out experts moves weight bytes across
+  the same fabric. ``migration_to`` returns the extra all-to-all flows a
+  re-layout injects (one ``weight_bytes[e]`` message from the old shard
+  to the new one per moved expert), which the controller amortizes
+  against projected gating savings.
+
+Everything is numpy + the existing traffic/theorem helpers; the simulated
+(vector-backend) CCT scoring lives in :mod:`repro.placement.search`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.theorems import theorem2_optimal_time
+from ..core.traffic import (
+    TrafficMatrix,
+    default_expert_shard,
+    expert_counts_to_matrix,
+    moe_gating_traffic,
+    uniform_sender_counts,
+)
+
+__all__ = [
+    "Placement",
+    "as_shard_expert_counts",
+    "placement_loads",
+    "placement_bound",
+]
+
+
+def as_shard_expert_counts(counts: np.ndarray, num_shards: int) -> np.ndarray:
+    """Normalize gating counts to the ``(M, E)`` per-(shard, expert) form.
+
+    A flat ``(E,)`` vector is expanded under the uniform-sender convention
+    with ``T_e / (M - 1)`` from *every* shard — including the (unknown at
+    this point) host, whose contribution every consumer suppresses (the
+    d2 diagonal / the ``1 - x[e,s]`` term of the LP). That keeps the
+    expansion placement-independent: column sums minus the host row equal
+    ``T_e`` whichever shard ends up hosting ``e``.
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    if counts.ndim == 2:
+        if counts.shape[0] != num_shards:
+            raise ValueError(
+                f"per-(shard, expert) counts need {num_shards} rows, got {counts.shape}"
+            )
+        return counts
+    flat = counts.ravel()
+    return np.tile(flat / max(num_shards - 1, 1), (num_shards, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """An expert→shard map plus per-expert weight footprint.
+
+    Attributes:
+      expert_shard: ``(E,)`` shard index hosting each expert.
+      num_shards: M (the fabric's expert-parallel domains).
+      weight_bytes: ``(E,)`` parameter bytes per expert — what a
+        migration of that expert puts on the wire (scalar broadcasts).
+    """
+
+    expert_shard: np.ndarray
+    num_shards: int
+    weight_bytes: np.ndarray = dataclasses.field(default_factory=lambda: np.float64(0.0))
+
+    def __post_init__(self) -> None:
+        es = np.asarray(self.expert_shard, dtype=np.int64).copy()
+        es.setflags(write=False)
+        object.__setattr__(self, "expert_shard", es)
+        if es.ndim != 1 or es.size == 0:
+            raise ValueError(f"expert_shard must be a non-empty vector, got {es.shape}")
+        if self.num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if es.min() < 0 or es.max() >= self.num_shards:
+            raise ValueError(
+                f"expert_shard values must lie in [0, {self.num_shards}), "
+                f"got range [{es.min()}, {es.max()}]"
+            )
+        wb = np.broadcast_to(
+            np.asarray(self.weight_bytes, dtype=np.float64), es.shape
+        ).copy()
+        if np.any(wb < 0):
+            raise ValueError("weight_bytes must be >= 0")
+        wb.setflags(write=False)
+        object.__setattr__(self, "weight_bytes", wb)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def round_robin(
+        cls, num_experts: int, num_shards: int, weight_bytes=0.0
+    ) -> "Placement":
+        """The historical static layout: expert ``e`` on shard ``e % M``."""
+        return cls(
+            default_expert_shard(num_experts, num_shards), num_shards, weight_bytes
+        )
+
+    @property
+    def num_experts(self) -> int:
+        return self.expert_shard.size
+
+    def shard_expert_counts(self) -> np.ndarray:
+        """``(M,)`` number of experts hosted per shard (capacity view)."""
+        return np.bincount(self.expert_shard, minlength=self.num_shards)
+
+    def move(self, expert: int, shard: int) -> "Placement":
+        es = self.expert_shard.copy()
+        es[expert] = shard
+        return dataclasses.replace(self, expert_shard=es)
+
+    def swap(self, e1: int, e2: int) -> "Placement":
+        es = self.expert_shard.copy()
+        es[e1], es[e2] = es[e2], es[e1]
+        return dataclasses.replace(self, expert_shard=es)
+
+    # -- gating cost --------------------------------------------------------
+
+    def counts_d2(self, counts: np.ndarray) -> np.ndarray:
+        """Gating counts → ``(M, M)`` shard-to-shard token matrix.
+
+        Accepts flat ``(E,)`` per-expert totals (uniform senders) or a
+        full ``(M, E)`` per-(shard, expert) matrix; intra-shard tokens
+        stay on NVLink (zero diagonal). With the round-robin map and flat
+        counts this is bit-identical to the historical
+        :func:`~repro.core.traffic.expert_counts_to_matrix` output.
+        """
+        return expert_counts_to_matrix(counts, self.num_shards, self.expert_shard)
+
+    def traffic(
+        self,
+        counts: np.ndarray,
+        bytes_per_token: float,
+        num_rails: int,
+        migration_d2: np.ndarray | None = None,
+        name: str = "placed-gating",
+    ) -> TrafficMatrix:
+        """Lower gating counts (plus optional migration flows) to a
+        :class:`TrafficMatrix` under this placement.
+
+        ``migration_d2`` is an ``(M, M)`` *bytes* matrix of in-flight
+        expert-weight transfers (from :meth:`migration_to`) — the modeled
+        cost of a re-layout rides the same all-to-all as the gating
+        payload it competes with.
+        """
+        d2_bytes = self.counts_d2(counts) * float(bytes_per_token)
+        if migration_d2 is not None:
+            migration_d2 = np.asarray(migration_d2, dtype=np.float64)
+            if migration_d2.shape != d2_bytes.shape:
+                raise ValueError(
+                    f"migration_d2 must be {d2_bytes.shape}, got {migration_d2.shape}"
+                )
+            d2_bytes = d2_bytes + migration_d2
+        tm = moe_gating_traffic(d2_bytes, 1.0, num_rails)
+        return TrafficMatrix(d1=tm.d1, d2=tm.d2, name=name)
+
+    def uniform_counts(self, expert_tokens: np.ndarray) -> np.ndarray:
+        """Expand per-expert totals to ``(M, E)`` under *this* layout
+        (host shard sends zero — its tokens stay on NVLink)."""
+        return uniform_sender_counts(
+            expert_tokens, self.expert_shard, self.num_shards
+        )
+
+    # -- migration cost -----------------------------------------------------
+
+    def migration_to(self, other: "Placement") -> tuple[np.ndarray, float]:
+        """Extra all-to-all flows of re-laying-out to ``other``.
+
+        Returns ``(migration_d2, total_bytes)``: an ``(M, M)`` bytes
+        matrix with ``weight_bytes[e]`` at ``[old_shard, new_shard]`` for
+        every moved expert, and its total. The matrix plugs straight into
+        :meth:`traffic` / :func:`placement_bound` so migration cost is
+        measured in the same simulated-CCT units as the gating savings.
+        """
+        if other.num_shards != self.num_shards:
+            raise ValueError("placements must share the shard count")
+        if other.num_experts != self.num_experts:
+            raise ValueError("placements must share the expert count")
+        moved = np.flatnonzero(other.expert_shard != self.expert_shard)
+        mig = np.zeros((self.num_shards, self.num_shards))
+        np.add.at(
+            mig,
+            (self.expert_shard[moved], other.expert_shard[moved]),
+            self.weight_bytes[moved],
+        )
+        return mig, float(self.weight_bytes[moved].sum())
+
+
+def placement_loads(
+    counts: np.ndarray, placement: Placement
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-shard fabric loads under a placement: ``(egress, ingress)`` tokens.
+
+    The placement analogue of the paper's eqs. (4)–(5) at domain
+    granularity — the quantities whose max the greedy search descends on.
+    """
+    d2 = placement.counts_d2(counts)
+    return d2.sum(axis=1), d2.sum(axis=0)
+
+
+def placement_bound(
+    counts: np.ndarray,
+    placement: Placement,
+    num_rails: int,
+    bytes_per_token: float,
+    r2: float = 50e9,
+    migration_d2: np.ndarray | None = None,
+) -> float:
+    """Theorem-2 optimal drain time (seconds) of the placed traffic.
+
+    ``max(row sums, col sums) / (N · R2)`` of the placed d2 — the CCT an
+    ideal LPT spray approaches, and the cheap inner-loop score the search
+    descends on before the vector-backend simulation ranks finalists.
+    """
+    d2 = placement.counts_d2(counts) * float(bytes_per_token)
+    if migration_d2 is not None:
+        d2 = d2 + migration_d2
+    return theorem2_optimal_time(d2, num_rails, r2)

@@ -215,6 +215,12 @@ class RoutingReplayState:
         """Forecast of the domain's egress bytes next iteration (0 = no data)."""
         return float(self._totals[domain])
 
+    def expected_totals(self) -> np.ndarray:
+        """``(M,)`` forecast of per-domain egress bytes next iteration —
+        what :class:`GatingFeedbackHook` scores its forecast error against
+        once the iteration's realized loads land."""
+        return self._totals.copy()
+
     def expected_rail_profile(self, domain: int) -> np.ndarray:
         """Normalized ``(N,)`` rail-load profile from previous iterations;
         uniform when nothing has been observed. Diagnostic view of where
@@ -272,9 +278,18 @@ class GatingFeedbackHook:
     (``metrics['moe_counts']``). Each call folds them into the replay
     state, sizes chunks adaptively, and LPT-plans the *next* iteration's
     all-to-all from the replayed forecast — the control-plane half of the
-    dispatch the real transport would execute. Experts are assumed placed
-    round-robin over domains with uniform senders (the same convention as
-    ``core.traffic.mixtral_trace_workload``).
+    dispatch the real transport would execute.
+
+    ``expert_counts`` may be flat ``(E,)`` per-expert totals (the uniform-
+    sender convention of ``core.traffic.mixtral_trace_workload``) or a
+    real per-(shard, expert) ``(M, E)`` matrix straight from the gate.
+    With no ``placement`` the layout is the historical round-robin map —
+    flat-counts outputs are bit-identical to the pre-placement hook. A
+    :class:`~repro.placement.Placement` makes the lowering layout-aware,
+    and an :class:`~repro.placement.OnlinePlacementController` lets the
+    hook migrate experts mid-run: each migration's weight bytes are
+    injected into that iteration's planned traffic so the forecast prices
+    the re-layout it just decided on.
     """
 
     def __init__(
@@ -285,6 +300,8 @@ class GatingFeedbackHook:
         chunk_bytes: float = 4 * 2**20,
         replay_alpha: float = 0.5,
         plan_cache: PlanCache | None = None,
+        placement=None,
+        controller=None,
     ):
         self.num_domains = num_domains
         self.num_rails = num_rails
@@ -294,10 +311,16 @@ class GatingFeedbackHook:
         # Steady gating phases replay identical forecasts; skip re-planning
         # whenever (counts matrix, chunk size) digests to a known key.
         self.plan_cache = PlanCache() if plan_cache is None else plan_cache
+        if controller is not None and placement is None:
+            placement = controller.placement
+        self.placement = placement  # repro.placement.Placement | None
+        self.controller = controller  # OnlinePlacementController | None
 
     def _counts_matrix(self, expert_counts: np.ndarray) -> np.ndarray:
         from ..core.traffic import expert_counts_to_matrix
 
+        if self.placement is not None:
+            return self.placement.counts_d2(expert_counts)
         return expert_counts_to_matrix(expert_counts, self.num_domains)
 
     def on_step(self, expert_counts: np.ndarray) -> dict:
@@ -306,8 +329,25 @@ class GatingFeedbackHook:
         from ..core.theorems import theorem2_optimal_time
         from ..core.traffic import moe_gating_traffic
 
+        migration_d2 = None
+        migration_bytes = 0.0
+        migrated = False
+        if self.controller is not None:
+            decision = self.controller.observe(expert_counts)
+            self.placement = decision.placement
+            if decision.migrated:
+                migrated = True
+                migration_d2 = decision.migration_d2
+                migration_bytes = decision.migration_bytes
         c2 = self._counts_matrix(expert_counts)
-        tm = moe_gating_traffic(c2, self.bytes_per_token, self.num_rails)
+        if migration_d2 is None:
+            tm = moe_gating_traffic(c2, self.bytes_per_token, self.num_rails)
+        else:
+            # The re-layout's weight transfers ride the same fabric as the
+            # gating payload — plan them together.
+            tm = moe_gating_traffic(
+                c2 * self.bytes_per_token + migration_d2, 1.0, self.num_rails
+            )
         # Plan from the replayed forecast (what the scheduler would know at
         # the *start* of the next iteration), falling back to this
         # iteration's counts on the very first call.
@@ -317,7 +357,7 @@ class GatingFeedbackHook:
             or tm.domain_send_totals().max(),
             self.num_rails,
         )
-        key = PlanCache.digest(c2, np.float64(chunk))
+        key = PlanCache.digest(c2, np.float64(chunk), migration_d2)
         cached = self.plan_cache.get(key)
         if cached is None:
             plans = build_all_plans(tm.d1, chunk)
@@ -330,9 +370,15 @@ class GatingFeedbackHook:
         else:
             quality, send_mse = cached
         self.chunker.adapt(send_mse)
-        self.replay.update_from_loads(
-            tm.domain_send_totals(), quality["send_loads"]
+        # Score last iteration's replayed forecast against what this
+        # iteration actually put on the wire (L1, relative): the hook's
+        # view of how fast gating is drifting under its feet.
+        realized = tm.domain_send_totals()
+        predicted = self.replay.expected_totals()
+        forecast_err = float(
+            np.abs(predicted - realized).sum() / max(np.abs(realized).sum(), 1e-12)
         )
+        self.replay.update_from_loads(realized, quality["send_loads"])
         return {
             "chunk_bytes": chunk,
             "total_bytes": tm.total_bytes(),
@@ -340,4 +386,7 @@ class GatingFeedbackHook:
             "pred_max_load": quality["max_load"],
             "opt_time_s": theorem2_optimal_time(tm.d2, self.num_rails, 50e9),
             "plan_cache_hit": cached is not None,
+            "forecast_err": forecast_err,
+            "migrated": migrated,
+            "migration_bytes": migration_bytes,
         }

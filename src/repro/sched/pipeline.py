@@ -82,6 +82,8 @@ def run_pipeline(
     use_replay: bool = True,
     recorder=None,
     compare_sequential: bool = False,
+    releases: list[float] | None = None,
+    backend: str = "event",
 ) -> PipelineResult:
     """Run a sequence of rounds as one overlapped streaming collective.
 
@@ -103,6 +105,14 @@ def run_pipeline(
       compare_sequential: additionally simulate each round standalone and
         report the sum of makespans (the no-overlap baseline) — roughly
         doubles the simulation cost.
+      releases: explicit per-round release times, overriding
+        :func:`plan_releases`. The placement layer uses this to pin every
+        placement mode to one arrival process (cadence derived from the
+        round-robin lowering) so makespans stay comparable when a
+        re-layout shrinks a round's Theorem-2 time.
+      backend: simulation engine (``event`` or ``vector``), forwarded to
+        :func:`~repro.netsim.simulate.run_streaming_collective` — the
+        vector backend carries its usual proactive-planner-only limits.
     """
     # Imported lazily: netsim.simulate pulls in the sched feedback and
     # telemetry modules, so a module-level import here would be circular.
@@ -127,7 +137,14 @@ def run_pipeline(
             else max(replay.expected_total(d) for d in range(tms[0].num_domains))
         )
         chunk_bytes = chunker.suggest(expected, n)
-    releases = plan_releases(tms, gap_fraction, r2)
+    if releases is None:
+        releases = plan_releases(tms, gap_fraction, r2)
+    elif len(releases) != len(tms):
+        raise ValueError(
+            f"releases must have one entry per round, got {len(releases)} for {len(tms)}"
+        )
+    else:
+        releases = [float(t) for t in releases]
     rounds = list(zip(releases, tms))
     streaming = run_streaming_collective(
         rounds,
@@ -142,6 +159,7 @@ def run_pipeline(
         window=window,
         replay=replay,
         recorder=recorder,
+        backend=backend,
     )
     sequential = None
     if compare_sequential:
@@ -158,6 +176,7 @@ def run_pipeline(
                 fault_spec=fault_spec,
                 feedback=feedback,
                 window=window,
+                backend=backend,
             )
             sequential += solo.metrics.makespan
     # The simulation backends report release-relative sojourns directly

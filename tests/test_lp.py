@@ -91,3 +91,122 @@ def test_loads_from_allocation_eq45():
     s, r = loads_from_allocation(d2, p)
     np.testing.assert_allclose(s, [[2.0, 2.0, 2.0], [1.0, 1.0, 1.0]])
     np.testing.assert_allclose(r, [[1.0, 1.0, 1.0], [2.0, 2.0, 2.0]])
+
+
+# --- degenerate / unbounded simplex inputs ----------------------------------
+
+
+def test_simplex_unbounded():
+    # min -x with x >= 0 and no other constraints: drive x -> inf.
+    sol = simplex(c=np.array([-1.0]))
+    assert sol.status == "unbounded"
+
+
+def test_simplex_unbounded_with_slack_direction():
+    # min -x - y s.t. x - y <= 1: the ray (t, t) stays feasible forever.
+    sol = simplex(
+        c=np.array([-1.0, -1.0]),
+        a_ub=np.array([[1.0, -1.0]]),
+        b_ub=np.array([1.0]),
+    )
+    assert sol.status == "unbounded"
+
+
+def test_simplex_degenerate_redundant_constraints():
+    # Redundant copies of the same binding constraint force degenerate
+    # pivots (zero-ratio rows); Bland's rule must still terminate at x=1.
+    sol = simplex(
+        c=np.array([-1.0]),
+        a_ub=np.array([[1.0], [1.0], [2.0]]),
+        b_ub=np.array([1.0, 1.0, 2.0]),
+    )
+    assert sol.status == "optimal"
+    np.testing.assert_allclose(sol.x, [1.0], atol=1e-9)
+
+
+def test_simplex_degenerate_zero_rhs():
+    # A binding constraint with b = 0: the optimum sits at the degenerate
+    # vertex x = 0 rather than cycling.
+    sol = simplex(
+        c=np.array([-1.0, 0.0]),
+        a_ub=np.array([[1.0, 1.0], [1.0, -1.0]]),
+        b_ub=np.array([0.0, 0.0]),
+    )
+    assert sol.status == "optimal"
+    np.testing.assert_allclose(sol.objective, 0.0, atol=1e-9)
+
+
+def test_simplex_zero_sized_objective_all_slack():
+    # Feasible region nonempty, objective constant: any vertex is optimal.
+    sol = simplex(
+        c=np.array([0.0]),
+        a_ub=np.array([[1.0]]),
+        b_ub=np.array([3.0]),
+    )
+    assert sol.status == "optimal"
+    np.testing.assert_allclose(sol.objective, 0.0, atol=1e-12)
+
+
+# --- minmax LP vs closed form on uniform matrices ---------------------------
+
+
+def test_minmax_lp_uniform_matrix_matches_closed_form():
+    """On the uniform all-to-all, the LP optimum equals Theorem 3's
+    t* = (M-1)·w/N and the closed-form P* = 1/N achieves it exactly."""
+    from repro.core.traffic import uniform_workload
+
+    for m, n in [(2, 2), (4, 4), (4, 8)]:
+        tm = uniform_workload(m, n, bytes_per_pair=3.0)
+        p_lp, t_lp, sol = solve_minmax_lp(tm.d2, n)
+        p_cf, t_cf = closed_form_opt(tm.d2, n)
+        assert sol.status == "optimal"
+        np.testing.assert_allclose(t_lp, t_cf, rtol=1e-8)
+        # Row sums of the d2 are (m-1) * n^2 * bytes_per_pair.
+        np.testing.assert_allclose(t_cf, (m - 1) * n * n * 3.0 / n)
+        # The closed-form allocation is feasible at the LP optimum.
+        s, r = loads_from_allocation(tm.d2, p_cf)
+        assert s.max() <= t_lp * (1 + 1e-9)
+        assert r.max() <= t_lp * (1 + 1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 4), n=st.integers(2, 5), seed=st.integers(0, 10_000))
+def test_minmax_lp_randomized_optimality(m, n, seed):
+    """Seeded spot-check of LP optimality conditions on random matrices:
+    the solution is a feasible allocation, achieves the closed-form lower
+    bound (tight for equal rails, Theorem 3), and no load exceeds t*."""
+    rng = np.random.default_rng(seed)
+    d2 = rng.uniform(0.0, 50.0, (m, m)) * (rng.random((m, m)) < 0.7)
+    np.fill_diagonal(d2, 0.0)
+    p, t_lp, sol = solve_minmax_lp(d2, n)
+    assert sol.status == "optimal"
+    # Allocation rows with traffic must sum to 1 across rails.
+    mask = d2 > 0
+    np.testing.assert_allclose(p.sum(axis=2)[mask], 1.0, atol=1e-7)
+    # Feasibility: every per-rail load fits under the bottleneck.
+    s, r = loads_from_allocation(d2, p)
+    assert s.max() <= t_lp + 1e-6
+    assert r.max() <= t_lp + 1e-6
+    # Optimality (equal rails): t* can't beat the Theorem-3 closed form.
+    _, t_cf = closed_form_opt(d2, n)
+    np.testing.assert_allclose(t_lp, t_cf, rtol=1e-6, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 3), seed=st.integers(0, 10_000))
+def test_minmax_lp_heterogeneous_rails_lower_bound(m, seed):
+    """With unequal rail rates, t* still respects the aggregate-capacity
+    lower bound max_load / sum(rates) and the per-rail feasibility t >=
+    load_n / rate_n."""
+    n = 4
+    rng = np.random.default_rng(seed)
+    d2 = rng.uniform(1.0, 20.0, (m, m))
+    np.fill_diagonal(d2, 0.0)
+    rates = rng.uniform(0.25, 1.0, n)
+    p, t_het, sol = solve_minmax_lp(d2, n, rail_rates=rates)
+    assert sol.status == "optimal"
+    worst = max(d2.sum(axis=1).max(), d2.sum(axis=0).max())
+    assert t_het >= worst / rates.sum() - 1e-9
+    s, r = loads_from_allocation(d2, p)
+    assert (s / rates).max() <= t_het + 1e-6
+    assert (r / rates).max() <= t_het + 1e-6

@@ -1,0 +1,383 @@
+"""Expert placement × spraying co-optimization (`repro.placement`).
+
+Three layers of pins:
+
+* **Bit-exactness** — the static round-robin placement must reproduce the
+  pre-placement pipeline byte for byte (the CI placement-off parity gate):
+  the refactor moved layout into one spot without changing any default
+  output.
+* **Search wins** — greedy and LP candidates achieve strictly lower
+  simulated CCT than round-robin on a seeded skewed-gating workload (the
+  reshape-the-matrix claim of LAER-MoE/MicroMoE applied to RailS).
+* **Controller economics** — the online controller migrates under a drift
+  step and nets positive (CCT savings − migration cost) over the trace,
+  with the migration bytes riding the simulated fabric.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.traffic import (
+    default_expert_shard,
+    drifting_expert_counts,
+    drifting_gating_stream,
+    expert_counts_to_matrix,
+    moe_gating_traffic,
+)
+from repro.placement import (
+    OnlinePlacementController,
+    Placement,
+    RelayoutConfig,
+    as_shard_expert_counts,
+    greedy_placement,
+    lp_placement,
+    placement_bound,
+    placement_loads,
+    run_relayout_trace,
+    score_placement,
+    search_placement,
+    static_placement,
+)
+from repro.sched.online import GatingFeedbackHook
+from repro.sched.pipeline import run_pipeline
+
+M, N, E = 4, 4, 8
+BPT = 2048.0
+
+
+def skewed_counts(seed=3, rounds=1, drift=0.3):
+    counts, _ = drifting_expert_counts(
+        M, E, rounds, 8192, popularity_alpha=1.2, drift=drift,
+        sender_alpha=0.8, seed=seed,
+    )
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# state: counts normalization, Placement invariants, migration cost
+# ---------------------------------------------------------------------------
+
+
+class TestState:
+    def test_as_shard_expert_counts_expands_flat(self):
+        flat = np.arange(1.0, float(E) + 1.0)
+        se = as_shard_expert_counts(flat, M)
+        assert se.shape == (M, E)
+        # Uniform-sender convention: every row carries T_e / (M - 1).
+        np.testing.assert_allclose(se, np.tile(flat / (M - 1), (M, 1)))
+
+    def test_as_shard_expert_counts_passthrough_and_shape_check(self):
+        se = np.ones((M, E))
+        assert as_shard_expert_counts(se, M) is not None
+        np.testing.assert_array_equal(as_shard_expert_counts(se, M), se)
+        with pytest.raises(ValueError, match="rows"):
+            as_shard_expert_counts(np.ones((M + 1, E)), M)
+
+    def test_round_robin_matches_default_map(self):
+        pl = Placement.round_robin(E, M)
+        np.testing.assert_array_equal(pl.expert_shard, default_expert_shard(E, M))
+        np.testing.assert_array_equal(pl.shard_expert_counts(), [2, 2, 2, 2])
+
+    def test_placement_validation(self):
+        with pytest.raises(ValueError):
+            Placement(np.array([0, M]), M)  # shard index out of range
+        with pytest.raises(ValueError):
+            Placement(np.array([], dtype=np.int64), M)
+        with pytest.raises(ValueError):
+            Placement(np.array([0, 1]), M, weight_bytes=-1.0)
+
+    def test_placement_immutable(self):
+        pl = Placement.round_robin(E, M)
+        with pytest.raises(ValueError):
+            pl.expert_shard[0] = 1
+
+    def test_move_and_swap(self):
+        pl = Placement.round_robin(E, M)
+        moved = pl.move(0, 3)
+        assert moved.expert_shard[0] == 3 and pl.expert_shard[0] == 0
+        swapped = pl.swap(0, 1)
+        assert swapped.expert_shard[0] == 1 and swapped.expert_shard[1] == 0
+
+    def test_migration_to_flows_and_total(self):
+        wb = np.arange(1.0, E + 1.0) * 1e6
+        pl = Placement.round_robin(E, M, wb)
+        same, total = pl.migration_to(pl)
+        assert total == 0.0 and same.sum() == 0.0
+        dst = pl.move(0, 3).move(5, 2)  # expert 0: shard 0->3, expert 5: 1->2
+        mig, total = pl.migration_to(dst)
+        assert mig[0, 3] == wb[0]
+        assert mig[1, 2] == wb[5]
+        assert total == wb[0] + wb[5] == mig.sum()
+
+    def test_migration_to_mismatch_raises(self):
+        pl = Placement.round_robin(E, M)
+        with pytest.raises(ValueError):
+            pl.migration_to(Placement.round_robin(E, M + 1))
+        with pytest.raises(ValueError):
+            pl.migration_to(Placement.round_robin(E + 2, M))
+
+    def test_placement_loads_match_d2(self):
+        c = skewed_counts()[0]
+        pl = Placement.round_robin(E, M)
+        egress, ingress = placement_loads(c, pl)
+        d2 = pl.counts_d2(c)
+        np.testing.assert_allclose(egress, d2.sum(axis=1))
+        np.testing.assert_allclose(ingress, d2.sum(axis=0))
+
+    def test_traffic_injects_migration_bytes(self):
+        c = skewed_counts()[0]
+        pl = Placement.round_robin(E, M, 1e6)
+        mig, total = pl.migration_to(pl.move(0, 3))
+        base = pl.traffic(c, BPT, N)
+        with_mig = pl.traffic(c, BPT, N, migration_d2=mig)
+        np.testing.assert_allclose(
+            with_mig.total_bytes() - base.total_bytes(), total
+        )
+
+
+# ---------------------------------------------------------------------------
+# static placement is bit-exact with the pre-placement pipeline
+# ---------------------------------------------------------------------------
+
+
+class TestStaticBitExact:
+    def test_counts_d2_flat_counts_bit_exact(self):
+        rng = np.random.default_rng(0)
+        flat = rng.integers(0, 5000, size=E).astype(np.float64)
+        got = Placement.round_robin(E, M).counts_d2(flat)
+        want = expert_counts_to_matrix(flat, M)
+        assert np.array_equal(got, want)
+
+    def test_drifting_stream_explicit_round_robin_bit_exact(self):
+        default = drifting_gating_stream(M, N, 5, 4096.0, seed=7)
+        explicit = drifting_gating_stream(
+            M, N, 5, 4096.0, seed=7, expert_shard=default_expert_shard(8, M)
+        )
+        for tm_d, tm_e in zip(default, explicit):
+            assert np.array_equal(tm_d.d2, tm_e.d2)
+            assert np.array_equal(tm_d.d1, tm_e.d1)
+
+    def test_hook_round_robin_placement_is_identity(self):
+        rng = np.random.default_rng(1)
+        legacy = GatingFeedbackHook(M, N, BPT)
+        placed = GatingFeedbackHook(M, N, BPT, placement=Placement.round_robin(E, M))
+        for _ in range(4):
+            flat = rng.integers(100, 5000, size=E).astype(np.float64)
+            assert legacy.on_step(flat) == placed.on_step(flat)
+
+    def test_static_relayout_trace_matches_plain_pipeline(self):
+        """The CI placement-off parity gate: mode='static' must equal the
+        hand-built round-robin lowering through run_pipeline exactly."""
+        counts = skewed_counts(rounds=4)
+        res = run_relayout_trace(
+            counts, M, N, BPT, mode="static", chunk_bytes=64 * 2**10
+        )
+        tms = [
+            moe_gating_traffic(expert_counts_to_matrix(c, M), BPT, N)
+            for c in counts
+        ]
+        plain = run_pipeline(
+            tms, chunk_bytes=64 * 2**10, releases=res.pipeline.releases
+        )
+        assert res.makespan == plain.makespan
+        assert res.migration_bytes == 0.0
+        assert res.pipeline.releases == plain.releases
+
+
+# ---------------------------------------------------------------------------
+# search: greedy/LP beat round-robin on skewed gating
+# ---------------------------------------------------------------------------
+
+
+class TestSearch:
+    def test_greedy_and_lp_beat_round_robin_cct(self):
+        c = skewed_counts()[0]
+        rr = Placement.round_robin(E, M)
+        s_rr = score_placement(c, rr, N, BPT)
+        s_g = score_placement(c, greedy_placement(c, M), N, BPT)
+        s_lp = score_placement(c, lp_placement(c, M), N, BPT)
+        assert s_g < s_rr
+        assert s_lp < s_rr
+
+    def test_bounds_never_worse_than_round_robin(self):
+        for seed in range(5):
+            c = skewed_counts(seed=seed)[0]
+            b_rr = placement_bound(c, Placement.round_robin(E, M), N, BPT)
+            b_g = placement_bound(c, greedy_placement(c, M), N, BPT)
+            assert b_g <= b_rr + 1e-12
+
+    def test_capacity_respected(self):
+        c = skewed_counts()[0]
+        for pl in (greedy_placement(c, M), lp_placement(c, M)):
+            assert pl.shard_expert_counts().max() <= -(-E // M)
+        tight = greedy_placement(c, M, capacity=E // M)
+        assert tight.shard_expert_counts().max() <= E // M
+
+    def test_capacity_too_small_raises(self):
+        c = skewed_counts()[0]
+        with pytest.raises(ValueError, match="capacity"):
+            greedy_placement(c, M, capacity=1)
+        with pytest.raises(ValueError, match="capacity"):
+            lp_placement(c, M, capacity=1)
+
+    def test_lp_zero_counts_yields_valid_even_layout(self):
+        # Degenerate all-zero gating: any capacity-respecting layout is
+        # optimal (t* = 0); the rounding must still produce a valid one.
+        pl = lp_placement(np.zeros((M, E)), M)
+        assert pl.shard_expert_counts().max() <= -(-E // M)
+        assert placement_bound(np.zeros((M, E)), pl, N, BPT) == 0.0
+
+    def test_search_placement_dispatch(self):
+        c = skewed_counts()[0]
+        cand = search_placement(c, M, N, BPT, method="static", score=False)
+        np.testing.assert_array_equal(
+            cand.placement.expert_shard, static_placement(E, M).expert_shard
+        )
+        assert np.isnan(cand.cct_s)
+        scored = search_placement(c, M, N, BPT, method="greedy")
+        assert scored.cct_s > 0 and scored.bound_s > 0
+        with pytest.raises(ValueError, match="method"):
+            search_placement(c, M, N, BPT, method="anneal")
+
+
+# ---------------------------------------------------------------------------
+# controller: hysteresis, amortization, net-positive drift response
+# ---------------------------------------------------------------------------
+
+
+def drift_step_counts(rounds_a=4, rounds_b=8, tokens=8192.0):
+    """Stable skew, then a step: the hot pair jumps onto colliding shards.
+
+    Phase A's hot experts (0, 1) live on different shards under round-robin
+    (nothing for placement to fix); at the step the heat moves to experts
+    (0, 4), which round-robin co-locates on shard 0 — the collision only a
+    re-layout can resolve.
+    """
+    pop_a = np.array([10.0, 10.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    pop_b = np.array([10.0, 1.0, 1.0, 1.0, 10.0, 1.0, 1.0, 1.0])
+    sender = np.ones(4)
+    mk = lambda pop: tokens * np.outer(
+        sender / sender.sum(), pop / pop.sum()
+    )
+    return [mk(pop_a)] * rounds_a + [mk(pop_b)] * rounds_b
+
+
+class TestController:
+    def test_uniform_counts_never_migrate(self):
+        ctl = OnlinePlacementController(
+            Placement.round_robin(E, M, 1e6), N, BPT
+        )
+        for _ in range(6):
+            dec = ctl.observe(np.full((M, E), 100.0))
+            assert not dec.migrated
+        assert ctl.total_migration_bytes == 0.0
+
+    def test_huge_weights_block_migration(self):
+        """Amortization gate: weights too heavy to pay back over the horizon."""
+        ctl = OnlinePlacementController(
+            Placement.round_robin(E, M, 1e18), N, BPT,
+            config=RelayoutConfig(horizon=2.0),
+        )
+        for c in drift_step_counts():
+            dec = ctl.observe(c)
+            assert not dec.migrated
+
+    def test_cooldown_suppresses_back_to_back_searches(self):
+        cfg = RelayoutConfig(cooldown=3)
+        ctl = OnlinePlacementController(
+            Placement.round_robin(E, M, 1e5), N, BPT, config=cfg
+        )
+        fired = None
+        for i, c in enumerate(drift_step_counts()):
+            if ctl.observe(c).migrated:
+                fired = i
+                break
+        assert fired is not None
+        for c in drift_step_counts()[fired + 1 : fired + 1 + cfg.cooldown]:
+            dec = ctl.observe(c)
+            assert not dec.migrated
+            assert dec.candidate_bound_s == dec.current_bound_s  # no search ran
+
+    def test_drift_step_migrates_and_nets_positive(self):
+        """The acceptance pin: a drift step triggers migration and the trace
+        CCT (migration bytes included) beats spraying-only static."""
+        counts = drift_step_counts()
+        static = run_relayout_trace(
+            counts, M, N, BPT, mode="static", chunk_bytes=64 * 2**10
+        )
+        online = run_relayout_trace(
+            counts, M, N, BPT, mode="online", weight_bytes=2e6,
+            chunk_bytes=64 * 2**10,
+        )
+        assert online.num_migrations >= 1
+        assert online.migration_bytes > 0
+        # The migration is a *response to the step*, not a round-0 fixup.
+        assert all(not d.migrated for d in online.decisions[:4])
+        # Net positive: savings already account for migration traffic,
+        # which rides the simulated fabric inside the online arm.
+        assert online.makespan < static.makespan
+
+    def test_one_shot_modes_beat_static_on_stable_skew(self):
+        counts = skewed_counts(rounds=4, drift=0.02)
+        mk = lambda mode: run_relayout_trace(
+            counts, M, N, BPT, mode=mode, weight_bytes=2e6,
+            chunk_bytes=64 * 2**10,
+        )
+        static, greedy, lp = mk("static"), mk("greedy"), mk("lp")
+        assert greedy.makespan < static.makespan
+        assert lp.makespan < static.makespan
+        assert greedy.migration_bytes > 0  # the re-layout itself was priced
+
+    def test_relayout_trace_rejects_unknown_mode(self):
+        with pytest.raises(ValueError, match="mode"):
+            run_relayout_trace(
+                drift_step_counts(1, 1), M, N, BPT, mode="magic"
+            )
+
+    def test_relayout_config_validation(self):
+        with pytest.raises(ValueError):
+            RelayoutConfig(alpha=0.0)
+        with pytest.raises(ValueError):
+            RelayoutConfig(check_every=0)
+        with pytest.raises(ValueError):
+            RelayoutConfig(horizon=0.0)
+        with pytest.raises(ValueError):
+            RelayoutConfig(method="anneal")
+
+
+# ---------------------------------------------------------------------------
+# hook integration: real (M, E) counts, forecast error, migrations
+# ---------------------------------------------------------------------------
+
+
+class TestHookIntegration:
+    def test_hook_accepts_shard_expert_matrix(self):
+        hook = GatingFeedbackHook(M, N, BPT)
+        out = hook.on_step(skewed_counts()[0])
+        assert out["total_bytes"] > 0
+        assert not out["migrated"]
+
+    def test_forecast_error_tracks_drift_rate(self):
+        errs = {}
+        for drift in (0.02, 0.6):
+            counts, _ = drifting_expert_counts(
+                M, E, 10, 8192, drift=drift, sender_alpha=0.8, seed=5
+            )
+            hook = GatingFeedbackHook(M, N, BPT)
+            series = [hook.on_step(c)["forecast_err"] for c in counts]
+            errs[drift] = float(np.mean(series[2:]))  # skip cold-start
+        assert errs[0.6] > errs[0.02]
+
+    def test_hook_with_controller_migrates_and_reports(self):
+        ctl = OnlinePlacementController(
+            Placement.round_robin(E, M, 1e5), N, BPT
+        )
+        hook = GatingFeedbackHook(M, N, BPT, controller=ctl)
+        outs = [hook.on_step(c) for c in drift_step_counts()]
+        migrated = [o for o in outs if o["migrated"]]
+        assert migrated
+        assert migrated[0]["migration_bytes"] > 0
+        # The hook's placement tracks the controller's.
+        np.testing.assert_array_equal(
+            hook.placement.expert_shard, ctl.placement.expert_shard
+        )
