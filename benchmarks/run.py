@@ -609,6 +609,88 @@ def bench_placement() -> None:
         )
 
 
+def bench_recovery() -> None:
+    """Fail-stop recovery grid: failed-rail count × watchdog timeout × policy.
+
+    Each cell runs the seeded ``repro.runtime.failover`` drill — a rail
+    (or two) fail-stops mid-collective, stranded chunks retry with
+    backoff onto survivors, the silence watchdog flips the planner to the
+    N−k survivor mask — and reports time-to-detect, time-to-recover, and
+    the steady-state degraded CCT against the Theorem-2 bound recomputed
+    on survivors (``track`` = degradation beyond what that bound
+    predicts; ~1.0 means failover costs nothing the math doesn't charge).
+    Reactive ``reps`` rows have no detection (ttd is planner-side) — they
+    recover purely through per-chunk path probing, the baseline the
+    proactive path must beat. A serving leg re-runs the PR-5 request
+    stream through a mid-trace rail-down and reports the p99-TTFT
+    recovery curve (pre/during/post buckets). Structured keys
+    ``recov_k<k>_t<mult>`` feed ``perf_report.py --recovery``.
+    """
+    from repro.netsim import FailStopEvent, RetryConfig
+    from repro.runtime.failover import run_failover_drill
+    from repro.sched.feedback import DeadRailDetector
+    from repro.sched.serving import run_serving, ttft_recovery_curve
+
+    ks = (1, 2)
+    mults = (1.0,) if W.QUICK else (1.0, 3.0)
+    for k in ks:
+        rails = tuple(range(1, 1 + k))
+        for mult in mults:
+            cell = f"recov_k{k}_t{mult:g}"
+            degr, us_tot = {}, 0.0
+            for pol in ("rails-online", "reps"):
+                rep, us = _timed(
+                    lambda pol=pol: run_failover_drill(
+                        fail_rail=rails, deadline_gaps=0.6 * mult, policy=pol
+                    )
+                )
+                degr[pol] = rep.degraded_cct_s
+                us_tot += us
+                ttd = rep.time_to_detect
+                _emit(
+                    f"{cell}_{pol}", us,
+                    f"ttd={'na' if ttd is None else f'{ttd:.3e}s'}"
+                    f"_ttr={rep.time_to_recover:.3e}s"
+                    f"_track={rep.bound_tracking_ratio:.3f}"
+                    f"_eo={int(rep.exactly_once)}"
+                    f"_strands={rep.strands}",
+                )
+            rails_cct = degr["rails-online"]
+            _emit(
+                f"{cell}_ordering", us_tot,
+                f"reps={degr['reps'] / rails_cct:.3f}x_rails_degraded_cct",
+                bench=cell, backend="event",
+            )
+    # Serving leg: mid-trace rail-down + repair through the PR-5 request
+    # stream; the recovery curve buckets p99 TTFT by request arrival.
+    wl = W.serve_requests(mean_gap=5e-4)
+    spec = FaultSpec(
+        failures=(FailStopEvent("rail", 2e-3, rail=W.N - 1, t_repair=5e-3),),
+        retry=RetryConfig(rto=1e-4),
+        seed=11,
+    )
+    res, us = _timed(
+        lambda: run_serving(
+            wl, "rails-online", chunk_bytes=256 * 2**10, fault_spec=spec,
+            detector=DeadRailDetector(W.N, deadline=5e-4),
+        )
+    )
+    curve = ttft_recovery_curve(res, bucket_s=1e-3)
+    pre = [p for t, p in zip(curve["t"], curve["p99"]) if t < 2e-3]
+    during = [p for t, p in zip(curve["t"], curve["p99"]) if 2e-3 <= t < 5e-3]
+    post = [p for t, p in zip(curve["t"], curve["p99"]) if t >= 5e-3]
+    dyn = res.streaming.sim.dynamics or {}
+    _emit(
+        "recov_serving_raildown", us,
+        f"p99_pre={max(pre, default=0.0):.3e}s"
+        f"_fail={max(during, default=0.0):.3e}s"
+        f"_post={max(post, default=0.0):.3e}s"
+        f"_strands={dyn.get('fail_strands', 0)}",
+        bench="recov_serving_raildown", backend="event",
+        size=len(wl.requests),
+    )
+
+
 def bench_online_window_sweep() -> None:
     """ROADMAP windowed re-planning sweep: CCT vs decision latency as the
     re-planning window goes 1 (greedy on arrival) → ∞ (whole-batch LPT),
@@ -691,6 +773,7 @@ BENCHES = {
     "fault_sweep": bench_fault_sweep,
     "serving": bench_serving,
     "placement": bench_placement,
+    "recovery": bench_recovery,
 }
 
 

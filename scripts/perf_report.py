@@ -6,6 +6,7 @@ render the netsim benchmark trajectory across BENCH_netsim.json snapshots.
     PYTHONPATH=src python scripts/perf_report.py --fault-sweep BENCH_a.json ...
     PYTHONPATH=src python scripts/perf_report.py --serving BENCH_a.json ...
     PYTHONPATH=src python scripts/perf_report.py --placement BENCH_a.json ...
+    PYTHONPATH=src python scripts/perf_report.py --recovery BENCH_a.json ...
 
 ``--fault-sweep`` restricts the trajectory to the fault-sweep grid (rows
 whose bench key starts with ``fault_``): one row per (loss rate ×
@@ -23,6 +24,12 @@ starting with ``plc_``): one row per drift-rate cell and placement mode,
 carrying end-to-end CCT + migration bytes plus the per-cell
 static-over-mode ordering — the placement+spraying vs spraying-only
 margin across snapshots.
+
+``--recovery`` restricts it to the fail-stop recovery grid (bench keys
+starting with ``recov_``): one row per (failed-rail count × watchdog
+timeout) cell and policy, carrying time-to-detect / time-to-recover /
+bound-tracking ratio plus the reactive-over-rails degraded-CCT ordering
+and the serving rail-down p99-TTFT recovery leg.
 
 Netsim trajectory rows are keyed by **(bench, backend, size)** — not by
 bench name alone — so the event and vector measurements of one benchmark
@@ -141,6 +148,7 @@ if __name__ == "__main__":
         "--fault-sweep": "fault_",
         "--serving": "serve_",
         "--placement": "plc_",
+        "--recovery": "recov_",
     }
     selected = [f for f in flags if f in args]
     args = [a for a in args if a not in flags]

@@ -186,11 +186,22 @@ def _assign_sorted(loads: np.ndarray, weights_sorted: np.ndarray) -> np.ndarray:
     return assignment
 
 
+def _check_rail_mask(rail_mask, num_rails: int) -> np.ndarray:
+    """Validate a survivor mask: bool ``(N,)`` with at least one rail alive."""
+    mask = np.asarray(rail_mask, dtype=bool)
+    if mask.shape != (num_rails,):
+        raise ValueError(f"rail_mask must be ({num_rails},), got {mask.shape}")
+    if not mask.any():
+        raise ValueError("rail_mask leaves no rail alive — nothing to plan over")
+    return mask
+
+
 def lpt_schedule(
     weights: np.ndarray,
     num_rails: int,
     source_ids: np.ndarray | None = None,
     initial_loads: np.ndarray | None = None,
+    rail_mask: np.ndarray | None = None,
 ) -> LptResult:
     """Algorithm 2, fast path: O(F log F + F log N) LPT assignment.
 
@@ -205,8 +216,31 @@ def lpt_schedule(
         step "Break ties by GPU index"); defaults to the flow index.
       initial_loads: optional ``(N,)`` starting LoadState (default zeros —
         the state is reset before each all-to-all round, §V-B).
+      rail_mask: optional bool ``(N,)`` survivor mask — False rails are
+        fail-stopped and receive nothing; the plan runs over the compacted
+        N−k alive set (the degraded Theorem-2 regime) and assignments map
+        back to original rail indices. Dead rails' loads are untouched.
+        The MSE is over *alive* rails only — a dead rail is not load
+        imbalance.
     """
     weights, source_ids, loads = _validate(weights, num_rails, source_ids, initial_loads)
+    if rail_mask is not None:
+        mask = _check_rail_mask(rail_mask, num_rails)
+        if not mask.all():
+            alive = np.flatnonzero(mask)
+            sub = lpt_schedule(
+                weights,
+                alive.size,
+                source_ids=source_ids,
+                initial_loads=loads[alive],
+            )
+            loads[alive] = sub.loads
+            return LptResult(
+                assignment=alive[sub.assignment],
+                loads=loads,
+                order=sub.order,
+                mse=load_mse(loads[alive]),
+            )
     order = _sort_order(weights, source_ids)
     assignment_sorted = _assign_sorted(loads, weights[order])
     assignment = np.empty(weights.size, dtype=np.int64)
@@ -278,14 +312,23 @@ class LptState:
         weights: np.ndarray,
         source_ids: np.ndarray | None = None,
         extra_loads: np.ndarray | None = None,
+        rail_mask: np.ndarray | None = None,
     ) -> LptResult:
         """LPT-assign one window of chunks against the persistent state.
 
         Returns an :class:`LptResult` for the window (assignment in the
         window's original order, loads = the updated persistent LoadState
-        plus ``extra_loads`` if given).
+        plus ``extra_loads`` if given). ``rail_mask`` (bool ``(N,)``,
+        False = fail-stopped) restricts this window to surviving rails:
+        the window plans over the compacted alive set while dead rails'
+        persistent loads stay frozen, so a later repair (mask back to
+        True) resumes from a consistent LoadState.
         """
         weights, source_ids, _ = _validate(weights, self.num_rails, source_ids, None)
+        if rail_mask is not None:
+            mask = _check_rail_mask(rail_mask, self.num_rails)
+            if not mask.all():
+                return self._assign_masked(weights, source_ids, extra_loads, mask)
         order = _sort_order(weights, source_ids)
         if extra_loads is None:
             eff = self.loads
@@ -308,6 +351,38 @@ class LptState:
             loads=eff,
             order=order,
             mse=load_mse(eff),
+        )
+
+    def _assign_masked(
+        self,
+        weights: np.ndarray,
+        source_ids: np.ndarray | None,
+        extra_loads: np.ndarray | None,
+        mask: np.ndarray,
+    ) -> LptResult:
+        """Window assignment over the compacted survivor set (N−k rails)."""
+        alive = np.flatnonzero(mask)
+        order = _sort_order(weights, source_ids)
+        eff_alive = self.loads[alive].copy()
+        if extra_loads is not None:
+            extra_loads = np.asarray(extra_loads, dtype=np.float64)
+            if extra_loads.shape != (self.num_rails,):
+                raise ValueError("extra_loads must be (num_rails,)")
+            eff_alive += extra_loads[alive]
+        assignment_sorted = _assign_sorted(eff_alive, weights[order])
+        assignment_sub = np.empty(weights.size, dtype=np.int64)
+        assignment_sub[order] = assignment_sorted
+        assignment = alive[assignment_sub]
+        # Persist realized bytes only (never phantom pre-charge, never
+        # anything on a dead rail).
+        np.add.at(self.loads, assignment, weights)
+        eff = self.loads.copy()
+        eff[alive] = eff_alive
+        return LptResult(
+            assignment=assignment,
+            loads=eff,
+            order=order,
+            mse=load_mse(eff_alive),
         )
 
 

@@ -158,17 +158,24 @@ def build_spray_plan(
     src_domain: int,
     policy: str = "lpt",
     seed: int = 0,
+    rail_mask=None,
 ) -> SprayPlan:
     """Assign atomic flows to rails under the chosen policy.
 
     Policies: ``lpt`` (the paper), ``round_robin`` (static), ``random``
     (REPS-style spray). All are *local* — they use only the sender's own
     flows, which Theorem 3 shows is sufficient for global optimality.
+
+    ``rail_mask`` (bool ``(N,)``, LPT only) restricts assignment to the
+    surviving rails after a fail-stop — loads keep full-N indexing with
+    dead rails pinned at zero.
     """
     weights = np.array([f.size for f in flows], dtype=np.float64)
     src_ids = np.array([f.src_gpu for f in flows], dtype=np.int64)
     if policy == "lpt":
-        res: LptResult = lpt_schedule(weights, num_rails, source_ids=src_ids)
+        res: LptResult = lpt_schedule(
+            weights, num_rails, source_ids=src_ids, rail_mask=rail_mask
+        )
     elif policy == "round_robin":
         res = round_robin_schedule(weights, num_rails)
     elif policy == "random":
@@ -192,19 +199,26 @@ def build_all_plans(
     chunk_bytes: float,
     policy: str = "lpt",
     seed: int = 0,
+    rail_mask=None,
 ) -> list[SprayPlan]:
     """Fully distributed planning: one independent SprayPlan per sender domain.
 
     This is the paper's core operational claim (Theorem 3): each node
     schedules *only its own* sending load, with no cross-node coordination,
-    yet the union of plans is globally near-optimal.
+    yet the union of plans is globally near-optimal. ``rail_mask``
+    restricts every sender's LPT to the surviving rails (the N−k
+    post-failure planning regime).
     """
     m = d1.shape[0]
     n = d1.shape[1]
     plans = []
     for k in range(m):
         flows = split_traffic_row(d1[k], k, chunk_bytes)
-        plans.append(build_spray_plan(flows, n, k, policy=policy, seed=seed + k))
+        plans.append(
+            build_spray_plan(
+                flows, n, k, policy=policy, seed=seed + k, rail_mask=rail_mask
+            )
+        )
     return plans
 
 

@@ -76,6 +76,21 @@ def main(argv=None) -> dict:
         help="gating-count steps accumulated before a one-shot "
         "greedy/lp re-layout is planned",
     )
+    ap.add_argument(
+        "--fail-at", type=int, default=None,
+        help="fail-stop drill: at this step the scheduler is told rail "
+        "--fail-rail died (plan cache flushed, next plans over N-1 "
+        "rails), and after the loop a full inject→detect→re-spray→"
+        "evacuate drill (repro.runtime.failover) reports time-to-detect/"
+        "recover and the degraded-CCT ratio",
+    )
+    ap.add_argument("--fail-rail", type=int, default=1,
+                    help="rail index the --fail-at drill kills")
+    ap.add_argument(
+        "--fail-kind", choices=["rail", "nic", "node"], default="rail",
+        help="fail-stop flavor for the --fail-at drill (node drills add "
+        "expert evacuation + elastic re-mesh + supervisor rollback legs)",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -152,6 +167,21 @@ def main(argv=None) -> dict:
         for step in range(start_step, args.steps):
             batch = {k: jax.numpy.asarray(v) for k, v in data.batch(step).items()}
             params, opt_state, metrics = jit_step(params, opt_state, batch)
+            if (
+                args.fail_at is not None
+                and step == args.fail_at
+                and sched_hook is not None
+                and args.fail_kind != "node"
+            ):
+                # The control-plane half of the drill, live: the watchdog
+                # verdict reaches the planner, which drops cached plans
+                # and LPT-plans every later iteration over the survivors.
+                sched_hook.on_rail_failure([args.fail_rail])
+                print(
+                    f"  failover: rail {args.fail_rail} marked dead at step "
+                    f"{step} — plan cache flushed, planning over "
+                    f"{int(sched_hook.survivor_mask.sum())} rails"
+                )
             if sched_hook is not None and "moe_counts" in metrics:
                 counts = np.asarray(metrics["moe_counts"], dtype=np.float64)
                 if placement_state is not None:
@@ -205,7 +235,39 @@ def main(argv=None) -> dict:
             ckpt.wait()
             ckpt.save_async(args.steps, (params, opt_state))
             ckpt.wait()
-    return {"losses": losses, "final_loss": losses[-1][1] if losses else None}
+    result = {"losses": losses, "final_loss": losses[-1][1] if losses else None}
+    if args.fail_at is not None:
+        # Data-plane half of the drill on a reference 4x4 fabric (the
+        # full sched fabric would take minutes of DES for no extra
+        # signal): inject -> silence-detect -> re-spray -> evacuate.
+        from repro.runtime.failover import run_failover_drill
+
+        m = min(args.sched_domains, 4)
+        n = min(args.sched_rails, 4)
+        report = run_failover_drill(
+            num_domains=m,
+            num_rails=n,
+            fail_kind=args.fail_kind,
+            fail_rail=args.fail_rail % n if args.fail_kind != "node" else None,
+            fail_domain=m - 1 if args.fail_kind in ("nic", "node") else None,
+        )
+        ttd = report.time_to_detect
+        print(
+            f"failover drill [{args.fail_kind}]: "
+            f"detect {'n/a' if ttd is None else f'{ttd * 1e3:.3f}ms'} "
+            f"recover {report.time_to_recover * 1e3:.3f}ms "
+            f"degraded-CCT x{report.degraded_ratio:.3f} of bound "
+            f"(tracking x{report.bound_tracking_ratio:.3f}) "
+            f"exactly_once={report.exactly_once}"
+        )
+        if report.evacuation_bytes:
+            print(
+                f"  evacuated {report.evacuated_experts} experts, "
+                f"{report.evacuation_bytes / 2**20:.1f}MiB over survivors; "
+                f"remesh feasible={report.elastic.feasible}"
+            )
+        result["failover_drill"] = report
+    return result
 
 
 if __name__ == "__main__":

@@ -13,8 +13,10 @@ is its online counterpart (release times, rail-health feedback, telemetry
 observers — see `repro.sched`). The pluggable link-dynamics layer
 (`linkmodel`) turns the frozen fabric into a scenario generator: per-link
 rate profiles (step degradation, flapping optics), PFC pause, ECN marking
-with sender rate cuts, and Gilbert–Elliott chunk loss with go-back-N
-recovery, all switched through a `FaultSpec` on the run drivers.
+with sender rate cuts, Gilbert–Elliott chunk loss with go-back-N recovery,
+and fail-stop events (rail/NIC/node down, optional repair) with
+exactly-once retry onto surviving rails, all switched through a
+`FaultSpec` on the run drivers.
 """
 
 from .balancers import (
@@ -33,12 +35,14 @@ from .linkmodel import (
     CONSTANT,
     ConstantRate,
     EcnConfig,
+    FailStopEvent,
     FaultSpec,
     GilbertElliott,
     LinkModel,
     LossConfig,
     PfcConfig,
     PiecewiseRate,
+    RetryConfig,
     as_link_model,
     flapping_profile,
     speeds_at,

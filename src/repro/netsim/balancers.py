@@ -41,6 +41,8 @@ RailS plans are untouched by the noise.
 
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 from ..core.lpt import LptState, lpt_schedule
@@ -207,13 +209,17 @@ class MinRttPolicy(Policy):
         )
 
     def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
+        # `<=` keeps a path selected even if every estimate is the inf
+        # sentinel (all subflows cross dead links — nothing better exists,
+        # and the fabric-level retry machinery owns the recovery). With
+        # any finite estimate present the comparison picks the first
+        # minimum exactly as `<` over finite floats did.
         best_path, best = None, float("inf")
         for rail in range(self.topo.n):
             path = self._subflow(job, rail)
             est = eng.path_delay(path, job.src_domain)
-            if est < best:
+            if best_path is None or est < best:
                 best, best_path = est, path
-        assert best_path is not None
         return best_path
 
 
@@ -242,9 +248,18 @@ class RepsPolicy(Policy):
             path = spine_path(src_domain, dst_domain, rail, dst_gpu, spine)
             paths.append(path)
             ests.append(path_delay(path, src_domain))
-        mean = sum(ests) / n if n else 0.0
+        # Dead links read as the inf sentinel: they never enter the good
+        # pool, and the congestion threshold is computed over finite
+        # estimates only (inf would otherwise poison the mean and make
+        # `inf <= inf` admit unusable paths). Healthy fabrics see the
+        # exact historical arithmetic — every estimate is finite.
+        finite = [est for est in ests if math.isfinite(est)]
+        mean = sum(finite) / len(finite) if finite else 0.0
         threshold = self.congest_factor * max(mean, 1e-12)
-        good = [r for r, est in enumerate(ests) if est <= threshold]
+        good = [
+            r for r, est in enumerate(ests)
+            if math.isfinite(est) and est <= threshold
+        ]
         pool = good if good else list(range(n))
         return paths[int(self.rng.choice(pool))]
 
@@ -322,6 +337,12 @@ class OnlineRailSPolicy(Policy):
       The pre-charge exists only when ``health`` is set — with nominal
       speeds it is identically zero, so replay without health is a no-op
       here (it still drives chunk sizing in the pipeline driver).
+    * ``detector`` — a ``DeadRailDetector`` (silence watchdog); it is
+      swept at every assignment batch and its survivor mask restricts the
+      windowed LPT to alive rails — the degraded N−k Theorem-2 regime.
+      The EWMA ``health`` estimator cannot do this (a dead rail emits no
+      observations, so its speed estimate freezes); the watchdog reads
+      the silence itself.
     """
 
     name = "rails-online"
@@ -333,11 +354,13 @@ class OnlineRailSPolicy(Policy):
         window: int | None = None,
         health=None,
         replay=None,
+        detector=None,
     ):
         super().__init__(topo, seed)
         self.window = window
         self.health = health
         self.replay = replay
+        self.detector = detector
         # Persistent per-domain LPT state: realized bytes per rail plus the
         # incremental assigner — each arrival window extends the plan in
         # O(K log N) without re-sorting the committed backlog.
@@ -376,6 +399,14 @@ class OnlineRailSPolicy(Policy):
         for key in sorted(batch_by_sender):
             for j in batch_by_sender[key]:
                 by_domain.setdefault(j.src_domain, []).append(j)
+        mask = None
+        if self.detector is not None:
+            # Sweep the silence watchdog at control-plane cadence (every
+            # assignment batch); plan this batch over survivors only.
+            self.detector.sweep(now)
+            m = self.detector.survivor_mask()
+            if not m.all():
+                mask = m
         for domain, jobs in by_domain.items():
             weights = np.array([j.size for j in jobs])
             src_ids = np.array([j.src_gpu for j in jobs])
@@ -387,7 +418,10 @@ class OnlineRailSPolicy(Policy):
             for lo in range(0, f, step):
                 hi = min(lo + step, f)
                 res = state.assign(
-                    weights[lo:hi], source_ids=src_ids[lo:hi], extra_loads=extra
+                    weights[lo:hi],
+                    source_ids=src_ids[lo:hi],
+                    extra_loads=extra,
+                    rail_mask=mask,
                 )
                 assignment[lo:hi] = res.assignment
             for j, rail in zip(jobs, assignment):

@@ -80,6 +80,26 @@ stays sorted). Mark/drop/pause events reach observers through
 reactive policies' ``path_delay`` folds recent-mark and live-pause
 penalties into its estimate — the stale congestion signals that make
 reactive schemes herd in §VI-E.
+
+**Fail-stop failures** (``FaultSpec.failures`` — rail / NIC / node deaths
+with optional repair) add two more event sources: a pre-sorted deque of
+down/up transitions (``failq``; fail events get the smallest sequence
+numbers so they win ties against chunk events at the same instant) and a
+retry *heap* (``retryq`` — exponential backoff makes redelivery times
+non-monotone, unlike the constant-``rto`` loss deque). A dead link
+transmits nothing: its in-flight service is cancelled (a tombstone set
+invalidates the already-heaped finish event), its queue is drained, and
+every stranded chunk is re-injected after
+``rto * backoff**min(attempt-1, max_exponent)`` — re-planned onto a
+surviving rail when any link of its original path is still dead
+(:class:`~repro.netsim.linkmodel.RetryConfig`). Chunks arriving at a dead
+link strand the same way (the sender only learns of the death by
+timeout). Every chunk lives in exactly one container at any instant
+(link queue, in-flight service, hop-arrival deque, or retry heap), so
+delivery stays exactly-once: ``dynamics["delivered_chunks"]`` equals the
+chunk count even through a mid-collective rail loss. With no failures
+configured both new sources stay empty and the dynamic loop is bit-exact
+with its PR-4 behaviour.
 """
 
 from __future__ import annotations
@@ -92,7 +112,7 @@ from collections import deque
 
 import numpy as np
 
-from .linkmodel import GilbertElliott
+from .linkmodel import GilbertElliott, RetryConfig
 from .topology import RailTopology
 
 __all__ = [
@@ -291,6 +311,26 @@ class _FifoNetwork:
             self.waiters: dict[str, list[str]] = {}  # paused -> stalled upstream
             self.stalled: dict[str, tuple] = {}  # upstream -> (job, hop, since)
             self.loss_chains: dict[str, GilbertElliott] = {}
+            # Fail-stop machinery (5th + 6th event sources). The fail queue
+            # is pre-sorted and takes the *first* sequence numbers, so a
+            # death at time t wins ties against any chunk event at t. The
+            # retry queue is a heap: exponential backoff makes redelivery
+            # times non-monotone, unlike the constant-rto loss deque.
+            self.dead: set[str] = set()
+            self.in_flight: dict[str, tuple] = {}  # link -> (finish seq, job)
+            self.cancelled: set[int] = set()  # tombstoned finish seqs
+            self.retryq: list = []  # heap of (t, seq, job)
+            transitions = []
+            for ev in engine._failures:
+                names = ev.links(topo.m, topo.n)
+                transitions.append((ev.t_fail, 0, names))
+                if ev.t_repair is not None:
+                    transitions.append((ev.t_repair, 1, names))
+            transitions.sort(key=lambda e: (e[0], e[1]))
+            self.failq: deque = deque(
+                (t, next(self._seq), "down" if k == 0 else "up", names)
+                for t, k, names in transitions
+            )
 
     def inject(self, job, t: float) -> None:
         t = max(t, job.arrival_time)
@@ -389,20 +429,27 @@ class _FifoNetwork:
     # -- dynamic event loop (link models + PFC/ECN/loss) ---------------------
 
     def _run_dyn(self, horizon: float | None) -> None:
-        """Dynamics-aware event loop: four (time, seq)-merged sources —
-        service finishes (heap), hop arrivals, injections, and scheduled
-        retransmissions (deques, produced in non-decreasing time order)."""
+        """Dynamics-aware event loop: six (time, seq)-merged sources —
+        service finishes (heap), hop arrivals, injections, scheduled
+        retransmissions (deques, produced in non-decreasing time order),
+        fail-stop down/up transitions (pre-sorted deque), and stranded-
+        chunk retries (heap — backoff times are non-monotone)."""
         finishes = self.finishes
         arrivals = self.hop_arrivals
         injections = self.injections
         retrans = self.retrans
+        failq = self.failq
+        retryq = self.retryq
         heappop = heapq.heappop
         bound = _INF if horizon is None else horizon
         while True:
             t_n, s_n, src = _INF, 0, -1
             if finishes:
                 t_n, s_n, src = finishes[0][0], finishes[0][1], 0
-            for cand, tag in ((arrivals, 1), (injections, 2), (retrans, 3)):
+            for cand, tag in (
+                (arrivals, 1), (injections, 2), (retrans, 3),
+                (failq, 4), (retryq, 5),
+            ):
                 if cand:
                     t_c, s_c = cand[0][0], cand[0][1]
                     if t_c < t_n or (t_c == t_n and s_c < s_n):
@@ -415,6 +462,14 @@ class _FifoNetwork:
                 t, _s, job, hop = arrivals.popleft()
                 self.now = t
                 self._arrive_dyn(job.path[hop], job, hop, t)
+            elif src == 4:
+                t, _s, tag, names = failq.popleft()
+                self.now = t
+                self._apply_fail(t, tag, names)
+            elif src == 5:
+                t, _s, job = heappop(retryq)
+                self.now = t
+                self._retry_fire(job, t)
             else:
                 if src == 2:
                     t, _s, job = injections.popleft()
@@ -425,7 +480,13 @@ class _FifoNetwork:
 
     def _arrive_dyn(self, link: str, job, hop: int, t: float) -> None:
         """Chunk reaches a link's ingress: ECN-mark against the current
-        backlog, update PFC assertion, then serve or queue."""
+        backlog, update PFC assertion, then serve or queue. A chunk
+        arriving at a dead link strands immediately — the sender only
+        learns of the death through its retry timeout, so the chunk backs
+        off and re-enters (possibly re-sprayed) when the timer fires."""
+        if link in self.dead:
+            self._strand(job, t, link)
+            return
         eng = self.eng
         backlog = self.queued_bytes[link]
         ecn = eng._ecn
@@ -448,12 +509,136 @@ class _FifoNetwork:
         else:
             self._try_start_dyn(link, job, hop, t)
 
+    # -- fail-stop handling (strand / retry / failover) ----------------------
+
+    def _apply_fail(self, t: float, tag: str, names: list[str]) -> None:
+        """One fail-stop transition. ``down``: mark the links dead, cancel
+        their in-flight services (tombstone the heaped finish), drain their
+        queues and any PFC-stalled head, and strand every chunk onto the
+        retry heap. A dead link also stops asserting pause — its upstream
+        waiters restart and their chunks strand at the dead ingress
+        instead. ``up``: the links rejoin the fabric; backed-off retries
+        land on them again (nothing queues on a dead link, so there is
+        nothing to kick)."""
+        eng = self.eng
+        if tag == "up":
+            for link in names:
+                self.dead.discard(link)
+                eng.dead_links.discard(link)
+            return
+        for link in names:
+            if link not in self.link_queue or link in self.dead:
+                continue
+            self.dead.add(link)
+            eng.dead_links.add(link)
+            held = self.in_flight.pop(link, None)
+            if held is not None:
+                fseq, job = held
+                self.cancelled.add(fseq)
+                self.link_busy[link] = False
+                self.queued_bytes[link] -= job.size
+                self._strand(job, t, link)
+            q = self.link_queue[link]
+            while q:
+                job2, _hop2 = q.popleft()
+                self.queued_bytes[link] -= job2.size
+                self._strand(job2, t, link)
+            held = self.stalled.pop(link, None)
+            if held is not None:
+                # The dead link itself was PFC-stalled; its held head
+                # strands and it stops waiting on its downstream.
+                job2, _hop2, since2 = held
+                eng.stall_time[link] = eng.stall_time.get(link, 0.0) + (t - since2)
+                self.queued_bytes[link] -= job2.size
+                self._strand(job2, t, link)
+                for ups in self.waiters.values():
+                    if link in ups:
+                        ups.remove(link)
+            if link in self.asserted:
+                since = self.asserted.pop(link)
+                eng.paused_links.discard(link)
+                eng.pause_time[link] = eng.pause_time.get(link, 0.0) + (t - since)
+                for up in sorted(self.waiters.pop(link, ())):
+                    held2 = self.stalled.pop(up, None)
+                    if held2 is not None:
+                        job3, hop3, since3 = held2
+                        eng.stall_time[up] = (
+                            eng.stall_time.get(up, 0.0) + (t - since3)
+                        )
+                        self._try_start_dyn(up, job3, hop3, t)
+
+    def _strand(self, job, t: float, link: str) -> None:
+        """Schedule a stranded chunk's redelivery with exponential backoff."""
+        eng = self.eng
+        retry = eng._retry
+        job.retries += 1
+        job.ecn_marked = False
+        if retry is None or job.retries > retry.max_retries:
+            raise RuntimeError(
+                f"chunk {job.flow_id}/{job.chunk_id} exceeded "
+                f"{retry.max_retries if retry else 0} retries at dead link "
+                f"{link} — unrecoverable partition (no surviving path)"
+            )
+        eng.fail_strands[link] = eng.fail_strands.get(link, 0) + 1
+        heapq.heappush(
+            self.retryq,
+            (t + retry.delay(job.retries), next(self._seq), job),
+        )
+
+    def _retry_fire(self, job, t: float) -> None:
+        """A stranded chunk's timer fires: if its path still crosses a dead
+        link, re-spray it onto a surviving rail first, then re-inject at
+        hop 0 (the source retransmits from scratch)."""
+        if self.dead and any(link in self.dead for link in job.path):
+            self._failover_path(job)
+        self._arrive_dyn(job.path[0], job, 0, t)
+
+    def _failover_path(self, job) -> None:
+        """Re-plan a stranded chunk onto a surviving rail.
+
+        Candidate rails are scanned in a deterministic order offset by the
+        chunk id, so one dead rail's chunks spread across *all* survivors
+        instead of herding onto a single neighbour. When no fully-alive
+        rail exists (e.g. destination node down) the original path is
+        kept: the chunk strands again on arrival and backs off until a
+        repair lands — or max_retries surfaces the partition."""
+        eng = self.eng
+        topo = eng.topo
+        dead = self.dead
+        src, dst = job.src_domain, job.dst_domain
+        cur_rail = int(job.path[0].split(":")[2])
+        for i in range(topo.n):
+            r = (cur_rail + 1 + job.chunk_id + i) % topo.n
+            path = topo.rail_path(src, dst, r)
+            if any(link in dead for link in path):
+                continue
+            # The go-back-N lane is keyed by (flow, first hop); moving
+            # rails moves lanes, so drop any stale outstanding entry.
+            lane = (job.flow_id, job.path[0])
+            outs = eng._lane_outstanding.get(lane)
+            if outs is not None:
+                outs.discard(job.chunk_id)
+                if not outs:
+                    del eng._lane_outstanding[lane]
+            job.path = path
+            assigned = eng.assigned_bytes
+            for link in path:
+                assigned[link] += job.size
+            eng.failovers += 1
+            return
+
     def _try_start_dyn(self, link: str, job, hop: int, t: float) -> None:
         """Start service unless PFC blocks it: a chunk headed into a
         pause-asserting link stalls its whole upstream link (head-of-line
         blocking — everything queued behind it waits too)."""
         eng = self.eng
         path = job.path
+        if link in self.dead:
+            # PFC waiter resumed onto a link that died in the same fail
+            # event (node-down kills several lanes at once): strand.
+            self.queued_bytes[link] -= job.size
+            self._strand(job, t, link)
+            return
         if eng._pfc is not None and hop + 1 < len(path):
             nxt = path[hop + 1]
             if nxt in self.asserted:
@@ -473,17 +658,23 @@ class _FifoNetwork:
                     size = size / f
         finish = self.link_model[link].service_finish(t, size, self.link_rate[link])
         eng.link_bytes[link] += job.size
-        heapq.heappush(
-            self.finishes, (finish, next(self._seq), job, hop, link, t)
-        )
+        fseq = next(self._seq)
+        heapq.heappush(self.finishes, (finish, fseq, job, hop, link, t))
+        self.in_flight[link] = (fseq, job)
 
     def _finish_dyn(self, ev) -> None:
         """One service completion under dynamics: deassert PFC if drained,
         draw the loss chain, forward / deliver / retransmit, pull the next
         queued chunk."""
         t, _s, job, hop, link, started = ev
+        if _s in self.cancelled:
+            # Service was cancelled by a fail-stop event after this finish
+            # was heaped; the chunk already went through _strand.
+            self.cancelled.discard(_s)
+            return
         eng = self.eng
         self.now = t
+        self.in_flight.pop(link, None)
         self.link_busy[link] = False
         self.queued_bytes[link] -= job.size
         eng.transmitted_bytes[link] += job.size
@@ -638,7 +829,14 @@ class Engine:
         self._pfc = spec.pfc if self._dynamic else None
         self._ecn = spec.ecn if self._dynamic else None
         self._loss = spec.loss if self._dynamic else None
+        self._failures = spec.failures if self._dynamic else ()
+        self._retry = (
+            (spec.retry or RetryConfig()) if self._failures else None
+        )
         self._signals = self._pfc is not None or self._ecn is not None
+        # Links currently fail-stopped (empty unless failures fire); the
+        # policy-facing delay estimates treat them as unusable (inf).
+        self.dead_links: set[str] = set()
         if self._dynamic:
             if coalesce_flowlets:
                 raise ValueError(
@@ -662,6 +860,10 @@ class Engine:
             self.gbn_discards = 0
             self.delivered_chunks = 0
             self.goodput_bytes = 0.0
+            # Fail-stop telemetry: strand counts per dead link, and how
+            # many stranded chunks were re-sprayed onto a surviving rail.
+            self.fail_strands: dict[str, int] = {}
+            self.failovers = 0
             # Deepest ECN cut any sender took (end-of-run factors recover
             # additively and would hide it).
             self.min_sender_factor = 1.0
@@ -729,7 +931,10 @@ class Engine:
         snapshot* — both counters frozen together, the way a delayed probe
         reports a consistent (if old) reading. In the one-shot collective
         nothing has been transmitted during assignment, so both views
-        equal the assigned-bytes estimate."""
+        equal the assigned-bytes estimate. A fail-stopped link is
+        unusable, not merely backlogged: the sentinel is ``inf``."""
+        if self.dead_links and link in self.dead_links:
+            return _INF
         if fresh:
             backlog = self.assigned_bytes[link] - self.transmitted_bytes[link]
         else:
@@ -741,7 +946,14 @@ class Engine:
         up-links, stale snapshot for everything remote. Under fabric
         dynamics the estimate also folds in the congestion-control signals
         a real reactive transport would see — recent ECN marks (stale, via
-        the probe snapshot) and live PFC pause assertions."""
+        the probe snapshot) and live PFC pause assertions. A path crossing
+        a fail-stopped link is unusable: the sentinel is ``inf`` (the
+        policies must treat it as "never pick this while an alternative
+        exists" — a 0-rate link has no finite drain time)."""
+        if self.dead_links:
+            for link in path:
+                if link in self.dead_links:
+                    return _INF
         assigned = self.assigned_bytes
         transmitted = self.transmitted_bytes
         snapshot = self._snapshot
@@ -935,4 +1147,7 @@ class Engine:
             "goodput_bytes": self.goodput_bytes,
             "wire_bytes": sum(self.link_bytes.values()),
             "min_sender_factor": self.min_sender_factor,
+            "fail_strands": sum(self.fail_strands.values()),
+            "failovers": self.failovers,
+            "dead_links": sorted(self.dead_links),
         }

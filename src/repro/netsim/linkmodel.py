@@ -55,6 +55,8 @@ __all__ = [
     "EcnConfig",
     "LossConfig",
     "GilbertElliott",
+    "FailStopEvent",
+    "RetryConfig",
     "FaultSpec",
 ]
 
@@ -346,20 +348,110 @@ class GilbertElliott:
 
 
 @dataclasses.dataclass(frozen=True)
+class FailStopEvent:
+    """One fail-stop event: a rail, NIC, or node that *dies* at ``t_fail``.
+
+    Unlike the degradation profiles above (which slow a link down), a
+    fail-stop link transmits nothing: in-flight chunks are stranded and
+    must be redelivered via timeout-triggered retry onto surviving rails
+    (see :class:`RetryConfig`). Three kinds:
+
+    * ``"rail"`` — rail ``rail`` dies fabric-wide: every domain's ``up``
+      and ``down`` lane on that rail (the rail switch / optics plane).
+    * ``"nic"`` — one (node, rail) NIC dies: domain ``domain``'s ``up``
+      and ``down`` lanes on rail ``rail`` only.
+    * ``"node"`` — node ``domain`` dies entirely: all of its NIC lanes on
+      every rail (the expert-evacuation trigger).
+
+    ``t_repair`` (None = permanent) restores the affected links, after
+    which backed-off retries land on them again and the dead-rail detector
+    observes traffic and revives the rail.
+    """
+
+    kind: str
+    t_fail: float
+    rail: int | None = None
+    domain: int | None = None
+    t_repair: float | None = None
+
+    def __post_init__(self):
+        if self.kind not in ("rail", "nic", "node"):
+            raise ValueError("kind must be 'rail', 'nic' or 'node'")
+        if not self.t_fail >= 0.0:
+            raise ValueError("t_fail must be >= 0")
+        if self.t_repair is not None and not self.t_repair > self.t_fail:
+            raise ValueError("t_repair must exceed t_fail")
+        if self.kind in ("rail", "nic") and self.rail is None:
+            raise ValueError(f"kind={self.kind!r} needs a rail index")
+        if self.kind in ("nic", "node") and self.domain is None:
+            raise ValueError(f"kind={self.kind!r} needs a domain index")
+
+    def links(self, num_domains: int, num_rails: int) -> list[str]:
+        """Names of the ``up``/``down`` lanes this event kills."""
+        if self.kind == "rail":
+            pairs = [(d, self.rail) for d in range(num_domains)]
+        elif self.kind == "nic":
+            pairs = [(self.domain, self.rail)]
+        else:  # node
+            pairs = [(self.domain, r) for r in range(num_rails)]
+        return [
+            f"{kind}:{d}:{r}" for d, r in pairs for kind in ("up", "down")
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryConfig:
+    """Timeout-triggered retry with exponential backoff for stranded chunks.
+
+    A chunk stranded by a fail-stop event (in flight on the dead link, or
+    arriving at one before the sender has re-sprayed) is re-injected after
+    ``rto * backoff**min(attempt - 1, max_exponent)`` seconds; at fire time
+    the source re-plans the chunk onto a surviving rail if any link of its
+    original path is still dead. ``max_retries`` bounds the attempts per
+    chunk (exceeded = unrecoverable partition, surfaced as an error rather
+    than a silent hang).
+    """
+
+    rto: float = 5e-4
+    backoff: float = 2.0
+    max_exponent: int = 10
+    max_retries: int = 50
+
+    def __post_init__(self):
+        if not self.rto > 0.0:
+            raise ValueError("rto must be positive")
+        if not self.backoff >= 1.0:
+            raise ValueError("backoff must be >= 1")
+        if not self.max_exponent >= 0:
+            raise ValueError("max_exponent must be >= 0")
+        if not self.max_retries >= 1:
+            raise ValueError("max_retries must be >= 1")
+
+    def delay(self, attempt: int) -> float:
+        """Backoff delay before retry number ``attempt`` (1-based)."""
+        return self.rto * self.backoff ** min(attempt - 1, self.max_exponent)
+
+
+@dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """One fabric's dynamics: per-rail rate profiles + PFC/ECN/loss knobs.
 
     ``rail_profiles`` maps rail index → profile (a :class:`LinkModel` or a
     bare scalar factor) applied to that rail's NIC lanes (``up``/``down``
-    links) on top of any static ``rail_speeds`` factor. ``seed`` drives the
-    fault-layer RNG (loss draws), decoupled from the policy seed so the
-    same fault realization can be replayed across policies.
+    links) on top of any static ``rail_speeds`` factor. ``failures`` lists
+    :class:`FailStopEvent` instances (rail/NIC/node deaths with optional
+    repair); ``retry`` configures the stranded-chunk redelivery loop
+    (defaults to ``RetryConfig()`` whenever failures are present). ``seed``
+    drives the fault-layer RNG (loss draws), decoupled from the policy
+    seed so the same fault realization can be replayed across policies.
     """
 
     rail_profiles: dict = dataclasses.field(default_factory=dict)
     pfc: PfcConfig | None = None
     ecn: EcnConfig | None = None
     loss: LossConfig | None = None
+    failures: tuple = ()
+    retry: RetryConfig | None = None
     seed: int = 0
 
     def __post_init__(self):
@@ -368,16 +460,21 @@ class FaultSpec:
             "rail_profiles",
             {int(r): as_link_model(p) for r, p in self.rail_profiles.items()},
         )
+        object.__setattr__(self, "failures", tuple(self.failures))
+        for ev in self.failures:
+            if not isinstance(ev, FailStopEvent):
+                raise TypeError(f"failures entries must be FailStopEvent, got {ev!r}")
 
     @property
     def is_static(self) -> bool:
         """True when the spec degenerates to a frozen fabric: constant
-        profiles only and no PFC/ECN/loss — the zero-cost case both
-        backends run bit-exactly."""
+        profiles only and no PFC/ECN/loss/fail-stop — the zero-cost case
+        both backends run bit-exactly."""
         return (
             self.pfc is None
             and self.ecn is None
             and self.loss is None
+            and not self.failures
             and all(m.is_constant for m in self.rail_profiles.values())
         )
 

@@ -309,6 +309,7 @@ def run_streaming_collective(
     window: int | None = None,
     replay=None,
     recorder=None,
+    detector=None,
     coalesce: bool = False,
     backend: str = "event",
 ) -> StreamingResult:
@@ -336,6 +337,11 @@ def run_streaming_collective(
       replay: optional ``RoutingReplayState`` forecast for ``rails-online``;
         updated in place with this run's realized per-domain loads.
       recorder: optional ``repro.sched.telemetry.TraceRecorder``.
+      detector: optional ``repro.sched.feedback.DeadRailDetector`` — the
+        silence-based dead-rail watchdog. Registered as an engine observer
+        (every NIC-lane service is a heartbeat) and, for ``rails-online``,
+        swept at each assignment batch so the windowed LPT plans over the
+        survivor mask (event backend only).
       coalesce: enable flowlet coalescing (merged same-lane service
         events); exact CCTs require the default ``False``.
       backend: ``event`` (default — the incremental DES, required for
@@ -371,16 +377,19 @@ def run_streaming_collective(
     kwargs: dict = {}
     policy_cls = POLICIES.get(policy_name, Policy)
     if issubclass(policy_cls, OnlineRailSPolicy):
-        kwargs = {"window": window, "health": health, "replay": replay}
+        kwargs = {
+            "window": window, "health": health, "replay": replay,
+            "detector": detector,
+        }
     policy = make_policy(policy_name, topo, seed=seed, **kwargs)
     policy.prepare(jobs)
     if backend == "vector":
         _check_vector_supports(topo, backend)  # dynamics need the event engine
-        if feedback or recorder is not None or coalesce:
+        if feedback or recorder is not None or coalesce or detector is not None:
             raise ValueError(
                 "vector streaming is feedback-free: rail-health estimation, "
-                "telemetry recording and flowlet coalescing need the event "
-                "engine's live service stream"
+                "dead-rail detection, telemetry recording and flowlet "
+                "coalescing need the event engine's live service stream"
             )
         if not issubclass(policy_cls, (RailSPolicy, OnlineRailSPolicy)):
             raise ValueError(
@@ -396,6 +405,8 @@ def run_streaming_collective(
             engine.add_observer(health)
         if recorder is not None:
             engine.add_observer(recorder)
+        if detector is not None:
+            engine.add_observer(detector)
         result = engine.run_streaming(jobs, policy)
     # Lower bound: each round cannot beat its own Theorem-2 time after its
     # release, nor can the union beat the aggregate matrix's bound.

@@ -179,6 +179,92 @@ class OnlinePlacementController:
         self.migrations.append((rnd, mig_bytes))
         return RelayoutDecision(True, candidate, mig_d2, mig_bytes, cur, cand, gain)
 
+    def evacuate(self, failed_shards, counts=None) -> RelayoutDecision:
+        """Mandatory re-layout off failed shards onto the survivors.
+
+        Unlike :meth:`observe`, no hysteresis or amortization gate
+        applies — experts hosted on dead hardware are unreachable and
+        *must* move. Each victim expert is greedily reassigned to the
+        least-loaded surviving shard (load = per-expert token demand from
+        ``counts``, the EWMA history, or uniform, in that order of
+        preference; ``capacity`` is still honored). The weight transfers
+        use the checkpoint-replica model: the dead shard cannot source
+        its own weights, so each destination pulls the expert's bytes
+        evenly from the *other* surviving shards — those flows ride the
+        same fabric and plug into the next round's plan via
+        ``migration_d2`` exactly like an :meth:`observe` migration.
+        """
+        failed = sorted({int(s) for s in failed_shards})
+        m = self.placement.num_shards
+        for s in failed:
+            if not 0 <= s < m:
+                raise ValueError(f"shard {s} out of range [0, {m})")
+        survivors = [s for s in range(m) if s not in failed]
+        if not survivors:
+            raise ValueError("evacuation would leave no surviving shard")
+        es = self.placement.expert_shard
+        victims = np.flatnonzero(np.isin(es, failed))
+        if counts is not None:
+            counts_se = as_shard_expert_counts(counts, m)
+        elif self._ewma is not None:
+            counts_se = self._ewma
+        else:
+            counts_se = np.ones((m, self.placement.num_experts))
+        cur = placement_bound(
+            counts_se, self.placement, self.num_rails, self.bytes_per_token, self.r2
+        )
+        if victims.size == 0:
+            return RelayoutDecision(False, self.placement, None, 0.0, cur, cur, 0.0)
+        demand = counts_se.sum(axis=0)
+        load = np.zeros(m)
+        np.add.at(load, es, demand)
+        load[failed] = np.inf  # never a destination
+        cap = None if self.capacity is None else int(self.capacity)
+        hosted = np.bincount(es, minlength=m)
+        new_es = es.copy()
+        # Heaviest demand first (LPT flavor): big experts get first pick
+        # of the emptiest survivor.
+        order = victims[np.argsort(-demand[victims], kind="stable")]
+        for e in order:
+            open_shards = [s for s in survivors if cap is None or hosted[s] < cap]
+            if not open_shards:
+                raise ValueError(
+                    f"capacity={cap} leaves no room on the {len(survivors)} "
+                    f"surviving shards for expert {int(e)}"
+                )
+            dest = min(open_shards, key=lambda s: (load[s], hosted[s], s))
+            hosted[new_es[e]] -= 1
+            new_es[e] = dest
+            load[dest] += demand[e]
+            hosted[dest] += 1
+        candidate = dataclasses.replace(self.placement, expert_shard=new_es)
+        wb = self.placement.weight_bytes
+        mig = np.zeros((m, m))
+        mig_bytes = 0.0
+        for e in victims:
+            dest = int(new_es[e])
+            srcs = [s for s in survivors if s != dest]
+            if srcs:  # lone survivor already holds the replica locally
+                mig[srcs, dest] += wb[e] / len(srcs)
+                mig_bytes += float(wb[e])
+        cand = placement_bound(
+            counts_se, candidate, self.num_rails, self.bytes_per_token, self.r2
+        )
+        rnd = self.rounds_seen
+        self.placement = candidate
+        self._last_migration_round = rnd
+        self.total_migration_bytes += mig_bytes
+        self.migrations.append((rnd, mig_bytes))
+        return RelayoutDecision(
+            True,
+            candidate,
+            mig if mig_bytes > 0 else None,
+            mig_bytes,
+            cur,
+            cand,
+            cur - cand,
+        )
+
 
 @dataclasses.dataclass
 class RelayoutResult:

@@ -1,17 +1,28 @@
-"""Distributed runtime: fault tolerance, elastic scaling, stragglers."""
+"""Distributed runtime: fault tolerance, elastic scaling, stragglers,
+and the end-to-end fail-stop failover drill (:mod:`~repro.runtime.failover`)."""
 
 from .elastic import ElasticPlan, plan_remesh, scale_batch
+from .failover import (
+    DrillReport,
+    degraded_alive_matrix,
+    degraded_theorem2_bound,
+    run_failover_drill,
+)
 from .fault_tolerance import HeartbeatRegistry, NodeState, TrainingSupervisor
 from .straggler import StragglerDetector, degraded_rail_schedule, speculative_dispatch
 
 __all__ = [
+    "DrillReport",
     "ElasticPlan",
     "HeartbeatRegistry",
     "NodeState",
     "StragglerDetector",
     "TrainingSupervisor",
+    "degraded_alive_matrix",
     "degraded_rail_schedule",
+    "degraded_theorem2_bound",
     "plan_remesh",
+    "run_failover_drill",
     "scale_batch",
     "speculative_dispatch",
 ]

@@ -105,18 +105,26 @@ class TrainingSupervisor:
     ):
         step = 0
         self.save_fn(0, state)
+        # The simulated clock is *monotone*: it never rewinds, even when a
+        # rollback sends `step` backwards. The old `now = clock + step *
+        # step_time` recomputation moved time backwards after a restore,
+        # so heartbeat ages went negative and a later genuine silence
+        # could hide inside the stale (future) last-beat stamps.
+        now = clock
         while step < steps:
-            now = clock + step * step_time
             victim = failure_injector(step) if failure_injector is not None else None
             for node in self.registry.healthy():
                 if node != victim:
                     self.registry.beat(node, now)
-            # A silent victim is detected once its beat ages past the
-            # deadline; advance the detector clock accordingly.
-            sweep_at = now + self.registry.deadline + 1e-9 if victim is not None else now
-            failed = self.registry.sweep(sweep_at)
+            if victim is not None:
+                # Detection consumes wall time: the victim's beat must age
+                # past the deadline before any sweep can see it.
+                now += self.registry.deadline + 1e-9
+            failed = self.registry.sweep(now)
             if failed:
-                # Roll back: replacement hardware rejoins, state restores.
+                # Roll back: replacement hardware rejoins *at the advanced
+                # clock*, state restores, and time keeps moving forward
+                # through the replay.
                 for node in failed:
                     self.registry.revive(node, now)
                 state, step = self.restore_fn()
@@ -130,6 +138,7 @@ class TrainingSupervisor:
                 continue
             state = step_fn(state, step)
             step += 1
+            now += step_time
             if step % self.checkpoint_every == 0:
                 self.save_fn(step, state)
         return state, step

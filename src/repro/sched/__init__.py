@@ -34,7 +34,7 @@ Anchors: with every chunk released at t=0 and feedback disabled, the
 online path reproduces the offline one exactly (tests pin this down).
 """
 
-from .feedback import RailHealthEstimator, speed_precharge
+from .feedback import DeadRailDetector, RailHealthEstimator, speed_precharge
 from .online import (
     AdaptiveChunker,
     GatingFeedbackHook,
@@ -51,11 +51,13 @@ from .serving import (
     expert_counts_to_matrix,
     run_serving,
     simulate_decode_trace,
+    ttft_recovery_curve,
 )
 from .telemetry import ServiceRecord, TraceRecorder
 
 __all__ = [
     "AdaptiveChunker",
+    "DeadRailDetector",
     "DecodeTraceResult",
     "GatingFeedbackHook",
     "PipelineResult",
@@ -73,5 +75,6 @@ __all__ = [
     "run_serving",
     "simulate_decode_trace",
     "speed_precharge",
+    "ttft_recovery_curve",
     "windowed_lpt_schedule",
 ]

@@ -22,7 +22,7 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["speed_precharge", "RailHealthEstimator"]
+__all__ = ["speed_precharge", "RailHealthEstimator", "DeadRailDetector"]
 
 
 def speed_precharge(total_weight: float, rail_speeds: np.ndarray) -> np.ndarray:
@@ -162,3 +162,111 @@ class RailHealthEstimator:
         self._rates[:] = self.nominal_rate
         self._observations[:] = 0
         self._history.clear()
+
+
+class DeadRailDetector:
+    """Silence-based dead-rail watchdog: per-rail ``last_seen`` + the
+    HEALTHY→SUSPECT→FAILED state machine of
+    :class:`repro.runtime.fault_tolerance.HeartbeatRegistry`.
+
+    The EWMA :class:`RailHealthEstimator` goes *blind* on a fail-stopped
+    rail — a dead lane emits no service observations, so its speed
+    estimate freezes at the last healthy value. This detector closes that
+    gap with the inverse signal: silence. Each observed NIC-lane service
+    is a heartbeat for its rail (rails are the registry's "nodes"); a rail
+    whose last beat ages past ``suspect_after`` turns SUSPECT, past
+    ``deadline`` turns FAILED.
+
+    Ages are measured against the **activity clock** — the newest service
+    end observed on *any* rail — not wall time. During a fabric-wide idle
+    gap (between micro-batch releases) every rail is silent and none
+    should be suspected; once the survivors speak again, a rail silent for
+    a full deadline of *fabric activity* is genuinely dead. This also
+    detects a rail dead from t=0 (it never beats, so its age grows as the
+    others serve). A FAILED rail observed serving again (repair landed,
+    backed-off retries came back) is revived, bumping the registry
+    generation — the same semantics a node replacement has.
+
+    Plug it into the engine as an observer and :meth:`sweep` it from the
+    control plane (the online policy sweeps at every assignment batch);
+    :meth:`survivor_mask` is the ``(N,)`` bool mask windowed LPT plans
+    over (:func:`repro.core.lpt.lpt_schedule` ``rail_mask``).
+    """
+
+    def __init__(
+        self,
+        num_rails: int,
+        deadline: float,
+        suspect_after: float | None = None,
+    ):
+        from repro.runtime.fault_tolerance import HeartbeatRegistry, NodeState
+
+        if not deadline > 0.0:
+            raise ValueError("deadline must be positive")
+        if suspect_after is None:
+            suspect_after = 0.5 * deadline
+        if not 0.0 <= suspect_after <= deadline:
+            raise ValueError("need 0 <= suspect_after <= deadline")
+        self.num_rails = int(num_rails)
+        self._NodeState = NodeState
+        self.registry = HeartbeatRegistry(
+            self.num_rails, deadline=deadline, suspect_after=suspect_after
+        )
+        self.activity = 0.0  # newest observed service end, any rail
+        self.detected_at: dict[int, float] = {}  # rail -> sweep wall time
+        self.recovered_at: dict[int, float] = {}
+
+    # -- engine observer protocol -------------------------------------------
+
+    def record_service(self, link: str, start: float, end: float, job) -> None:
+        kind, _d, rail = link.split(":")
+        if kind not in ("up", "down"):
+            return
+        r = int(rail)
+        if end > self.activity:
+            self.activity = end
+        node = self.registry.nodes[r]
+        if node.state is self._NodeState.FAILED:
+            # A dead rail serving again means the repair landed: revive
+            # (replacement-node semantics — generation bumps).
+            self.registry.revive(r, end)
+            self.recovered_at[r] = end
+            self.detected_at.pop(r, None)
+        elif end > node.last_beat:
+            self.registry.beat(r, end)
+
+    # -- control-plane protocol ---------------------------------------------
+
+    def sweep(self, now: float) -> list[int]:
+        """Advance the watchdog; returns newly-FAILED rails.
+
+        Ages run on the activity clock (see class docstring); ``now`` is
+        the control plane's wall time, recorded as the *detection* time —
+        the instant the scheduler actually learned of the death.
+        """
+        newly = self.registry.sweep(self.activity)
+        for r in newly:
+            self.detected_at[r] = now
+        return newly
+
+    def state(self, rail: int):
+        """The rail's :class:`NodeState` (HEALTHY / SUSPECT / FAILED)."""
+        return self.registry.nodes[rail].state
+
+    def dead_rails(self) -> list[int]:
+        FAILED = self._NodeState.FAILED
+        return [
+            r for r, n in self.registry.nodes.items() if n.state is FAILED
+        ]
+
+    def survivor_mask(self) -> np.ndarray:
+        """Bool ``(N,)``: True = rail not FAILED (SUSPECT still plans)."""
+        mask = np.ones(self.num_rails, dtype=bool)
+        for r in self.dead_rails():
+            mask[r] = False
+        return mask
+
+    def time_to_detect(self, rail: int, t_fail: float) -> float | None:
+        """Seconds from the true failure to the sweep that caught it."""
+        at = self.detected_at.get(rail)
+        return None if at is None else at - t_fail

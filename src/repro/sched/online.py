@@ -158,6 +158,13 @@ class PlanCache:
         while len(self._entries) > self.capacity:
             self._entries.pop(next(iter(self._entries)))
 
+    def clear(self) -> None:
+        """Drop every entry (hit/miss counters survive). Failover calls
+        this: a cached plan sprays over rails that may no longer exist,
+        and replaying it after a topology change would resurrect traffic
+        onto a dead rail."""
+        self._entries.clear()
+
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
@@ -315,6 +322,37 @@ class GatingFeedbackHook:
             placement = controller.placement
         self.placement = placement  # repro.placement.Placement | None
         self.controller = controller  # OnlinePlacementController | None
+        # All rails alive until the dead-rail watchdog says otherwise;
+        # with the full mask every code path below is bit-identical to
+        # the pre-failover hook.
+        self.survivor_mask = np.ones(num_rails, dtype=bool)
+
+    def on_rail_failure(self, dead_rails) -> None:
+        """Watchdog callback: shrink the planning fabric to survivors.
+
+        Clears the plan cache (cached plans spray over the dead rail) and
+        records the survivor mask so subsequent :meth:`on_step` calls
+        plan, size chunks, and score the Theorem-2 bound over the
+        asymmetric N−k rail set.
+        """
+        mask = self.survivor_mask.copy()
+        for r in dead_rails:
+            if not 0 <= int(r) < self.num_rails:
+                raise ValueError(f"rail {r} out of range [0, {self.num_rails})")
+            mask[int(r)] = False
+        if not mask.any():
+            raise ValueError("on_rail_failure would leave no rail alive")
+        self.survivor_mask = mask
+        self.plan_cache.clear()
+
+    def on_rail_repair(self, rails) -> None:
+        """Repaired rails rejoin the planning fabric (cache cleared again
+        — survivor-set plans under-use the returned capacity)."""
+        mask = self.survivor_mask.copy()
+        for r in rails:
+            mask[int(r)] = True
+        self.survivor_mask = mask
+        self.plan_cache.clear()
 
     def _counts_matrix(self, expert_counts: np.ndarray) -> np.ndarray:
         from ..core.traffic import expert_counts_to_matrix
@@ -348,6 +386,11 @@ class GatingFeedbackHook:
             tm = moe_gating_traffic(
                 c2 * self.bytes_per_token + migration_d2, 1.0, self.num_rails
             )
+        # Plan over the *surviving* rail set: with the full mask this is
+        # the historical N-rail path, bit-identical; after a failure every
+        # sizing/quality/bound computation sees N−k rails.
+        alive = int(self.survivor_mask.sum())
+        degraded = alive < self.num_rails
         # Plan from the replayed forecast (what the scheduler would know at
         # the *start* of the next iteration), falling back to this
         # iteration's counts on the very first call.
@@ -355,15 +398,21 @@ class GatingFeedbackHook:
             max((self.replay.expected_total(d) for d in range(self.num_domains)),
                 default=0.0)
             or tm.domain_send_totals().max(),
-            self.num_rails,
+            alive,
         )
-        key = PlanCache.digest(c2, np.float64(chunk), migration_d2)
+        key = PlanCache.digest(
+            c2, np.float64(chunk), migration_d2, self.survivor_mask
+        )
         cached = self.plan_cache.get(key)
         if cached is None:
-            plans = build_all_plans(tm.d1, chunk)
+            plans = build_all_plans(
+                tm.d1, chunk, rail_mask=self.survivor_mask if degraded else None
+            )
             quality = plan_quality(plans, self.num_rails)
+            # MSE over the *alive* columns only — a dead rail's frozen
+            # zero load is the plan working, not imbalance.
             send_mse = max(
-                normalized_load_mse(quality["send_loads"][d])
+                normalized_load_mse(quality["send_loads"][d][self.survivor_mask])
                 for d in range(self.num_domains)
             )
             self.plan_cache.put(key, (quality, send_mse))
@@ -384,9 +433,10 @@ class GatingFeedbackHook:
             "total_bytes": tm.total_bytes(),
             "pred_send_mse": send_mse,
             "pred_max_load": quality["max_load"],
-            "opt_time_s": theorem2_optimal_time(tm.d2, self.num_rails, 50e9),
+            "opt_time_s": theorem2_optimal_time(tm.d2, alive, 50e9),
             "plan_cache_hit": cached is not None,
             "forecast_err": forecast_err,
             "migrated": migrated,
             "migration_bytes": migration_bytes,
+            "alive_rails": alive,
         }

@@ -56,6 +56,7 @@ __all__ = [
     "ServingResult",
     "DecodeTraceResult",
     "run_serving",
+    "ttft_recovery_curve",
     "expert_counts_to_matrix",
     "simulate_decode_trace",
 ]
@@ -146,15 +147,18 @@ def run_serving(
     fault_spec=None,
     feedback: bool = False,
     window: int | None = None,
+    detector=None,
     backend: str = "event",
 ) -> ServingResult:
     """Simulate one serving workload under one policy; return tail metrics.
 
     Arguments mirror :func:`~repro.netsim.simulate.run_streaming_collective`
     (``fault_spec`` attaches the PR-4 link-dynamics layer — degraded
-    fabrics are the whole point of a p99 study). The default chunk size is
-    small: decode rounds move tens of KiB, and Theorem-4 multiplicity
-    needs several chunks per rail even then.
+    fabrics are the whole point of a p99 study; ``detector`` attaches the
+    PR-7 dead-rail watchdog so mid-trace fail-stop events re-spray onto
+    survivors — see :func:`ttft_recovery_curve` for the recovery view).
+    The default chunk size is small: decode rounds move tens of KiB, and
+    Theorem-4 multiplicity needs several chunks per rail even then.
     """
     from ..netsim.simulate import run_streaming_collective
 
@@ -182,6 +186,7 @@ def run_serving(
         fault_spec=fault_spec,
         feedback=feedback,
         window=window,
+        detector=detector,
         backend=backend,
     )
     round_cct = streaming.round_cct
@@ -213,6 +218,41 @@ def run_serving(
             sojourn=sojourn,
         ),
     )
+
+
+def ttft_recovery_curve(result: ServingResult, bucket_s: float) -> dict:
+    """Bucket TTFTs by request *arrival* into a p50/p99 time series.
+
+    The failure-drill view: run :func:`run_serving` with a mid-trace
+    :class:`~repro.netsim.linkmodel.FailStopEvent` and plot how the TTFT
+    tail degrades at ``t_fail`` and recovers once the watchdog re-sprays
+    onto survivors (and, with ``t_repair``, once the rail returns).
+    Arrivals are normalized to the earliest round release — the same
+    origin every latency in ``result.request`` uses — so the curve lines
+    up with the fault spec's event times directly.
+
+    Returns ``{"t": [...], "p50": [...], "p99": [...], "count": [...]}``
+    where ``t`` is each bucket's left edge; empty buckets are skipped.
+    """
+    if bucket_s <= 0.0:
+        raise ValueError("bucket_s must be positive")
+    ordered = sorted(result.workload.rounds, key=lambda r: r.release)
+    t0 = ordered[0].release
+    prefill_reqs = [r.req_id for r in ordered if r.kind == "prefill"]
+    buckets: dict[int, list[float]] = {}
+    for rid in prefill_reqs:
+        arrival = _snap(result.workload.requests[rid].arrival - t0)
+        buckets.setdefault(int(arrival // bucket_s), []).append(
+            float(result.request.ttft[rid])
+        )
+    curve: dict[str, list[float]] = {"t": [], "p50": [], "p99": [], "count": []}
+    for idx in sorted(buckets):
+        vals = np.asarray(buckets[idx])
+        curve["t"].append(idx * bucket_s)
+        curve["p50"].append(float(np.percentile(vals, 50.0)))
+        curve["p99"].append(float(np.percentile(vals, 99.0)))
+        curve["count"].append(int(vals.size))
+    return curve
 
 
 # ---------------------------------------------------------------------------

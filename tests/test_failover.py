@@ -1,0 +1,523 @@
+"""PR-7 fail-stop failover: events, exactly-once retry, silence watchdog,
+survivor-mask LPT, control-plane failover, and the end-to-end drill."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.lpt import LptState, lpt_schedule
+from repro.core.theorems import theorem2_optimal_time
+from repro.core.traffic import serve_workload, uniform_workload
+from repro.netsim import (
+    ChunkJob,
+    FailStopEvent,
+    FaultSpec,
+    RailTopology,
+    RetryConfig,
+    run_streaming_collective,
+)
+from repro.netsim.balancers import MinRttPolicy, RepsPolicy
+from repro.runtime.failover import (
+    degraded_alive_matrix,
+    degraded_theorem2_bound,
+    run_failover_drill,
+)
+from repro.sched.feedback import DeadRailDetector
+from repro.sched.online import GatingFeedbackHook, PlanCache
+from repro.sched.serving import run_serving, ttft_recovery_curve
+
+
+M, N = 3, 4
+BPP = 256 * 2**10
+CHUNK = 64 * 2**10
+
+
+def _stream(rounds=1, gap=0.0):
+    tm = uniform_workload(M, N, bytes_per_pair=BPP)
+    return [(i * gap, tm) for i in range(rounds)], tm
+
+
+# ---------------------------------------------------------------------------
+# FailStopEvent / FaultSpec surface
+# ---------------------------------------------------------------------------
+
+
+class TestFailStopSpec:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FailStopEvent("rail", 1.0)  # rail kind needs a rail
+        with pytest.raises(ValueError):
+            FailStopEvent("nic", 1.0, rail=0)  # nic needs a domain too
+        with pytest.raises(ValueError):
+            FailStopEvent("node", 1.0)  # node needs a domain
+        with pytest.raises(ValueError):
+            FailStopEvent("rail", 1.0, rail=0, t_repair=0.5)  # repair < fail
+        with pytest.raises(ValueError):
+            FailStopEvent("gamma-ray", 1.0, rail=0)
+
+    def test_links_enumeration(self):
+        rail = FailStopEvent("rail", 1.0, rail=1).links(2, 3)
+        assert set(rail) == {"up:0:1", "down:0:1", "up:1:1", "down:1:1"}
+        nic = FailStopEvent("nic", 1.0, rail=2, domain=1).links(2, 3)
+        assert set(nic) == {"up:1:2", "down:1:2"}
+        node = FailStopEvent("node", 1.0, domain=0).links(2, 3)
+        assert set(node) == {f"{k}:0:{r}" for k in ("up", "down") for r in range(3)}
+
+    def test_spec_is_static_accounting(self):
+        assert FaultSpec().is_static
+        assert not FaultSpec(
+            failures=(FailStopEvent("rail", 1.0, rail=0),)
+        ).is_static
+
+    def test_retry_backoff_caps(self):
+        r = RetryConfig(rto=1e-3, backoff=2.0, max_exponent=3)
+        assert r.delay(1) == 1e-3
+        assert r.delay(3) == 4e-3
+        assert r.delay(10) == r.delay(4) == 8e-3  # exponent capped
+
+
+# ---------------------------------------------------------------------------
+# Static parity: no fail-stop events configured -> bit-exact dynamics
+# ---------------------------------------------------------------------------
+
+
+class TestBitExactWithoutFailures:
+    def test_far_future_failure_is_bitexact_with_static(self):
+        """The dynamic loop with a never-reached fail-stop event replays
+        the static engine's exact event sequence (chunk-level parity)."""
+        stream, _ = _stream()
+        base = run_streaming_collective(stream, "rails-online", chunk_bytes=CHUNK)
+        spec = FaultSpec(
+            failures=(FailStopEvent("rail", 1e9, rail=0),),
+            retry=RetryConfig(),
+        )
+        dyn = run_streaming_collective(
+            stream, "rails-online", chunk_bytes=CHUNK, fault_spec=spec
+        )
+        assert dyn.metrics.makespan == base.metrics.makespan
+        for a, b in zip(base.sim.jobs, dyn.sim.jobs):
+            assert a.finish_time == b.finish_time
+            assert a.path == b.path
+        d = dyn.sim.dynamics
+        assert d["fail_strands"] == 0 and d["failovers"] == 0
+
+    def test_reactive_policies_bitexact_without_failures(self):
+        """MinRtt/Reps dead-path guards change nothing on healthy fabrics
+        (finite-estimate arithmetic is the historical one)."""
+        stream, _ = _stream()
+        for pol in ("minrtt", "reps"):
+            base = run_streaming_collective(stream, pol, chunk_bytes=CHUNK)
+            spec = FaultSpec(failures=(FailStopEvent("rail", 1e9, rail=0),))
+            dyn = run_streaming_collective(
+                stream, pol, chunk_bytes=CHUNK, fault_spec=spec
+            )
+            assert dyn.metrics.makespan == base.metrics.makespan
+
+
+# ---------------------------------------------------------------------------
+# Exactly-once delivery under fail-stop
+# ---------------------------------------------------------------------------
+
+
+class TestExactlyOnce:
+    def _cut(self, kind, policy="rails-online", t_repair=None, **kw):
+        tm = uniform_workload(M, N, bytes_per_pair=BPP)
+        t_half = 0.5 * theorem2_optimal_time(tm.d2, N, 50e9)
+        ev = FailStopEvent(kind, t_half, t_repair=t_repair, **kw)
+        spec = FaultSpec(
+            failures=(ev,), retry=RetryConfig(rto=t_half / 8, max_retries=50)
+        )
+        res = run_streaming_collective(
+            [(0.0, tm)], policy, chunk_bytes=CHUNK, fault_spec=spec
+        )
+        return res, t_half
+
+    def test_rail_down_redelivers_every_chunk_once(self):
+        res, t_fail = self._cut("rail", rail=1)
+        d = res.sim.dynamics
+        assert d["delivered_chunks"] == len(res.sim.jobs)
+        assert d["fail_strands"] > 0 and d["failovers"] > 0
+        assert set(d["dead_links"]) == {
+            f"{k}:{dom}:1" for k in ("up", "down") for dom in range(M)
+        }
+        # Chunks that finish after the cut must have failed over: their
+        # final path cannot ride a lane of the dead rail. (Pre-cut
+        # deliveries on rail 1 are fine — they completed.)
+        dead = {f"{k}:{dom}:1" for k in ("up", "down") for dom in range(M)}
+        late = [j for j in res.sim.jobs if j.finish_time > t_fail]
+        assert late, "failure landed after the collective finished"
+        for job in late:
+            assert not dead.intersection(job.path)
+
+    def test_nic_down_with_repair_recovers(self):
+        res, _ = self._cut("nic", rail=0, domain=1, t_repair=1.0)
+        d = res.sim.dynamics
+        assert d["delivered_chunks"] == len(res.sim.jobs)
+        assert d["dead_links"] == []  # repair landed before the run ended
+
+    def test_permanent_node_down_is_unrecoverable(self):
+        tm = uniform_workload(M, N, bytes_per_pair=BPP)
+        t_half = 0.5 * theorem2_optimal_time(tm.d2, N, 50e9)
+        spec = FaultSpec(
+            failures=(FailStopEvent("node", t_half, domain=0),),
+            retry=RetryConfig(rto=t_half / 8, max_retries=6),
+        )
+        with pytest.raises(RuntimeError, match="unrecoverable"):
+            run_streaming_collective(
+                [(0.0, tm)], "rails-online", chunk_bytes=CHUNK, fault_spec=spec
+            )
+
+    def test_reactive_policies_survive_rail_down(self):
+        for pol in ("minrtt", "reps", "plb"):
+            res, _ = self._cut("rail", policy=pol, rail=2)
+            d = res.sim.dynamics
+            assert d["delivered_chunks"] == len(res.sim.jobs)
+
+
+# ---------------------------------------------------------------------------
+# Silence watchdog
+# ---------------------------------------------------------------------------
+
+
+class TestDeadRailDetector:
+    def _beat_all_but(self, det, silent, t):
+        for r in range(N):
+            if r != silent:
+                det.record_service(f"up:0:{r}", t - 1e-6, t, None)
+
+    def test_silence_detection_and_survivor_mask(self):
+        det = DeadRailDetector(N, deadline=1.0, suspect_after=0.4)
+        self._beat_all_but(det, silent=None, t=0.1)
+        assert det.sweep(0.1) == []
+        self._beat_all_but(det, silent=1, t=0.6)
+        det.sweep(0.6)
+        assert det.state(1).name == "SUSPECT"
+        self._beat_all_but(det, silent=1, t=1.2)
+        assert det.sweep(1.2) == [1]
+        assert det.dead_rails() == [1]
+        assert det.survivor_mask().tolist() == [True, False, True, True]
+        assert det.time_to_detect(1, t_fail=0.1) == pytest.approx(1.1)
+
+    def test_activity_clock_ignores_idle_gaps(self):
+        """A fabric-wide idle gap (no services anywhere) must not fail
+        anyone: ages run on the activity clock, not wall time."""
+        det = DeadRailDetector(N, deadline=1.0)
+        self._beat_all_but(det, silent=None, t=0.1)
+        # Hours of wall-clock idleness later, nothing has been observed.
+        assert det.sweep(3600.0) == []
+        assert det.dead_rails() == []
+
+    def test_observed_service_revives_failed_rail(self):
+        det = DeadRailDetector(N, deadline=0.5)
+        self._beat_all_but(det, silent=1, t=0.1)
+        self._beat_all_but(det, silent=1, t=0.7)
+        assert det.sweep(0.7) == [1]
+        gen = det.registry.generation
+        det.record_service("down:2:1", 0.9, 1.0, None)  # repair landed
+        assert det.dead_rails() == []
+        assert det.registry.generation == gen + 1
+        assert det.recovered_at[1] == 1.0
+        assert det.survivor_mask().all()
+
+    def test_spine_links_are_not_heartbeats(self):
+        det = DeadRailDetector(N, deadline=1.0)
+        det.record_service("l2s:0:0", 0.0, 5.0, None)
+        assert det.activity == 0.0  # spine hops say nothing about lanes
+
+
+# ---------------------------------------------------------------------------
+# Survivor-mask LPT
+# ---------------------------------------------------------------------------
+
+
+class TestLptRailMask:
+    def test_masked_lpt_avoids_dead_rails(self):
+        w = np.random.default_rng(0).exponential(1.0, 64)
+        mask = np.array([True, False, True, True])
+        res = lpt_schedule(w, 4, rail_mask=mask)
+        assert not np.any(res.assignment == 1)
+        assert res.loads[1] == 0.0
+        # Equals the compacted-problem LPT mapped back to survivor ids.
+        sub = lpt_schedule(w, 3)
+        alive = np.flatnonzero(mask)
+        np.testing.assert_array_equal(res.assignment, alive[sub.assignment])
+
+    def test_full_mask_is_identity(self):
+        w = np.random.default_rng(1).exponential(1.0, 64)
+        a = lpt_schedule(w, 4)
+        b = lpt_schedule(w, 4, rail_mask=np.ones(4, dtype=bool))
+        np.testing.assert_array_equal(a.assignment, b.assignment)
+        assert a.mse == b.mse
+
+    def test_all_dead_raises(self):
+        with pytest.raises(ValueError, match="no rail alive"):
+            lpt_schedule(np.ones(4), 4, rail_mask=np.zeros(4, dtype=bool))
+
+    def test_state_assign_freezes_dead_loads(self):
+        state = LptState(4)
+        state.assign(np.ones(8))
+        frozen = state.loads[2]
+        mask = np.array([True, True, False, True])
+        res = state.assign(np.ones(9), rail_mask=mask)
+        assert state.loads[2] == frozen  # dead rail gained nothing
+        assert not np.any(res.assignment == 2)
+
+
+# ---------------------------------------------------------------------------
+# Dead-path guards in reactive policies
+# ---------------------------------------------------------------------------
+
+
+class _FakeEngine:
+    """path_delay stub: inf on paths crossing `dead`, else len(path)."""
+
+    def __init__(self, dead):
+        self.dead = dead
+
+    def path_delay(self, path, src_domain):
+        if any(link in self.dead for link in path):
+            return math.inf
+        return float(len(path))
+
+
+class TestReactiveDeadPathGuards:
+    def _job(self):
+        return ChunkJob(
+            chunk_id=0, flow_id=7, src_domain=0, src_gpu=0,
+            dst_domain=1, dst_gpu=0, size=1.0,
+        )
+
+    def test_minrtt_avoids_infinite_subflows(self):
+        topo = RailTopology(M, N)
+        pol = MinRttPolicy(topo, seed=0)
+        eng = _FakeEngine({f"up:0:{r}" for r in range(N - 1)})
+        path = pol.choose_path(eng, self._job())
+        assert path[0] == f"up:0:{N - 1}"  # the one finite subflow
+
+    def test_minrtt_all_dead_still_returns_a_path(self):
+        topo = RailTopology(M, N)
+        pol = MinRttPolicy(topo, seed=0)
+        eng = _FakeEngine({f"up:0:{r}" for r in range(N)})
+        assert pol.choose_path(eng, self._job()) is not None
+
+    def test_reps_excludes_dead_rails_from_pool(self):
+        topo = RailTopology(M, N)
+        pol = RepsPolicy(topo, seed=3)
+        eng = _FakeEngine({"up:0:0"})
+        for _ in range(32):
+            path = pol.choose_path(eng, self._job())
+            assert path[0] != "up:0:0"
+
+
+# ---------------------------------------------------------------------------
+# Control-plane failover: plan cache + survivor planning + evacuation
+# ---------------------------------------------------------------------------
+
+
+class TestControlPlaneFailover:
+    def test_plan_cache_clear(self):
+        c = PlanCache(capacity=4)
+        key = PlanCache.digest(np.arange(3))
+        c.put(key, "plan")
+        assert c.get(key) == "plan"
+        c.clear()
+        assert c.get(key) is None
+        assert c.hits == 1 and c.misses == 1  # counters survive
+
+    def _hook(self):
+        return GatingFeedbackHook(M, N, bytes_per_token=1024.0)
+
+    def test_on_rail_failure_replans_over_survivors(self):
+        hook = self._hook()
+        counts = np.full(2 * M, 100.0)
+        pre = hook.on_step(counts)
+        assert pre["alive_rails"] == N
+        hook.on_rail_failure([1])
+        post = hook.on_step(counts)
+        assert post["alive_rails"] == N - 1
+        assert not post["plan_cache_hit"]  # cache flushed + new key
+        # Degraded Theorem-2 bound is the N-1 scaling of the healthy one.
+        assert post["opt_time_s"] == pytest.approx(
+            pre["opt_time_s"] * N / (N - 1)
+        )
+
+    def test_on_rail_repair_restores_full_fabric(self):
+        hook = self._hook()
+        hook.on_rail_failure([0, 2])
+        assert hook.survivor_mask.tolist() == [False, True, False, True]
+        hook.on_rail_repair([0, 2])
+        assert hook.survivor_mask.all()
+
+    def test_on_rail_failure_validation(self):
+        hook = self._hook()
+        with pytest.raises(ValueError, match="out of range"):
+            hook.on_rail_failure([N])
+        with pytest.raises(ValueError, match="no rail alive"):
+            hook.on_rail_failure(range(N))
+
+    def test_hook_without_failures_is_bitexact(self):
+        counts = np.full(2 * M, 100.0)
+        plans = [h.on_step(counts) for h in (self._hook(), self._hook())]
+        assert plans[0] == plans[1]
+
+
+class TestEvacuation:
+    def _controller(self, weight_bytes=2**20, capacity=None):
+        from repro.placement import OnlinePlacementController, Placement
+
+        return OnlinePlacementController(
+            Placement.round_robin(8, M, weight_bytes),
+            num_rails=N,
+            bytes_per_token=1024.0,
+            capacity=capacity,
+        )
+
+    def test_evacuate_moves_every_victim_off_failed_shards(self):
+        ctl = self._controller()
+        dec = ctl.evacuate([0])
+        assert dec.migrated
+        assert not np.any(dec.placement.expert_shard == 0)
+        # Round-robin put ceil(8/3)=3 experts on shard 0, 1MiB each.
+        assert dec.migration_bytes == 3 * 2**20
+        assert ctl.total_migration_bytes == dec.migration_bytes
+
+    def test_evacuation_flows_source_from_survivors_only(self):
+        ctl = self._controller()
+        dec = ctl.evacuate([0])
+        mig = dec.migration_d2
+        assert mig[0].sum() == 0.0  # the dead shard cannot send
+        assert mig[:, 0].sum() == 0.0  # nothing lands on it either
+        assert mig.sum() == pytest.approx(dec.migration_bytes)
+
+    def test_evacuate_respects_capacity(self):
+        with pytest.raises(ValueError, match="capacity"):
+            self._controller(capacity=3).evacuate([0])
+
+    def test_evacuate_balances_by_demand(self):
+        ctl = self._controller()
+        counts = np.zeros(8)
+        counts[0] = 1000.0  # expert 0 (on shard 0) is hot
+        dec = ctl.evacuate([0], counts=counts)
+        loads = np.zeros(M)
+        d2 = dec.placement.counts_d2(counts)
+        np.add.at(loads, dec.placement.expert_shard, counts)
+        assert not np.any(dec.placement.expert_shard == 0)
+        # The hot expert went to one shard, the cold ones elsewhere.
+        hot_shard = dec.placement.expert_shard[0]
+        cold = [e for e in (3, 6) if dec.placement.expert_shard[e] == hot_shard]
+        assert len(cold) <= 1
+
+    def test_no_victims_is_a_noop(self):
+        ctl = self._controller()
+        before = ctl.placement.expert_shard.copy()
+        dec = ctl.evacuate([])
+        assert not dec.migrated and dec.migration_bytes == 0.0
+        np.testing.assert_array_equal(ctl.placement.expert_shard, before)
+
+
+# ---------------------------------------------------------------------------
+# Serving-path recovery
+# ---------------------------------------------------------------------------
+
+
+class TestServingRecovery:
+    def _workload(self):
+        return serve_workload(
+            M, N, num_requests=12, mean_gap=4e-4, prefill_tokens=256,
+            decode_rounds=2, decode_gap=1e-4, seed=5,
+        )
+
+    def test_mid_trace_rail_down_recovery_curve(self):
+        wl = self._workload()
+        spec = FaultSpec(
+            failures=(FailStopEvent("rail", 1e-3, rail=0, t_repair=3e-3),),
+            retry=RetryConfig(rto=1e-4),
+        )
+        det = DeadRailDetector(N, deadline=4e-4)
+        res = run_serving(
+            wl, "rails-online", chunk_bytes=32 * 2**10,
+            fault_spec=spec, detector=det,
+        )
+        d = res.streaming.sim.dynamics
+        assert d["delivered_chunks"] == len(res.streaming.sim.jobs)
+        curve = ttft_recovery_curve(res, bucket_s=5e-4)
+        assert set(curve) == {"t", "p50", "p99", "count"}
+        assert sum(curve["count"]) == len(wl.requests)
+        assert all(p99 >= p50 for p50, p99 in zip(curve["p50"], curve["p99"]))
+
+    def test_recovery_curve_validation(self):
+        wl = self._workload()
+        res = run_serving(wl, "rails-online", chunk_bytes=32 * 2**10)
+        with pytest.raises(ValueError, match="bucket_s"):
+            ttft_recovery_curve(res, bucket_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Degraded bound + the end-to-end drill (ISSUE acceptance)
+# ---------------------------------------------------------------------------
+
+
+class TestDegradedBound:
+    def test_rail_down_scales_bound_by_n_over_k(self):
+        tm = uniform_workload(4, 4, bytes_per_pair=BPP)
+        healthy = theorem2_optimal_time(tm.d2, 4, 50e9)
+        ev = FailStopEvent("rail", 0.0, rail=0)
+        alive = degraded_alive_matrix(4, 4, ev)
+        assert degraded_theorem2_bound(tm.d2, alive, 50e9) == pytest.approx(
+            healthy * 4 / 3
+        )
+
+    def test_nic_down_degrades_only_its_domain(self):
+        tm = uniform_workload(4, 4, bytes_per_pair=BPP)
+        alive = degraded_alive_matrix(4, 4, FailStopEvent("nic", 0.0, rail=1, domain=2))
+        assert alive.sum() == 15
+        bound = degraded_theorem2_bound(tm.d2, alive, 50e9)
+        assert bound == pytest.approx(
+            theorem2_optimal_time(tm.d2, 4, 50e9) * 4 / 3
+        )
+
+    def test_node_down_is_a_partition(self):
+        tm = uniform_workload(4, 4, bytes_per_pair=BPP)
+        alive = degraded_alive_matrix(4, 4, FailStopEvent("node", 0.0, domain=1))
+        assert degraded_theorem2_bound(tm.d2, alive, 50e9) == math.inf
+
+
+class TestFailoverDrill:
+    def test_rail_drill_meets_acceptance(self):
+        """ISSUE acceptance: detection within the configured silence
+        window, exactly-once redelivery, steady degraded CCT within 10%
+        of the survivor-recomputed Theorem-2 bound (relative to the
+        engine's healthy bound-tracking factor)."""
+        rep = run_failover_drill(fail_kind="rail", fail_rail=1)
+        assert rep.time_to_detect is not None
+        assert rep.time_to_detect <= 2.0 * rep.deadline
+        assert rep.exactly_once
+        assert rep.strands > 0 and rep.failovers > 0
+        assert rep.survivor_mask == [True, False, True, True]
+        assert rep.plan_alive_rails == 3
+        assert rep.plan_cache_cleared
+        assert 0.90 <= rep.bound_tracking_ratio <= 1.10
+        assert rep.supervisor["recovered"]
+
+    def test_two_rail_drill(self):
+        rep = run_failover_drill(fail_rail=(1, 3))
+        assert rep.exactly_once
+        assert rep.survivor_mask == [True, False, True, False]
+        assert rep.plan_alive_rails == 2
+        assert 0.85 <= rep.bound_tracking_ratio <= 1.15
+
+    def test_node_drill_evacuates_and_remeshes(self):
+        """Node loss: repair-gated data plane plus the evacuation +
+        elastic-re-mesh control-plane legs (remesh after node loss)."""
+        rep = run_failover_drill(fail_kind="node")
+        assert rep.exactly_once
+        assert rep.evacuated_experts > 0
+        assert rep.evacuation_bytes > 0.0
+        assert rep.elastic is not None and rep.elastic.feasible
+        assert rep.elastic.new_devices == rep.num_domains - 1
+        assert rep.supervisor["recovered"]
+
+    def test_fail_round_validation(self):
+        with pytest.raises(ValueError, match="fail_round"):
+            run_failover_drill(rounds=3, fail_round=2)

@@ -103,3 +103,57 @@ def test_straggler_detector_and_speculation():
     assert det.is_straggler(10.0)
     lat = speculative_dispatch({0: 1.0, 1: 50.0}, det, backup_latency=1.0)
     assert lat[1] < 50.0  # backup won
+
+
+def test_supervisor_clock_never_rewinds():
+    """Regression: the supervisor's simulated clock used to be recomputed
+    as ``clock + step * step_time``, so a rollback (step jumps backwards)
+    rewound time and left future-stamped heartbeats masking real silence.
+    Every beat the registry sees must carry a non-decreasing timestamp."""
+    beat_times = []
+
+    class SpyRegistry(HeartbeatRegistry):
+        def beat(self, node_id, now):
+            beat_times.append(now)
+            super().beat(node_id, now)
+
+    store = {}
+    reg = SpyRegistry(4, deadline=5.0, suspect_after=2.0)
+    sup = TrainingSupervisor(
+        reg,
+        save_fn=lambda s, st: store.update({s: st}),
+        restore_fn=lambda: (store[max(store)], max(store)),
+        checkpoint_every=5,
+    )
+    fired = []
+
+    def inj(step):
+        if step == 7 and not fired:
+            fired.append(step)
+            return 1
+        return None
+
+    _, step = sup.run(0, lambda st, s: st + s, steps=12, failure_injector=inj)
+    assert step == 12 and sup.restarts == 1
+    assert beat_times == sorted(beat_times)
+    # And the rollback really did replay: beats span both passes over step 5..7.
+    assert len(beat_times) > 12 * 4
+
+
+def test_elastic_shrink_after_node_loss():
+    """Losing one node out of a pure-DP mesh: new_data shrinks by one and
+    the rescaled batch stays divisible by both the alignment multiple and
+    the new data-parallel degree."""
+    plan = plan_remesh(old_data=4, old_model=1, new_devices=3)
+    assert plan.feasible and plan.new_data == 3 and plan.new_model == 1
+    assert plan.batch_scale == 0.75
+    batch = scale_batch(256, plan, multiple=8)
+    assert batch % 8 == 0 and batch % plan.new_data == 0
+    assert batch <= 256  # shrink never grows the batch past the original
+
+
+def test_elastic_infeasible_min_model():
+    plan = plan_remesh(old_data=2, old_model=4, new_devices=5, min_model=2)
+    assert not plan.feasible
+    assert plan.new_data == 0 and plan.batch_scale == 0.0
+    assert "model>=2" in plan.reason
