@@ -557,6 +557,80 @@ def bench_serving() -> None:
             )
 
 
+def bench_serving_slo() -> None:
+    """SLO-attainment grid for the serving control plane.
+
+    Offered load (``mean_gap``) × fabric ({clean, one-dead-rail}) ×
+    control arm ({no-control, admission, admission+brownout}), every cell
+    one seeded request stream through the epoch-windowed
+    :func:`repro.serve.gateway.run_gateway` vector loop (full mode sweeps
+    10⁴ requests per cell — the feedback-at-scale regime the windowed
+    loop exists for). Scored shed-aware: goodput = served requests whose
+    TTFT met the SLO, per second of trace. The per-cell ``ordering`` row
+    (structured key ``bench=slo_g<gap>_<fabric>``) tracks the
+    controlled-over-uncontrolled goodput ratio — the overload-robustness
+    headline — via ``perf_report.py --slo``. The fabric is a fixed 4×4
+    (the control loop, not fabric scale, is under test); the dead rail is
+    a 2 %-speed crawl, the vector loop's fail-stop proxy.
+    """
+    from repro.core.traffic import serve_workload
+    from repro.sched.control import (
+        AdmissionConfig,
+        BrownoutConfig,
+        ControlConfig,
+    )
+    from repro.serve.gateway import run_gateway
+
+    m, n = 4, 4
+    slo = 0.002
+    num_req = 300 if W.QUICK else 10_000
+    gaps = (2e-4, 5e-5) if W.QUICK else (2e-4, 1e-4, 5e-5)
+    dead = np.ones(n)
+    dead[-1] = 0.02
+    fabrics = {"clean": None, "dead1": dead}
+    arms = {
+        "nocontrol": lambda: None,
+        "admission": lambda: ControlConfig(
+            slo_s=slo, admission=AdmissionConfig(rate_rps=4000.0)
+        ),
+        "admission_brownout": lambda: ControlConfig(
+            slo_s=slo,
+            admission=AdmissionConfig(rate_rps=4000.0),
+            brownout=BrownoutConfig(),
+        ),
+    }
+    for gap in gaps:
+        wl = serve_workload(m, n, num_requests=num_req, mean_gap=gap, seed=12)
+        for fab, speeds in fabrics.items():
+            cell = f"slo_g{gap:g}_{fab}"
+            goodput, us_tot = {}, 0.0
+            for arm, make_control in arms.items():
+                res, us = _timed(
+                    lambda arm=arm, make_control=make_control: run_gateway(
+                        wl, "rails-online", control=make_control(),
+                        rail_speeds=speeds, backend="vector", slo_s=slo,
+                    )
+                )
+                s = res.slo
+                goodput[arm] = s["goodput_rps"]
+                us_tot += us
+                _emit(
+                    f"{cell}_{arm}", us,
+                    f"goodput={s['goodput_rps']:.1f}rps"
+                    f"_shed={s['shed_rate']:.3f}"
+                    f"_att={s['slo_attainment']:.3f}"
+                    f"_brownout_w={res.brownout_windows}",
+                )
+            base = max(goodput["nocontrol"], 1e-9)
+            _emit(
+                f"{cell}_ordering", us_tot,
+                f"admission={goodput['admission'] / base:.2f}x"
+                f"_brownout={goodput['admission_brownout'] / base:.2f}"
+                "x_nocontrol_goodput",
+                bench=cell, backend="vector",
+            )
+
+
 def bench_placement() -> None:
     """Placement × spraying grid: drift rate × placement mode (ISSUE 6).
 
@@ -772,6 +846,7 @@ BENCHES = {
     "online_window_sweep": bench_online_window_sweep,
     "fault_sweep": bench_fault_sweep,
     "serving": bench_serving,
+    "serving_slo": bench_serving_slo,
     "placement": bench_placement,
     "recovery": bench_recovery,
 }

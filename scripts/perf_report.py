@@ -7,6 +7,7 @@ render the netsim benchmark trajectory across BENCH_netsim.json snapshots.
     PYTHONPATH=src python scripts/perf_report.py --serving BENCH_a.json ...
     PYTHONPATH=src python scripts/perf_report.py --placement BENCH_a.json ...
     PYTHONPATH=src python scripts/perf_report.py --recovery BENCH_a.json ...
+    PYTHONPATH=src python scripts/perf_report.py --slo BENCH_a.json ...
 
 ``--fault-sweep`` restricts the trajectory to the fault-sweep grid (rows
 whose bench key starts with ``fault_``): one row per (loss rate ×
@@ -30,6 +31,11 @@ starting with ``recov_``): one row per (failed-rail count × watchdog
 timeout) cell and policy, carrying time-to-detect / time-to-recover /
 bound-tracking ratio plus the reactive-over-rails degraded-CCT ordering
 and the serving rail-down p99-TTFT recovery leg.
+
+``--slo`` restricts it to the serving control-plane grid (bench keys
+starting with ``slo_``): one row per (offered load × fabric) cell,
+carrying the controlled-over-uncontrolled goodput ordering — the
+admission / brownout overload-robustness margin across snapshots.
 
 Netsim trajectory rows are keyed by **(bench, backend, size)** — not by
 bench name alone — so the event and vector measurements of one benchmark
@@ -149,6 +155,7 @@ if __name__ == "__main__":
         "--serving": "serve_",
         "--placement": "plc_",
         "--recovery": "recov_",
+        "--slo": "slo_",
     }
     selected = [f for f in flags if f in args]
     args = [a for a in args if a not in flags]

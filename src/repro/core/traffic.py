@@ -43,6 +43,7 @@ __all__ = [
     "bursty_release_times",
     "drifting_gating_stream",
     "drifting_expert_counts",
+    "rl_phase_counts",
     "ServeRequest",
     "ServeRound",
     "ServeWorkload",
@@ -591,6 +592,73 @@ def drifting_expert_counts(
         counts_rounds.append(tokens_per_round * np.outer(sender_w, popularity))
         log_pop = log_pop + rng.normal(0.0, drift, size=num_experts)
     return counts_rounds, default_expert_shard(num_experts, m)
+
+
+def rl_phase_counts(
+    num_shards: int,
+    num_experts: int,
+    num_rounds: int,
+    tokens_per_round: float,
+    rollout_len: int = 8,
+    train_len: int = 8,
+    rollout_alpha: float = 1.4,
+    train_alpha: float = 0.6,
+    drift: float = 0.05,
+    sender_alpha: float = 0.0,
+    seed: int = 0,
+    return_phases: bool = False,
+):
+    """RL-style rollout/train phase alternation (ReLibra, PAPERS.md).
+
+    RLHF-style training interleaves *rollout* (autoregressive generation —
+    gating follows the policy's decode distribution, typically peaky) with
+    *train* (optimizer steps over the collected batch — gating follows the
+    much flatter training distribution). The routing distribution therefore
+    **lurches** at every phase boundary instead of drifting smoothly — the
+    regime where routing-replay forecasts go stale instantly and a serving
+    control plane must absorb step changes in demand shape.
+
+    Each phase keeps its *own* persistent expert-popularity random walk:
+    within a phase, adjacent rounds drift gently (``drift`` per round, like
+    :func:`drifting_expert_counts`); at a boundary the generator switches
+    to the other phase's walk — two independently-shuffled Zipf profiles
+    (``rollout_alpha`` peaky, ``train_alpha`` flat) — so the count
+    distribution jumps. Emits ``(counts_rounds, expert_shard)`` in the
+    placement-native per-(shard, expert) form; ``return_phases=True``
+    appends the per-round phase labels (``"rollout"`` / ``"train"``).
+    """
+    if num_rounds < 1:
+        raise ValueError("need at least one round")
+    if rollout_len < 1 or train_len < 1:
+        raise ValueError("phase lengths must be >= 1")
+    m = num_shards
+    rng = np.random.default_rng(seed)
+    log_pop = {
+        "rollout": np.log(_zipf_weights(num_experts, rollout_alpha)),
+        "train": np.log(_zipf_weights(num_experts, train_alpha)),
+    }
+    for phase in ("rollout", "train"):
+        rng.shuffle(log_pop[phase])
+    if sender_alpha > 0:
+        sender_w = _zipf_weights(m, sender_alpha)
+        rng.shuffle(sender_w)
+    else:
+        sender_w = np.full(m, 1.0 / m)
+    counts_rounds: list[np.ndarray] = []
+    phases: list[str] = []
+    period = rollout_len + train_len
+    for r in range(num_rounds):
+        phase = "rollout" if (r % period) < rollout_len else "train"
+        lp = log_pop[phase]
+        popularity = np.exp(lp)
+        popularity /= popularity.sum()
+        counts_rounds.append(tokens_per_round * np.outer(sender_w, popularity))
+        phases.append(phase)
+        log_pop[phase] = lp + rng.normal(0.0, drift, size=num_experts)
+    shard = default_expert_shard(num_experts, m)
+    if return_phases:
+        return counts_rounds, shard, phases
+    return counts_rounds, shard
 
 
 # ---------------------------------------------------------------------------

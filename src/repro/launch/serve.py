@@ -12,11 +12,19 @@ release-timed all-to-all rounds through
 p99.9 per-token fabric latency those decode batches would pay on the
 chosen policy — optionally under a degraded fabric (``--sim-fault``).
 
+``--gateway`` runs the overload-control plane instead of the model: a
+synthetic request stream through :func:`repro.serve.gateway.run_gateway`
+on the simulated fabric (``--slo-ms``, ``--admission-rps``,
+``--brownout``, ``--gw-dead-rail``), reporting shed rate, SLO attainment
+and goodput. No model or accelerator is touched in this mode.
+
 Example:
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --reduced \
         --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
         --batch 2 --prompt-len 8 --gen 8 --sim-fabric --sim-fault degraded
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --gateway \
+        --gw-requests 2000 --admission-rps 500 --brownout --gw-dead-rail
 """
 
 from __future__ import annotations
@@ -83,6 +91,52 @@ def _run_sim_fabric(args, cfg, counts_per_step, releases) -> dict:
     return {"summary": s, "token_latency": res.token_latency}
 
 
+def _run_gateway_mode(args) -> dict:
+    """--gateway: the control plane on a synthetic stream, no model."""
+    from repro.core.traffic import serve_workload
+    from repro.sched.control import AdmissionConfig, BrownoutConfig, ControlConfig
+    from repro.serve.gateway import run_gateway
+
+    wl = serve_workload(
+        args.sim_domains,
+        args.sim_rails,
+        num_requests=args.gw_requests,
+        mean_gap=args.gw_mean_gap,
+        seed=args.seed,
+    )
+    control = ControlConfig(
+        slo_s=args.slo_ms * 1e-3,
+        admission=(
+            AdmissionConfig(rate_rps=args.admission_rps)
+            if args.admission_rps > 0
+            else AdmissionConfig()
+        ),
+        brownout=BrownoutConfig() if args.brownout else None,
+    )
+    fabric_schedule = None
+    if args.gw_dead_rail:
+        speeds = np.ones(args.sim_rails)
+        speeds[-1] = 0.02  # crawling rail: the vector loop's fail-stop proxy
+        fabric_schedule = [(0.0, speeds)]
+    res = run_gateway(
+        wl,
+        args.sim_policy,
+        control=control,
+        fabric_schedule=fabric_schedule,
+        backend="vector",
+    )
+    s = res.slo
+    print(
+        f"gateway [{args.sim_policy}, slo={args.slo_ms:.1f}ms, "
+        f"dead_rail={args.gw_dead_rail}]: offered {s['offered']} "
+        f"shed {s['shed']} ({s['shed_rate']:.1%}) "
+        f"slo_attainment {s['slo_attainment']:.1%} "
+        f"goodput {s['goodput_rps']:.1f} req/s "
+        f"brownout_windows {res.brownout_windows}"
+    )
+    return {"gateway": res.row(), "windows": len(res.windows)}
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -107,7 +161,26 @@ def main(argv=None) -> dict:
     ap.add_argument("--sim-fault", choices=("none", "loss", "degraded"),
                     default="none",
                     help="degraded-fabric preset for --sim-fabric")
+    ap.add_argument("--gateway", action="store_true",
+                    help="run the serving control plane on a synthetic "
+                    "request stream (no model); see --slo-ms/--admission-rps")
+    ap.add_argument("--gw-requests", type=int, default=1000,
+                    help="synthetic request count for --gateway")
+    ap.add_argument("--gw-mean-gap", type=float, default=2e-3,
+                    help="mean inter-arrival gap (s) for --gateway")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="TTFT SLO in milliseconds for --gateway")
+    ap.add_argument("--admission-rps", type=float, default=0.0,
+                    help="token-bucket admission rate (req/s) for "
+                    "--gateway; 0 = queue/p99 shedding only")
+    ap.add_argument("--brownout", action="store_true",
+                    help="enable graceful degradation for --gateway")
+    ap.add_argument("--gw-dead-rail", action="store_true",
+                    help="degrade the last rail to 2%% speed for --gateway")
     args = ap.parse_args(argv)
+
+    if args.gateway:
+        return _run_gateway_mode(args)
 
     cfg = get_config(args.arch)
     if args.reduced:

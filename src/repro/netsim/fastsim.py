@@ -630,6 +630,24 @@ def _exact_segment_completions(a_s, t_s, idle, seg_starts, seg_lens):
     return comp_s
 
 
+def _busy_clamped(arrival, ties, busy_of_link):
+    """Raise arrivals to the carried per-link busy-until, order-preserving.
+
+    Jobs whose arrivals collapse onto one busy-until instant must still be
+    served in their *true* arrival order (the engine queued them as they
+    came in), so the original ``(arrival, *ties)`` total order is folded
+    into a single rank tie key whenever the clamp binds. Returns the
+    original inputs untouched when it never does — the all-zeros-carry
+    path stays bit-identical to no carry at all.
+    """
+    clamped = np.maximum(arrival, busy_of_link)
+    if np.array_equal(clamped, arrival):
+        return arrival, ties, False
+    rank = _level_rank(arrival, ties)
+    zeros = np.zeros(arrival.size, dtype=np.int64)
+    return clamped, (rank, zeros, zeros), True
+
+
 def _fifo_level_scan(
     link, arrival, ties, service, need_tie=True, tie_is_perm=False
 ):
@@ -773,6 +791,10 @@ class ArraySimResult:
     round_finish: np.ndarray  # absolute completion per present round
     flow_release: np.ndarray  # earliest release per present flow
     round_release: np.ndarray  # earliest release per present round
+    # Per-link busy-until times (last service completion; carried input
+    # for idle links). Present only when the caller passed ``link_busy`` —
+    # the epoch-windowed serving loop chains windows through it.
+    link_last: np.ndarray | None = None
 
     @property
     def flow_sojourn(self) -> np.ndarray:
@@ -837,6 +859,7 @@ def simulate_chunk_arrays(
     hop_latency: float = 1e-6,
     flow_id: np.ndarray | None = None,
     round_id: np.ndarray | None = None,
+    link_busy: np.ndarray | None = None,
 ) -> ArraySimResult:
     """Exact FIFO dynamics of one assigned collective, no event loop.
 
@@ -845,9 +868,28 @@ def simulate_chunk_arrays(
     both rail-direct and spine families. ``flow_id``/``round_id`` (when
     given) must be non-decreasing in chunk order, which the builders
     guarantee; ``None`` treats every chunk as its own flow / one round.
+
+    ``link_busy`` is an optional ``(num_links,)`` busy-until carry from a
+    previous window: each job's arrival at a link is raised to that link's
+    carried busy-until before the scan. For the FIFO recurrence
+    ``c_i = max(a_i, c_{i-1}) + t_i`` with carried backlog ``B`` this is
+    value-exact — ``c_{i-1} >= B`` for every non-head job, so the clamp
+    only binds where ``max(a_0, B)`` would have. The result then reports
+    ``link_last`` (per-link last completion, carry-forward for idle
+    links), which the epoch-windowed serving loop feeds into the next
+    window. An all-zeros carry is bit-identical to ``None``.
     """
     f = size.size
     num_links = index.num_links
+    if link_busy is not None:
+        link_busy = np.asarray(link_busy, dtype=np.float64)
+        if link_busy.shape != (num_links,):
+            raise ValueError(
+                f"link_busy must be ({num_links},), got {link_busy.shape}"
+            )
+        link_last = link_busy.copy()
+    else:
+        link_last = None
     link_volume = np.zeros(num_links)
     finish = np.zeros(f)
     start0 = np.zeros(f)
@@ -869,10 +911,18 @@ def simulate_chunk_arrays(
                 # runs) — skip the gather/scatter round trip entirely. At
                 # the first hop the tie rank is the entry rank, a
                 # permutation by construction.
+                arr_lv, ties_lv, clamped = (
+                    (arrival, (tie_a, tie_b, tie_c), False)
+                    if link_busy is None
+                    else _busy_clamped(
+                        arrival, (tie_a, tie_b, tie_c), link_busy[links]
+                    )
+                )
                 service = size / index.rate[links]
                 comp, sv, na, nb, nc = _fifo_level_scan(
-                    links, arrival, (tie_a, tie_b, tie_c), service,
-                    need_tie=need_tie, tie_is_perm=(lv == 0),
+                    links, arr_lv, ties_lv, service,
+                    need_tie=need_tie,
+                    tie_is_perm=(lv == 0 and not clamped),
                 )
                 if lv == 0:
                     start0 = sv
@@ -883,16 +933,26 @@ def simulate_chunk_arrays(
                     tie_b = nb
                     tie_c = nc
                 link_volume += np.bincount(links, weights=size, minlength=num_links)
+                if link_last is not None:
+                    np.maximum.at(link_last, links, comp)
                 continue
             sel = np.flatnonzero(links >= 0)
             if sel.size == 0:
                 continue
             l_sel = links[sel]
             sizes_sel = size[sel]
+            arr_lv, ties_lv, _clamped = (
+                (arrival[sel], (tie_a[sel], tie_b[sel], tie_c[sel]), False)
+                if link_busy is None
+                else _busy_clamped(
+                    arrival[sel],
+                    (tie_a[sel], tie_b[sel], tie_c[sel]),
+                    link_busy[l_sel],
+                )
+            )
             service = sizes_sel / index.rate[l_sel]
             comp, sv, na, nb, nc = _fifo_level_scan(
-                l_sel, arrival[sel],
-                (tie_a[sel], tie_b[sel], tie_c[sel]), service,
+                l_sel, arr_lv, ties_lv, service,
                 need_tie=need_tie,
             )
             if lv == 0:
@@ -904,6 +964,8 @@ def simulate_chunk_arrays(
                 tie_b[sel] = nb
                 tie_c[sel] = nc
             link_volume += np.bincount(l_sel, weights=sizes_sel, minlength=num_links)
+            if link_last is not None:
+                np.maximum.at(link_last, l_sel, comp)
     if flow_id is None:
         flow_id = np.arange(f, dtype=np.int64)
     if round_id is None:
@@ -924,4 +986,5 @@ def simulate_chunk_arrays(
         round_finish=round_finish,
         flow_release=flow_release,
         round_release=round_release,
+        link_last=link_last,
     )

@@ -119,7 +119,13 @@ def compute_metrics(
         send_mse=send_mse,
         recv_mse=recv_mse,
         opt_time=opt_time,
-        opt_ratio=makespan / opt_time if opt_time > 0 else float("inf"),
+        # A zero-byte collective (e.g. every round fully shed, or all
+        # traffic intra-domain) is trivially optimal, not infinitely bad.
+        opt_ratio=(
+            makespan / opt_time
+            if opt_time > 0
+            else (1.0 if makespan == 0.0 else float("inf"))
+        ),
         goodput_bytes=goodput,
         wire_bytes=wire_bytes,
         wire_bus_bw=wire_bus_bw,

@@ -26,6 +26,11 @@ package layers that regime on the offline core without changing it:
   bursty / diurnal request streams lowered to prefill + decode rounds,
   scored by release-relative tails (p99/p99.9 TTFT, per-token sojourn)
   instead of makespan; ``repro.serve`` is the façade.
+* :mod:`~repro.sched.control` — overload-control primitives for the
+  serving gateway: token-bucket + queue-depth + p99-tracking admission
+  control, brownout (graceful degradation) hysteresis, the out-of-band
+  rail-probe monitor for the vector loop, and shed-aware SLO accounting.
+  ``repro.serve.gateway.run_gateway`` is the closed loop built on them.
 
 Entry points: ``netsim.simulate.run_streaming_collective`` (one streaming
 collective, any policy), ``sched.pipeline.run_pipeline`` (overlapped
@@ -34,6 +39,16 @@ Anchors: with every chunk released at t=0 and feedback disabled, the
 online path reproduces the offline one exactly (tests pin this down).
 """
 
+from .control import (
+    AdmissionConfig,
+    AdmissionController,
+    BrownoutConfig,
+    BrownoutController,
+    ControlConfig,
+    RailProbeMonitor,
+    TokenBucket,
+    slo_summary,
+)
 from .feedback import DeadRailDetector, RailHealthEstimator, speed_precharge
 from .online import (
     AdaptiveChunker,
@@ -57,16 +72,23 @@ from .telemetry import ServiceRecord, TraceRecorder
 
 __all__ = [
     "AdaptiveChunker",
+    "AdmissionConfig",
+    "AdmissionController",
+    "BrownoutConfig",
+    "BrownoutController",
+    "ControlConfig",
     "DeadRailDetector",
     "DecodeTraceResult",
     "GatingFeedbackHook",
     "PipelineResult",
     "PlanCache",
     "RailHealthEstimator",
+    "RailProbeMonitor",
     "RequestMetrics",
     "RoutingReplayState",
     "ServiceRecord",
     "ServingResult",
+    "TokenBucket",
     "TraceRecorder",
     "expert_counts_to_matrix",
     "online_greedy_schedule",
@@ -74,6 +96,7 @@ __all__ = [
     "run_pipeline",
     "run_serving",
     "simulate_decode_trace",
+    "slo_summary",
     "speed_precharge",
     "ttft_recovery_curve",
     "windowed_lpt_schedule",

@@ -1,0 +1,442 @@
+"""Serving control-plane primitives: admission, shedding, brownout.
+
+``run_serving`` replays a fixed request stream through a fixed policy —
+under overload or a rail cut, p99 TTFT blows past any SLO with nothing
+pushing back. This module supplies the *decisions* a production gateway
+makes, and :mod:`repro.serve.gateway` closes the loop by applying them
+per epoch window:
+
+* **Admission control** (:class:`AdmissionController`) — a token bucket
+  gates the arrival rate, a queue-depth limit bounds in-flight work, and
+  a p99-TTFT tracker sheds new requests while the observed tail exceeds
+  the SLO. Priority classes are structural: only *new prefills* pass
+  through the controller — decode rounds of already-admitted requests are
+  protected unconditionally (a half-served request that gets dropped
+  wasted everything spent on it; a never-started one wasted nothing).
+* **Graceful degradation** (:class:`BrownoutController`) — a two-state
+  machine (NORMAL ↔ BROWNOUT) with entry/exit hysteresis. Brownout is
+  entered on dead/masked rails or a sustained p99 overshoot; while
+  active the gateway tightens admission to survivor capacity, reduces
+  decode expert fan-out, and caps the decode batch — degrading quality
+  of service instead of collapsing it.
+* **Rail masking for the vector loop** (:class:`RailProbeMonitor`) —
+  out-of-band probes feed the EWMA
+  :class:`~repro.sched.feedback.RailHealthEstimator`; rails whose speed
+  estimate collapses are masked out of the planner (the survivor-mask
+  protocol of :class:`~repro.sched.feedback.DeadRailDetector`, whose
+  revive hysteresis this monitor mirrors). The event-loop gateway path
+  wires the real detector instead — silence is observable there.
+* **SLO accounting** (:func:`slo_summary`) — shed-aware goodput: shed
+  requests are excluded from latency percentiles and reported as
+  ``shed_rate``; *goodput* counts only served requests whose TTFT met the
+  SLO, per second of trace — the quantity SLO-attainment curves sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .feedback import RailHealthEstimator
+
+__all__ = [
+    "TokenBucket",
+    "AdmissionConfig",
+    "AdmissionController",
+    "BrownoutConfig",
+    "BrownoutController",
+    "ControlConfig",
+    "RailProbeMonitor",
+    "slo_summary",
+]
+
+
+class TokenBucket:
+    """Deterministic token bucket: ``rate`` tokens/s, ``burst`` capacity.
+
+    Starts full. :meth:`allow` refills by elapsed time × rate (monotone
+    timestamps required), then spends one token if available. Rate changes
+    (brownout tightening) apply from the *current* instant — accumulated
+    tokens are kept, so momentary tightening does not confiscate burst
+    credit already earned.
+    """
+
+    def __init__(self, rate: float, burst: float = 8.0):
+        if rate <= 0 or burst < 1:
+            raise ValueError("need rate > 0 and burst >= 1")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._last = 0.0
+
+    def allow(self, t: float) -> bool:
+        if t > self._last:
+            self.tokens = min(self.burst, self.tokens + (t - self._last) * self.rate)
+            self._last = t
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+    def set_rate(self, rate: float) -> None:
+        if rate <= 0:
+            raise ValueError("rate must be positive")
+        self.rate = float(rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Admission-control knobs (all gates optional; None disables one).
+
+    Attributes:
+      rate_rps: token-bucket refill rate (requests/s); None = no bucket.
+      burst: token-bucket capacity (requests).
+      queue_limit: max admitted requests in flight; None = unbounded.
+      shed_p99_factor: shed new prefills while the EWMA-tracked window
+        p99 TTFT exceeds ``factor × SLO``; None disables the tracker.
+      p99_alpha: EWMA weight for each window's observed p99.
+    """
+
+    rate_rps: float | None = None
+    burst: float = 8.0
+    queue_limit: int | None = None
+    shed_p99_factor: float | None = 1.0
+    p99_alpha: float = 0.5
+
+
+class AdmissionController:
+    """Arrival gate for *new requests* (prefill priority class).
+
+    Decode rounds never pass through here — the gateway protects them
+    structurally. Gates are checked cheapest-signal-first: queue depth
+    (instantaneous), tracked p99 (one EWMA read), then the token bucket
+    (consumed only when everything else admits, so shed requests do not
+    burn rate credit).
+    """
+
+    def __init__(self, cfg: AdmissionConfig, slo_s: float):
+        if slo_s <= 0:
+            raise ValueError("slo_s must be positive")
+        self.cfg = cfg
+        self.slo_s = float(slo_s)
+        self.bucket = (
+            TokenBucket(cfg.rate_rps, cfg.burst) if cfg.rate_rps is not None else None
+        )
+        self._rate_scale = 1.0
+        self.p99_est: float | None = None  # EWMA of window p99 TTFTs
+        self.admitted = 0
+        self.shed_by_reason: dict[str, int] = {}
+
+    def admit(self, arrival: float, inflight: int) -> tuple[bool, str]:
+        """Admit or shed one new request arriving at ``arrival``.
+
+        Returns ``(admitted, reason)`` with reason in ``{"admitted",
+        "queue", "p99", "bucket"}``.
+        """
+        cfg = self.cfg
+        if cfg.queue_limit is not None and inflight >= cfg.queue_limit:
+            return self._shed("queue")
+        if (
+            cfg.shed_p99_factor is not None
+            and self.p99_est is not None
+            and self.p99_est > cfg.shed_p99_factor * self.slo_s
+        ):
+            return self._shed("p99")
+        if self.bucket is not None and not self.bucket.allow(arrival):
+            return self._shed("bucket")
+        self.admitted += 1
+        return True, "admitted"
+
+    def _shed(self, reason: str) -> tuple[bool, str]:
+        self.shed_by_reason[reason] = self.shed_by_reason.get(reason, 0) + 1
+        return False, reason
+
+    def observe_window(self, p99_ttft: float | None) -> None:
+        """Fold one window's observed prefill-TTFT p99 into the tracker.
+
+        ``None`` (no prefills finished this window) leaves the estimate
+        untouched — absence of samples is not evidence of health.
+        """
+        if p99_ttft is None:
+            return
+        a = self.cfg.p99_alpha
+        self.p99_est = (
+            float(p99_ttft)
+            if self.p99_est is None
+            else a * float(p99_ttft) + (1 - a) * self.p99_est
+        )
+
+    def set_rate_scale(self, scale: float) -> None:
+        """Brownout tightening: effective bucket rate = base × scale."""
+        if self.bucket is None:
+            return
+        if scale <= 0:
+            raise ValueError("scale must be positive")
+        if scale != self._rate_scale:
+            base = self.bucket.rate / self._rate_scale
+            self.bucket.set_rate(base * scale)
+            self._rate_scale = scale
+
+    @property
+    def shed(self) -> int:
+        return sum(self.shed_by_reason.values())
+
+
+@dataclasses.dataclass(frozen=True)
+class BrownoutConfig:
+    """Graceful-degradation knobs.
+
+    Entry: immediately when any rail is masked/dead, or after
+    ``enter_windows`` consecutive windows with tracked p99 >
+    ``enter_p99_factor × SLO``. Exit: after ``exit_windows`` consecutive
+    windows with no masked rails and tracked p99 ≤ ``exit_p99_factor ×
+    SLO`` (entry and exit thresholds deliberately straddle the SLO —
+    that gap is the hysteresis band that prevents mode flapping).
+
+    While active the gateway (a) multiplies the admission rate by
+    ``survivor_fraction × admission_tighten``, (b) scales decode-round
+    traffic by ``fanout_keep`` (serving top-1 of top-2 experts moves half
+    the bytes), and (c) caps continuous decode batches at
+    ``decode_batch_cap`` merged rounds.
+    """
+
+    enter_p99_factor: float = 1.5
+    enter_windows: int = 2
+    exit_p99_factor: float = 0.8
+    exit_windows: int = 3
+    admission_tighten: float = 0.9
+    fanout_keep: float = 0.5
+    decode_batch_cap: int | None = 8
+
+    def __post_init__(self):
+        if not 0 < self.fanout_keep <= 1:
+            raise ValueError("fanout_keep must be in (0, 1]")
+        if not 0 < self.admission_tighten <= 1:
+            raise ValueError("admission_tighten must be in (0, 1]")
+        if self.enter_windows < 1 or self.exit_windows < 1:
+            raise ValueError("entry/exit window counts must be >= 1")
+
+
+class BrownoutController:
+    """NORMAL ↔ BROWNOUT state machine with entry/exit hysteresis."""
+
+    def __init__(self, cfg: BrownoutConfig):
+        self.cfg = cfg
+        self.active = False
+        self._enter_streak = 0
+        self._exit_streak = 0
+        self.transitions: list[tuple[float, str]] = []  # (t, "enter"|"exit")
+
+    def observe_window(
+        self,
+        t: float,
+        p99_est: float | None,
+        slo_s: float,
+        masked_rails: int,
+    ) -> bool:
+        """Advance the state machine at one window boundary; returns
+        whether brownout is active for the *next* window."""
+        cfg = self.cfg
+        overloaded = p99_est is not None and p99_est > cfg.enter_p99_factor * slo_s
+        if not self.active:
+            self._enter_streak = self._enter_streak + 1 if overloaded else 0
+            if masked_rails > 0 or self._enter_streak >= cfg.enter_windows:
+                self.active = True
+                self._enter_streak = 0
+                self._exit_streak = 0
+                self.transitions.append((t, "enter"))
+        else:
+            healthy = masked_rails == 0 and (
+                p99_est is None or p99_est <= cfg.exit_p99_factor * slo_s
+            )
+            self._exit_streak = self._exit_streak + 1 if healthy else 0
+            if self._exit_streak >= cfg.exit_windows:
+                self.active = False
+                self._exit_streak = 0
+                self.transitions.append((t, "exit"))
+        return self.active
+
+    def admission_scale(self, survivor_fraction: float) -> float:
+        """Admission-rate multiplier for the coming window."""
+        if not self.active:
+            return 1.0
+        return max(survivor_fraction, 1e-9) * self.cfg.admission_tighten
+
+    @property
+    def entries(self) -> list[float]:
+        return [t for t, kind in self.transitions if kind == "enter"]
+
+    @property
+    def exits(self) -> list[float]:
+        return [t for t, kind in self.transitions if kind == "exit"]
+
+
+class _ProbeJob:
+    """Minimal job stand-in for synthetic ``record_service`` observations."""
+
+    __slots__ = ("size",)
+
+    def __init__(self, size: float):
+        self.size = size
+
+
+class RailProbeMonitor:
+    """Out-of-band rail prober + survivor mask for the vector epoch loop.
+
+    The vector backend has no live service stream to observe, so the
+    gateway probes every rail once per window: each probe's measured
+    speed is folded into the EWMA
+    :class:`~repro.sched.feedback.RailHealthEstimator` through its normal
+    ``record_service`` observer interface (a ``probe_bytes`` transfer at
+    the rail's current rate), keeping one estimator implementation across
+    both loops. Rails whose EWMA speed collapses below ``dead_speed`` are
+    masked out of the planner; a masked rail is re-admitted only after
+    ``revive_windows`` *consecutive* windows with EWMA speed ≥
+    ``healthy_speed`` — the same revive hysteresis
+    :class:`~repro.sched.feedback.DeadRailDetector` applies to in-band
+    silence, so both detection paths flap-proof the plan the same way.
+
+    Duck-types the detector's control-plane surface (``sweep`` /
+    ``survivor_mask`` / ``dead_rails``) so it plugs into
+    ``OnlineRailSPolicy(detector=...)`` unchanged.
+    """
+
+    def __init__(
+        self,
+        health: RailHealthEstimator,
+        dead_speed: float = 0.2,
+        healthy_speed: float = 0.6,
+        revive_windows: int = 3,
+        probe_bytes: float = 1 * 2**20,
+    ):
+        if not 0 < dead_speed < healthy_speed <= 1.0:
+            raise ValueError("need 0 < dead_speed < healthy_speed <= 1")
+        if revive_windows < 1:
+            raise ValueError("revive_windows must be >= 1")
+        self.health = health
+        self.dead_speed = float(dead_speed)
+        self.healthy_speed = float(healthy_speed)
+        self.revive_windows = int(revive_windows)
+        self.probe_bytes = float(probe_bytes)
+        self._mask = np.ones(health.num_rails, dtype=bool)
+        self._revive_streak = np.zeros(health.num_rails, dtype=np.int64)
+        self.masked_at: dict[int, float] = {}
+        self.revived_at: dict[int, float] = {}
+
+    def observe(self, rail_speeds, t: float) -> None:
+        """Fold one probe round (true per-rail speeds at ``t``) into the
+        EWMA estimator, then update the survivor mask."""
+        speeds = np.asarray(rail_speeds, dtype=np.float64)
+        if speeds.shape != (self.health.num_rails,):
+            raise ValueError(
+                f"need ({self.health.num_rails},) speeds, got {speeds.shape}"
+            )
+        for j, s in enumerate(speeds.tolist()):
+            if s <= 0:
+                raise ValueError("probe speeds must be positive (vector loop)")
+            # A probe_bytes transfer at the rail's current rate; the
+            # estimator recovers rate = size/duration = s * nominal.
+            duration = self.probe_bytes / (s * self.health.nominal_rate)
+            self.health.record_service(
+                f"up:0:{j}", t - duration, t, _ProbeJob(self.probe_bytes)
+            )
+        est = self.health.speeds()
+        for j in range(est.size):
+            if self._mask[j]:
+                if est[j] <= self.dead_speed:
+                    self._mask[j] = False
+                    self._revive_streak[j] = 0
+                    self.masked_at[j] = t
+            else:
+                if est[j] >= self.healthy_speed:
+                    self._revive_streak[j] += 1
+                    if self._revive_streak[j] >= self.revive_windows:
+                        self._mask[j] = True
+                        self._revive_streak[j] = 0
+                        self.revived_at[j] = t
+                else:
+                    self._revive_streak[j] = 0
+
+    # -- detector-compatible control-plane surface ---------------------------
+
+    def sweep(self, now: float) -> list[int]:
+        """No-op (masking happens in :meth:`observe`); detector protocol."""
+        return []
+
+    def survivor_mask(self) -> np.ndarray:
+        return self._mask.copy()
+
+    def dead_rails(self) -> list[int]:
+        return [int(j) for j in np.flatnonzero(~self._mask)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlConfig:
+    """Everything the closed-loop gateway needs beyond the workload.
+
+    Attributes:
+      slo_s: the p99-TTFT SLO (seconds) goodput is scored against.
+      epoch_s: feedback window length — plan/react cadence of the loop.
+        None lets the gateway pick ~20 windows across the trace.
+      admission: admission gates; None admits everything.
+      brownout: degradation mode; None never degrades.
+      batch_quantum_s: continuous-batching quantum — decode rounds
+        releasing within one quantum merge into a shared all-to-all.
+        None disables merging.
+      dead_speed / healthy_speed / revive_windows / probe_bytes: the
+        :class:`RailProbeMonitor` knobs (vector loop).
+      feedback: fold EWMA speed estimates into the planner pre-charge.
+    """
+
+    slo_s: float = 0.05
+    epoch_s: float | None = None
+    admission: AdmissionConfig | None = None
+    brownout: BrownoutConfig | None = None
+    batch_quantum_s: float | None = None
+    dead_speed: float = 0.2
+    healthy_speed: float = 0.6
+    revive_windows: int = 3
+    probe_bytes: float = 1 * 2**20
+    feedback: bool = True
+
+    def __post_init__(self):
+        if self.slo_s <= 0:
+            raise ValueError("slo_s must be positive")
+        if self.epoch_s is not None and self.epoch_s <= 0:
+            raise ValueError("epoch_s must be positive")
+        if self.batch_quantum_s is not None and self.batch_quantum_s <= 0:
+            raise ValueError("batch_quantum_s must be positive")
+
+
+def slo_summary(
+    ttft: np.ndarray,
+    slo_s: float,
+    horizon_s: float,
+    offered: int,
+    shed: int,
+) -> dict:
+    """Shed-aware SLO accounting for one run.
+
+    ``ttft`` holds *served* requests only (shed requests are excluded
+    from every percentile by construction — they have no latency, they
+    have a rejection). Goodput counts served requests whose TTFT met the
+    SLO, per second of trace — the y-axis of an SLO-attainment curve.
+    Fully-shed runs are a valid outcome (0 served, goodput 0), not an
+    error.
+    """
+    ttft = np.asarray(ttft, dtype=np.float64)
+    served = int(ttft.size)
+    met = int((ttft <= slo_s).sum()) if served else 0
+    horizon = max(float(horizon_s), 0.0)
+    return {
+        "offered": int(offered),
+        "served": served,
+        "shed": int(shed),
+        "shed_rate": shed / offered if offered else 0.0,
+        "slo_met": met,
+        "slo_attainment": met / served if served else 0.0,
+        "offered_rps": offered / horizon if horizon > 0 else 0.0,
+        "served_rps": served / horizon if horizon > 0 else 0.0,
+        "goodput_rps": met / horizon if horizon > 0 else 0.0,
+    }

@@ -187,6 +187,15 @@ class DeadRailDetector:
     backed-off retries came back) is revived, bumping the registry
     generation — the same semantics a node replacement has.
 
+    **Revive hysteresis.** A flapping rail that squeezes one service
+    through every watchdog deadline would oscillate dead↔alive each
+    window, thrashing the plan cache and re-spraying onto a lane that is
+    about to vanish again. ``revive_hysteresis=K`` requires K consecutive
+    healthy observations — each within one ``deadline`` of activity of the
+    previous — before a FAILED rail is re-admitted; a gap longer than the
+    deadline resets the count. The default ``K=1`` preserves the original
+    revive-on-first-service behavior bit for bit.
+
     Plug it into the engine as an observer and :meth:`sweep` it from the
     control plane (the online policy sweeps at every assignment batch);
     :meth:`survivor_mask` is the ``(N,)`` bool mask windowed LPT plans
@@ -198,6 +207,7 @@ class DeadRailDetector:
         num_rails: int,
         deadline: float,
         suspect_after: float | None = None,
+        revive_hysteresis: int = 1,
     ):
         from repro.runtime.fault_tolerance import HeartbeatRegistry, NodeState
 
@@ -207,7 +217,11 @@ class DeadRailDetector:
             suspect_after = 0.5 * deadline
         if not 0.0 <= suspect_after <= deadline:
             raise ValueError("need 0 <= suspect_after <= deadline")
+        if revive_hysteresis < 1:
+            raise ValueError("revive_hysteresis must be >= 1")
         self.num_rails = int(num_rails)
+        self.deadline = float(deadline)
+        self.revive_hysteresis = int(revive_hysteresis)
         self._NodeState = NodeState
         self.registry = HeartbeatRegistry(
             self.num_rails, deadline=deadline, suspect_after=suspect_after
@@ -215,6 +229,9 @@ class DeadRailDetector:
         self.activity = 0.0  # newest observed service end, any rail
         self.detected_at: dict[int, float] = {}  # rail -> sweep wall time
         self.recovered_at: dict[int, float] = {}
+        # rail -> (consecutive healthy observations, last observation end);
+        # the pending-revive counter behind the hysteresis.
+        self._revive_pending: dict[int, tuple[int, float]] = {}
 
     # -- engine observer protocol -------------------------------------------
 
@@ -227,11 +244,21 @@ class DeadRailDetector:
             self.activity = end
         node = self.registry.nodes[r]
         if node.state is self._NodeState.FAILED:
-            # A dead rail serving again means the repair landed: revive
-            # (replacement-node semantics — generation bumps).
-            self.registry.revive(r, end)
-            self.recovered_at[r] = end
-            self.detected_at.pop(r, None)
+            # A dead rail serving again *may* mean the repair landed — but
+            # one beat per deadline is exactly what a flapping lane emits,
+            # so require revive_hysteresis consecutive observations, each
+            # within a deadline of the previous, before re-admitting.
+            count, last = self._revive_pending.get(r, (0, -np.inf))
+            count = count + 1 if end - last <= self.deadline else 1
+            if count >= self.revive_hysteresis:
+                # Repair confirmed: revive (replacement-node semantics —
+                # generation bumps).
+                self.registry.revive(r, end)
+                self.recovered_at[r] = end
+                self.detected_at.pop(r, None)
+                self._revive_pending.pop(r, None)
+            else:
+                self._revive_pending[r] = (count, end)
         elif end > node.last_beat:
             self.registry.beat(r, end)
 

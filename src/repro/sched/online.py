@@ -50,6 +50,8 @@ def windowed_lpt_schedule(
     window: int | None = None,
     source_ids: np.ndarray | None = None,
     initial_loads: np.ndarray | None = None,
+    extra_loads: np.ndarray | None = None,
+    rail_mask: np.ndarray | None = None,
 ) -> LptResult:
     """LPT over consecutive arrival windows with carried LoadState.
 
@@ -62,6 +64,12 @@ def windowed_lpt_schedule(
       source_ids: optional ``(F,)`` tie-break ids (Algorithm 2).
       initial_loads: optional ``(N,)`` starting LoadState — carried backlog,
         health pre-charge, or a routing replay seed.
+      extra_loads: optional ``(N,)`` phantom bias added for comparison but
+        not committed — the health pre-charge convention of
+        :meth:`repro.core.lpt.LptState.assign`.
+      rail_mask: optional ``(N,)`` bool survivor mask — the degraded N−k
+        regime; masked rails receive nothing (the mask the control plane /
+        :class:`~repro.sched.feedback.DeadRailDetector` derives).
 
     Returns an :class:`~repro.core.lpt.LptResult`; ``order`` is the global
     processing order actually used (windows in arrival order, LPT-sorted
@@ -86,6 +94,8 @@ def windowed_lpt_schedule(
         res = state.assign(
             weights[lo:hi],
             source_ids=None if source_ids is None else source_ids[lo:hi],
+            extra_loads=extra_loads,
+            rail_mask=rail_mask,
         )
         assignment[lo:hi] = res.assignment
         order_parts.append(res.order + lo)

@@ -55,6 +55,7 @@ __all__ = [
     "RequestMetrics",
     "ServingResult",
     "DecodeTraceResult",
+    "normalized_rounds",
     "run_serving",
     "ttft_recovery_curve",
     "expert_counts_to_matrix",
@@ -74,6 +75,24 @@ RELEASE_TICK = 1e-9
 def _snap(t: float) -> float:
     """Quantize a normalized (release-relative) time to the 1 ns grid."""
     return round(t / RELEASE_TICK) * RELEASE_TICK
+
+
+def normalized_rounds(workload: ServeWorkload):
+    """Release-sorted rounds with grid-snapped normalized release times.
+
+    Returns ``(ordered, releases, t0)``: the rounds sorted by release
+    (stable), their normalized-and-snapped release times, and the time
+    origin ``t0`` (the earliest release) that request arrivals must be
+    normalized against for release-relative metrics. Shared between
+    :func:`run_serving` and the gateway's epoch-windowed loop so both
+    paths measure from the identical 1 ns grid — the bit-exactness
+    anchor for the control-off parity tests.
+    """
+    ordered = sorted(workload.rounds, key=lambda r: r.release)
+    if not ordered:
+        return [], [], 0.0
+    t0 = ordered[0].release
+    return ordered, [_snap(r.release - t0) for r in ordered], t0
 
 
 @dataclasses.dataclass
@@ -170,9 +189,7 @@ def run_serving(
     # release and snap to the 1 ns grid: identical simulations for
     # time-shifted workloads (exact shift invariance), and the engine's
     # release>=0 contract holds for any absolute arrival origin.
-    ordered = sorted(workload.rounds, key=lambda r: r.release)
-    t0 = ordered[0].release
-    releases = [_snap(r.release - t0) for r in ordered]
+    ordered, releases, t0 = normalized_rounds(workload)
     rounds = [(rel, r.tm) for rel, r in zip(releases, ordered)]
     streaming = run_streaming_collective(
         rounds,

@@ -10,46 +10,82 @@ Façade over the serving-path subsystem:
   policy, any :class:`~repro.netsim.linkmodel.FaultSpec` degraded
   fabric), scoring release-relative tails: TTFT, per-token latency and
   request sojourn at p50/p90/p99/p99.9;
+* control plane — :func:`~repro.serve.gateway.run_gateway`, the
+  closed-loop epoch-windowed gateway on top of ``run_serving``:
+  token-bucket + queue-depth + p99-tracking admission control with
+  prefill/decode priority classes, continuous decode batching, and
+  graceful degradation (brownout) wired to the EWMA rail-health
+  estimator and the dead-rail watchdog
+  (:mod:`repro.sched.control` holds the controllers);
 * trace replay — :func:`~repro.sched.serving.simulate_decode_trace`
   drives the simulated fabric with per-step expert counts recorded from
   a real decode loop (``python -m repro.launch.serve --sim-fabric``).
 
 Quick start::
 
-    from repro.serve import serve_workload, run_serving
+    from repro.serve import serve_workload, run_serving, run_gateway
+    from repro.sched.control import AdmissionConfig, BrownoutConfig, ControlConfig
     wl = serve_workload(8, 8, num_requests=64, mean_gap=2e-3)
     res = run_serving(wl, "rails-online", feedback=True)
     print(res.request.ttft_percentiles())   # {'p50': ..., 'p99.9': ...}
+    ctl = ControlConfig(slo_s=0.05, admission=AdmissionConfig(rate_rps=400.0),
+                        brownout=BrownoutConfig())
+    gw = run_gateway(wl, "rails-online", control=ctl, backend="vector")
+    print(gw.slo["goodput_rps"], gw.slo["shed_rate"])
 """
 
-from .core.traffic import (
+from ..core.traffic import (
     ServeRequest,
     ServeRound,
     ServeWorkload,
     request_arrival_times,
     serve_workload,
 )
-from .sched.serving import (
+from ..sched.control import (
+    AdmissionConfig,
+    AdmissionController,
+    BrownoutConfig,
+    BrownoutController,
+    ControlConfig,
+    RailProbeMonitor,
+    TokenBucket,
+    slo_summary,
+)
+from ..sched.serving import (
     SERVE_QS,
     DecodeTraceResult,
     RequestMetrics,
     ServingResult,
     expert_counts_to_matrix,
+    normalized_rounds,
     run_serving,
     simulate_decode_trace,
 )
+from .gateway import GatewayResult, WindowStats, run_gateway
 
 __all__ = [
     "SERVE_QS",
+    "AdmissionConfig",
+    "AdmissionController",
+    "BrownoutConfig",
+    "BrownoutController",
+    "ControlConfig",
     "DecodeTraceResult",
+    "GatewayResult",
+    "RailProbeMonitor",
     "RequestMetrics",
     "ServeRequest",
     "ServeRound",
     "ServeWorkload",
     "ServingResult",
+    "TokenBucket",
+    "WindowStats",
     "expert_counts_to_matrix",
+    "normalized_rounds",
     "request_arrival_times",
+    "run_gateway",
     "run_serving",
     "serve_workload",
     "simulate_decode_trace",
+    "slo_summary",
 ]

@@ -1,0 +1,626 @@
+"""Closed-loop serving gateway: the epoch-windowed feedback loop.
+
+:func:`~repro.sched.serving.run_serving` is open-loop — a fixed request
+stream through a fixed policy. This module is the control plane on top:
+:func:`run_gateway` splits the trace into *epoch windows* and, per
+window, (1) freezes the control decisions computed from everything
+observed so far, (2) admits or sheds the window's new requests
+(:class:`~repro.sched.control.AdmissionController` — decode rounds of
+admitted requests are protected, new prefills shed first), (3) merges
+admitted decode rounds releasing within one quantum into shared
+all-to-all rounds (continuous batching), (4) plans the window's chunks
+with the persistent ``rails-online`` LPT state over the current survivor
+mask and EWMA pre-charge, (5) simulates the window, and (6) feeds the
+observed tail back into the admission / brownout controllers for the
+next window — plan on window *k*'s observed state, simulate window
+*k+1*.
+
+Two simulation backends, mirroring the rest of the repo:
+
+* ``vector`` (default) — each window runs on the exact prefix-scan
+  simulator; fabric state chains across windows through the per-link
+  busy-until carry (``simulate_chunk_arrays(link_busy=...)``), so the
+  concatenation of windows reproduces the single-shot vector run
+  flow-exactly and 10⁴–10⁶-request SLO sweeps stay cheap. Rail health is
+  observed by out-of-band probes
+  (:class:`~repro.sched.control.RailProbeMonitor` feeding the EWMA
+  estimator); degraded fabrics are piecewise-static ``fabric_schedule``
+  segments (a "dead" rail crawls at ε speed).
+* ``event`` — each window runs the DES with the
+  :class:`~repro.sched.feedback.RailHealthEstimator` and
+  :class:`~repro.sched.feedback.DeadRailDetector` attached as live
+  observers (true fail-stop / loss dynamics). Windows do not carry link
+  backlog across boundaries — an approximation acceptable at the epoch
+  granularity the controllers run on; use the vector loop when exact
+  chaining matters.
+
+With ``control=None`` the gateway is a transparent façade over
+``run_serving`` — bit-exact against the pre-gateway goldens, the anchor
+``tests/test_control.py`` pins down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from ..core.traffic import ServeWorkload, TrafficMatrix, aggregate_domains
+from ..sched.control import (
+    AdmissionController,
+    BrownoutController,
+    ControlConfig,
+    RailProbeMonitor,
+    slo_summary,
+)
+from ..sched.feedback import RailHealthEstimator
+from ..sched.serving import (
+    RequestMetrics,
+    ServingResult,
+    normalized_rounds,
+    run_serving,
+)
+
+__all__ = ["WindowStats", "GatewayResult", "run_gateway"]
+
+
+@dataclasses.dataclass
+class WindowStats:
+    """Per-epoch-window control-plane telemetry."""
+
+    t0: float
+    t1: float
+    mode: str  # "normal" | "brownout"
+    offered: int  # new requests arriving in the window
+    admitted: int
+    shed: int
+    rounds: int  # simulated fabric rounds (after batching/shedding)
+    p99_ttft: float | None  # this window's prefill-TTFT p99 (None: none)
+    queue_depth: int  # admitted requests in flight at window end
+    masked_rails: tuple[int, ...]
+
+
+@dataclasses.dataclass
+class GatewayResult:
+    """Outcome of one gateway run, shed-aware.
+
+    ``request`` holds **served requests only** — shed requests are
+    excluded from every percentile and reported through ``shed_reason`` /
+    ``slo`` instead (a rejection is not a latency). ``served_mask``
+    aligns with ``workload.requests``; ``request.ttft[k]`` is the k-th
+    *served* request in request-id order.
+    """
+
+    workload: ServeWorkload
+    policy: str
+    control: ControlConfig | None
+    request: RequestMetrics
+    served_mask: np.ndarray
+    shed_reason: dict[int, str]
+    slo: dict
+    windows: list[WindowStats] = dataclasses.field(default_factory=list)
+    health: RailHealthEstimator | None = None
+    monitor: RailProbeMonitor | None = None
+    brownout: BrownoutController | None = None
+    serving: ServingResult | None = None  # control-off delegation keeps it
+
+    @property
+    def shed_rate(self) -> float:
+        return self.slo["shed_rate"]
+
+    @property
+    def goodput_rps(self) -> float:
+        return self.slo["goodput_rps"]
+
+    @property
+    def brownout_windows(self) -> int:
+        return sum(1 for w in self.windows if w.mode == "brownout")
+
+    def row(self) -> dict:
+        """Flat benchmark row (the SLO-attainment grid)."""
+        t = self.request.ttft_percentiles()
+        return {
+            "policy": self.policy,
+            "num_requests": len(self.workload.requests),
+            "offered_rps": self.slo["offered_rps"],
+            "served": self.slo["served"],
+            "shed_rate": self.slo["shed_rate"],
+            "slo_attainment": self.slo["slo_attainment"],
+            "goodput_rps": self.slo["goodput_rps"],
+            "ttft_p50_s": t["p50"],
+            "ttft_p99_s": t["p99"],
+            "brownout_windows": self.brownout_windows,
+        }
+
+
+def _speeds_at(fabric_schedule, t: float, n: int, rail_speeds) -> np.ndarray:
+    """Current true per-rail speeds: last schedule segment at or before t."""
+    if fabric_schedule is None:
+        if rail_speeds is None:
+            return np.ones(n)
+        return np.asarray(rail_speeds, dtype=np.float64)
+    speeds = None
+    for seg_t, seg_speeds in fabric_schedule:
+        if seg_t <= t:
+            speeds = seg_speeds
+        else:
+            break
+    if speeds is None:
+        raise ValueError("fabric_schedule must cover t=0 (first segment t <= 0)")
+    return np.asarray(speeds, dtype=np.float64)
+
+
+@dataclasses.dataclass
+class _WinRound:
+    """One fabric round the gateway actually simulates.
+
+    ``members`` lists the request rounds folded into it — one entry for a
+    plain prefill/decode round, several for a continuous decode batch —
+    as ``(req_id, kind, member_release)``.
+    """
+
+    release: float
+    tm: TrafficMatrix
+    members: list[tuple[int, str, float]]
+
+
+def _merged_tm(tms: list[TrafficMatrix], scale: float) -> TrafficMatrix:
+    """Sum decode traffic matrices (× brownout fan-out scale) into one."""
+    if len(tms) == 1 and scale == 1.0:
+        return tms[0]
+    d1 = tms[0].d1 * scale
+    for tm in tms[1:]:
+        d1 = d1 + tm.d1 * scale
+    return TrafficMatrix(
+        d1=d1, d2=aggregate_domains(d1), name="decode-batch"
+    )
+
+
+class _Inflight:
+    """Admitted-requests-in-flight counter (the queue-depth signal).
+
+    A request occupies the system from admission until its last round
+    completes; completions are retired lazily against each new arrival's
+    timestamp via a min-heap, so the count is O(log Q) per event at any
+    depth.
+    """
+
+    def __init__(self):
+        self.count = 0
+        self._done: list[tuple[float, int]] = []
+
+    def admit(self):
+        self.count += 1
+
+    def retire_at(self, fin: float, req_id: int):
+        heapq.heappush(self._done, (fin, req_id))
+
+    def depth(self, now: float) -> int:
+        while self._done and self._done[0][0] <= now:
+            heapq.heappop(self._done)
+            self.count -= 1
+        return self.count
+
+
+def run_gateway(
+    workload: ServeWorkload,
+    policy: str = "rails-online",
+    control: ControlConfig | None = None,
+    r1: float = 400e9,
+    r2: float = 50e9,
+    chunk_bytes: float = 256 * 2**10,
+    seed: int = 0,
+    probe_every: int = 64,
+    rail_speeds=None,
+    fabric_schedule=None,
+    fault_spec=None,
+    detector=None,
+    feedback: bool = False,
+    window: int | None = None,
+    backend: str = "vector",
+    slo_s: float | None = None,
+) -> GatewayResult:
+    """Serve one workload through the closed-loop gateway.
+
+    Args:
+      control: the :class:`~repro.sched.control.ControlConfig`. ``None``
+        delegates to :func:`~repro.sched.serving.run_serving` unchanged
+        (bit-exact control-off path) and wraps the result.
+      slo_s: SLO used for scoring the control-off path (``control=None``);
+        ignored otherwise (``control.slo_s`` governs). Defaults to the
+        ``ControlConfig`` default so every arm of an SLO-attainment curve
+        is scored against the same threshold.
+      rail_speeds: static per-rail speed factors (either backend).
+      fabric_schedule: piecewise-static ``[(t_start, speeds), ...]``
+        segments, vector backend only; speeds switch at the first window
+        boundary at/after each segment start. The out-of-band probes read
+        these true speeds — the analytic stand-in for a latency probe on
+        a real fabric.
+      fault_spec: PR-4/PR-7 link dynamics — event backend only (the
+        vector simulator rejects non-static specs by construction).
+      detector: a :class:`~repro.sched.feedback.DeadRailDetector` to
+        attach as an engine observer (event backend): in-band silence
+        detection + survivor masking, complementing the vector loop's
+        probe monitor.
+      feedback: control-off passthrough to ``run_serving`` (the
+        controlled path governs EWMA feedback via ``control.feedback``).
+      backend: ``vector`` (default; epoch windows chained exactly via the
+        per-link busy carry) or ``event``.
+    """
+    if control is None:
+        serving = run_serving(
+            workload,
+            policy,
+            r1=r1,
+            r2=r2,
+            chunk_bytes=chunk_bytes,
+            seed=seed,
+            probe_every=probe_every,
+            rail_speeds=rail_speeds,
+            fault_spec=fault_spec,
+            feedback=feedback,
+            window=window,
+            detector=detector,
+            backend=backend,
+        )
+        num_req = len(workload.requests)
+        ordered, releases, t0 = normalized_rounds(workload)
+        horizon = max(
+            (releases[-1] if releases else 0.0),
+            float(serving.streaming.metrics.makespan),
+        )
+        return GatewayResult(
+            workload=workload,
+            policy=policy,
+            control=None,
+            request=serving.request,
+            served_mask=np.ones(num_req, dtype=bool),
+            shed_reason={},
+            slo=slo_summary(
+                serving.request.ttft,
+                ControlConfig().slo_s if slo_s is None else slo_s,
+                horizon, num_req, 0,
+            ),
+            serving=serving,
+            health=serving.streaming.health,
+        )
+    if backend not in ("vector", "event"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "event" and fabric_schedule is not None:
+        raise ValueError("fabric_schedule is a vector-loop construct; "
+                         "use fault_spec with backend='event'")
+    if backend == "vector" and fault_spec is not None:
+        from ..netsim.topology import RailTopology as _T
+
+        if _T(
+            workload.num_domains, workload.num_rails,
+            r1=r1, r2=r2, fault_spec=fault_spec,
+        ).has_dynamics:
+            raise ValueError(
+                "non-static fault_spec needs backend='event'; the vector "
+                "loop models degraded rails via fabric_schedule/rail_speeds"
+            )
+    return _run_gateway_loop(
+        workload, policy, control, r1, r2, chunk_bytes, seed, probe_every,
+        rail_speeds, fabric_schedule, fault_spec, detector, window, backend,
+    )
+
+
+def _run_gateway_loop(
+    workload, policy_name, control, r1, r2, chunk_bytes, seed, probe_every,
+    rail_speeds, fabric_schedule, fault_spec, detector, plan_window, backend,
+):
+    from ..netsim.balancers import (
+        OnlineRailSPolicy, POLICIES, Policy, RailSPolicy, make_policy,
+    )
+    from ..netsim.events import Engine
+    from ..netsim.fastsim import (
+        LinkIndex, paths_from_jobs, simulate_chunk_arrays,
+    )
+    from ..netsim.simulate import build_streaming_jobs
+    from ..netsim.topology import RailTopology
+
+    m, n = workload.num_domains, workload.num_rails
+    ordered, releases, t0 = normalized_rounds(workload)
+    if not ordered:
+        raise ValueError("serving workload has no rounds")
+    from ..sched.serving import _snap
+
+    num_req = len(workload.requests)
+    arrival_n = np.array(
+        [_snap(r.arrival - t0) for r in workload.requests]
+    )
+    rounds_left = np.zeros(num_req, dtype=np.int64)
+    for r in ordered:
+        rounds_left[r.req_id] += 1
+
+    span = releases[-1] if releases else 0.0
+    epoch_s = control.epoch_s
+    if epoch_s is None:
+        epoch_s = max(span / 20.0, 1e-4)
+
+    # -- controllers (decisions frozen per window, updated at boundaries) --
+    health = RailHealthEstimator(n, nominal_rate=r2) if (
+        control.feedback or backend == "vector"
+    ) else None
+    monitor = None
+    if backend == "vector":
+        monitor = RailProbeMonitor(
+            health,
+            dead_speed=control.dead_speed,
+            healthy_speed=control.healthy_speed,
+            revive_windows=control.revive_windows,
+            probe_bytes=control.probe_bytes,
+        )
+    admission = (
+        AdmissionController(control.admission, control.slo_s)
+        if control.admission is not None
+        else None
+    )
+    brownout = (
+        BrownoutController(control.brownout)
+        if control.brownout is not None
+        else None
+    )
+
+    # -- planner (persistent across windows: the LPT LoadState is the plan
+    #    memory; the mask/pre-charge it reads are the control decisions) --
+    nominal_topo = RailTopology(
+        m, n, r1=r1, r2=r2,
+        rail_speeds=None if fabric_schedule is not None else rail_speeds,
+        fault_spec=fault_spec if backend == "event" else None,
+    )
+    policy_cls = POLICIES.get(policy_name, Policy)
+    policy_mask_src = monitor if backend == "vector" else detector
+    if issubclass(policy_cls, OnlineRailSPolicy):
+        policy = make_policy(
+            policy_name, nominal_topo, seed=seed, window=plan_window,
+            health=health if control.feedback else None,
+            replay=None, detector=policy_mask_src,
+        )
+    else:
+        if backend == "vector" and not issubclass(
+            policy_cls, (RailSPolicy, OnlineRailSPolicy)
+        ):
+            raise ValueError(
+                f"vector gateway requires a proactive planner; {policy_name!r} "
+                "reads live backlog estimates during the run"
+            )
+        policy = make_policy(policy_name, nominal_topo, seed=seed)
+
+    # -- per-request outcome accumulators ----------------------------------
+    admitted_req = np.zeros(num_req, dtype=bool)
+    shed_reason: dict[int, str] = {}
+    ttft = np.full(num_req, np.nan)
+    sojourn = np.zeros(num_req)
+    last_fin = np.zeros(num_req)
+    token_latency: list[float] = []
+    inflight = _Inflight()
+    windows: list[WindowStats] = []
+    p99_est: float | None = None  # gateway-level EWMA (brownout signal)
+    link_busy = None  # created lazily from the first window's LinkIndex
+    quantum = control.batch_quantum_s
+
+    ptr = 0
+    num_rounds = len(ordered)
+    k = 0
+    eps = 1e-12
+    while ptr < num_rounds:
+        t_lo = k * epoch_s
+        t_hi = (k + 1) * epoch_s
+        speeds_now = _speeds_at(fabric_schedule, t_lo, n, rail_speeds)
+        if monitor is not None:
+            # Out-of-band probe at the window boundary — the only place
+            # the vector loop touches ground truth, and only through the
+            # EWMA estimator's normal observer interface.
+            monitor.observe(speeds_now, t_lo)
+        if detector is not None and backend == "event":
+            detector.sweep(t_lo)
+        mask = (
+            policy_mask_src.survivor_mask()
+            if policy_mask_src is not None
+            else np.ones(n, dtype=bool)
+        )
+        survivor_frac = float(mask.sum()) / n
+        brown_active = brownout.active if brownout is not None else False
+        if admission is not None:
+            admission.set_rate_scale(
+                brownout.admission_scale(survivor_frac)
+                if brownout is not None
+                else 1.0
+            )
+        fanout = control.brownout.fanout_keep if brown_active else 1.0
+        batch_cap = control.brownout.decode_batch_cap if brown_active else None
+
+        # -- admit / shed the window's rounds ------------------------------
+        offered = admitted_count = shed_count = 0
+        kept: list[tuple[float, object]] = []  # (release, ServeRound)
+        while ptr < num_rounds and releases[ptr] < t_hi - eps:
+            rel = releases[ptr]
+            rnd = ordered[ptr]
+            ptr += 1
+            rid = rnd.req_id
+            if rnd.kind == "prefill":
+                offered += 1
+                if admission is not None:
+                    ok, reason = admission.admit(rel, inflight.depth(rel))
+                else:
+                    ok, reason = True, "admitted"
+                if ok:
+                    admitted_req[rid] = True
+                    admitted_count += 1
+                    inflight.admit()
+                    kept.append((rel, rnd))
+                else:
+                    shed_count += 1
+                    shed_reason[rid] = reason
+                    rounds_left[rid] = 0
+            elif admitted_req[rid]:
+                # Decode rounds of admitted requests: protected class —
+                # never shed, whatever the controllers say.
+                kept.append((rel, rnd))
+            # decode rounds of shed requests vanish with their request
+
+        # -- continuous batching of decode rounds --------------------------
+        win_rounds: list[_WinRound] = []
+        if quantum is None:
+            for rel, rnd in kept:
+                tm = rnd.tm if rnd.kind == "prefill" else _merged_tm([rnd.tm], fanout)
+                win_rounds.append(
+                    _WinRound(rel, tm, [(rnd.req_id, rnd.kind, rel)])
+                )
+        else:
+            batches: dict[int, list[tuple[float, object]]] = {}
+            for rel, rnd in kept:
+                if rnd.kind == "prefill":
+                    win_rounds.append(
+                        _WinRound(rel, rnd.tm, [(rnd.req_id, "prefill", rel)])
+                    )
+                else:
+                    batches.setdefault(int(rel / quantum), []).append((rel, rnd))
+            for q in sorted(batches):
+                group = batches[q]
+                cap = batch_cap if batch_cap is not None else len(group)
+                for lo in range(0, len(group), max(cap, 1)):
+                    part = group[lo:lo + max(cap, 1)]
+                    rel = max(r for r, _ in part)  # batch waits for members
+                    win_rounds.append(
+                        _WinRound(
+                            rel,
+                            _merged_tm([rnd.tm for _, rnd in part], fanout),
+                            [(rnd.req_id, "decode", r) for r, rnd in part],
+                        )
+                    )
+        win_rounds.sort(key=lambda w: w.release)
+
+        # -- simulate the window -------------------------------------------
+        round_fin: dict[int, float] = {}
+        if win_rounds:
+            jobs = build_streaming_jobs(
+                [(w.release, w.tm) for w in win_rounds], chunk_bytes
+            )
+            policy.prepare(jobs)  # no-op for the online planner
+            if backend == "vector":
+                topo = RailTopology(
+                    m, n, r1=r1, r2=r2, rail_speeds=speeds_now
+                )
+                index = LinkIndex(topo)
+                if link_busy is None:
+                    link_busy = np.zeros(index.num_links)
+                rel_batches: dict[float, dict] = {}
+                nchunks = 0
+                for key, sender_jobs in jobs.items():
+                    for j in sender_jobs:
+                        rel_batches.setdefault(j.arrival_time, {}).setdefault(
+                            key, []
+                        ).append(j)
+                        nchunks += 1
+                eng = Engine(topo, probe_every=probe_every, seed=seed)
+                assigned: list = []
+                for t in sorted(rel_batches):
+                    assigned.extend(
+                        policy.assign_batch(eng, rel_batches[t], now=t)
+                    )
+                link_by_level, entry_rank = paths_from_jobs(
+                    assigned, index, nchunks
+                )
+                size = np.empty(nchunks)
+                release = np.empty(nchunks)
+                round_id = np.empty(nchunks, dtype=np.int64)
+                for j in assigned:
+                    cid = j.chunk_id
+                    size[cid] = j.size
+                    release[cid] = j.arrival_time
+                    round_id[cid] = j.round_id
+                res = simulate_chunk_arrays(
+                    index, link_by_level, size, release, entry_rank,
+                    hop_latency=1e-6, round_id=round_id,
+                    link_busy=link_busy,
+                )
+                link_busy = res.link_last
+                round_fin = res.round_completion_times()
+            else:
+                engine = Engine(nominal_topo, probe_every=probe_every, seed=seed)
+                if health is not None:
+                    engine.add_observer(health)
+                if detector is not None:
+                    engine.add_observer(detector)
+                sim = engine.run_streaming(jobs, policy)
+                round_fin = sim.round_times()[0]
+
+        # -- harvest completions back onto requests ------------------------
+        win_ttfts: list[float] = []
+        for i, w in enumerate(win_rounds):
+            fin = round_fin.get(i, w.release)
+            for rid, kind, member_rel in w.members:
+                if kind == "prefill":
+                    ttft[rid] = fin - arrival_n[rid]
+                    win_ttfts.append(float(ttft[rid]))
+                else:
+                    token_latency.append(float(fin - member_rel))
+                sojourn[rid] = max(sojourn[rid], fin - arrival_n[rid])
+                last_fin[rid] = max(last_fin[rid], fin)
+                rounds_left[rid] -= 1
+                if rounds_left[rid] == 0 and admitted_req[rid]:
+                    inflight.retire_at(float(last_fin[rid]), rid)
+
+        # -- feed the observations into the controllers --------------------
+        win_p99 = (
+            float(np.percentile(np.asarray(win_ttfts), 99.0))
+            if win_ttfts
+            else None
+        )
+        if win_p99 is not None:
+            p99_est = (
+                win_p99 if p99_est is None else 0.5 * win_p99 + 0.5 * p99_est
+            )
+        if admission is not None:
+            admission.observe_window(win_p99)
+        masked = tuple(
+            policy_mask_src.dead_rails() if policy_mask_src is not None else ()
+        )
+        if brownout is not None:
+            brownout.observe_window(t_hi, p99_est, control.slo_s, len(masked))
+        windows.append(
+            WindowStats(
+                t0=t_lo,
+                t1=t_hi,
+                mode="brownout" if brown_active else "normal",
+                offered=offered,
+                admitted=admitted_count,
+                shed=shed_count,
+                rounds=len(win_rounds),
+                p99_ttft=win_p99,
+                queue_depth=inflight.depth(t_hi),
+                masked_rails=masked,
+            )
+        )
+        k += 1
+
+    served = admitted_req.copy()
+    served_ttft = ttft[served]
+    # An admitted request whose prefill never completed would be a
+    # bookkeeping bug, not a data point — assert instead of filtering.
+    assert not np.isnan(served_ttft).any()
+    horizon = max(span, float(last_fin.max()) if num_req else 0.0)
+    request = RequestMetrics(
+        ttft=served_ttft,
+        token_latency=np.asarray(token_latency),
+        sojourn=sojourn[served],
+    )
+    return GatewayResult(
+        workload=workload,
+        policy=policy_name,
+        control=control,
+        request=request,
+        served_mask=served,
+        shed_reason=shed_reason,
+        slo=slo_summary(
+            served_ttft, control.slo_s, horizon, num_req, int((~served).sum())
+        ),
+        windows=windows,
+        health=health,
+        monitor=monitor,
+        brownout=brownout,
+    )

@@ -103,3 +103,23 @@ def test_netsim_trajectory_keys_by_bench_backend_size(tmp_path, capsys):
     vec_row = next(ln for ln in lines if "| vector | 100000 |" in ln)
     assert "660kchunks_per_s" in vec_row and "714kchunks_per_s" in vec_row
     assert "lp_eq24_simplex_M4N4" in out
+
+
+def test_slo_prefix_filters_control_plane_grid(tmp_path, capsys):
+    """--slo (bench_prefix='slo_') must keep only serving-SLO grid rows."""
+    a = tmp_path / "a.json"
+    a.write_text(json.dumps(_bench_doc("rev_a", [
+        {"name": "slo_g0.0002_dead1_ordering", "us_per_call": 1_000_000.0,
+         "derived": "admission=28.76x_brownout=20.43x_nocontrol_goodput",
+         "bench": "slo_g0.0002_dead1", "backend": "vector", "size": None},
+        {"name": "slo_g0.0002_dead1_nocontrol", "us_per_call": 600_000.0,
+         "derived": "goodput=132.0rps_shed=0.000_att=0.050_brownout_w=0"},
+        {"name": "serve_r500_none_rails", "us_per_call": 50_000.0,
+         "derived": "p99=1.2ms", "bench": "serve_r500_none", "backend": "event",
+         "size": None},
+    ])))
+    perf_report.netsim_trajectory([str(a)], bench_prefix="slo_")
+    out = capsys.readouterr().out
+    assert "slo_g0.0002_dead1" in out
+    assert "admission=28.76x" in out
+    assert "serve_r500" not in out
