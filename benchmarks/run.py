@@ -49,7 +49,8 @@ from . import paper_workloads as W
 _ROWS: list[dict] = []
 
 
-#: bench_scale backend selection (``--backend``): "both", "event", "vector".
+#: bench_scale backend selection (``--backend``): "both" (event+vector),
+#: "event", "vector", or "device" (jax backend vs vector reference).
 _BACKEND = "both"
 
 
@@ -376,7 +377,7 @@ def bench_scale() -> None:
         chunks = int(round(tm.total_bytes() / chunk_bytes))
         tag = f"scale_nodes{nodes}_chunks{chunks}"
         res_v = res_e = None
-        if _BACKEND in ("both", "vector"):
+        if _BACKEND in ("both", "vector", "device"):
             res_v, us_v = _timed(
                 lambda: run_collective(
                     tm, "rails", chunk_bytes=chunk_bytes, backend="vector"
@@ -416,6 +417,53 @@ def bench_scale() -> None:
                     f"{rate_v / event_rate[nodes]:.1f}x_event_rate_at_cap",
                     bench="scale_speedup", backend="vector", size=chunks,
                 )
+        if _BACKEND == "device":
+            # Device backend: cold call pays the jit trace (amortized by
+            # the power-of-two padding buckets — same-bucket sizes reuse
+            # it); the warm rate is the trajectory metric. The suite row
+            # is the batching headline: all five policies planned
+            # host-side, scanned in one vmap-ed dispatch, vs the serial
+            # vector loop over the same grid.
+            _, us_cold = _timed(
+                lambda: run_collective(
+                    tm, "rails", chunk_bytes=chunk_bytes, backend="device"
+                )
+            )
+            res_d, us_d = _timed(
+                lambda: run_collective(
+                    tm, "rails", chunk_bytes=chunk_bytes, backend="device"
+                )
+            )
+            _emit(
+                f"{tag}_device", us_d,
+                f"{chunks / (us_d / 1e6) / 1e3:.0f}kchunks_per_s_opt_ratio="
+                f"{res_d.opt_ratio:.2f}_jit_cold={us_cold / 1e6:.2f}s",
+                bench="scale", backend="device", size=chunks,
+            )
+            if res_v is not None:
+                _emit(
+                    f"{tag}_device_speedup", us_d,
+                    f"{us_v / us_d:.1f}x_vector_makespan_drift="
+                    f"{abs(res_d.makespan / res_v.makespan - 1) * 100:.2e}pct",
+                    bench="scale_speedup", backend="device", size=chunks,
+                )
+            suite_v, us_sv = _timed(
+                lambda: run_policy_suite(
+                    tm, chunk_bytes=chunk_bytes, backend="vector"
+                )
+            )
+            run_policy_suite(tm, chunk_bytes=chunk_bytes, backend="device")
+            suite_d, us_sd = _timed(
+                lambda: run_policy_suite(
+                    tm, chunk_bytes=chunk_bytes, backend="device"
+                )
+            )
+            npol = len(suite_d)
+            _emit(
+                f"{tag}_device_suite", us_sd,
+                f"{npol}policies_1dispatch_{us_sv / us_sd:.1f}x_vector_loop",
+                bench="scale_suite", backend="device", size=chunks,
+            )
         if _BACKEND == "both":
             # Coalescing drift vs the exact (vector-backend) result.
             exact = res_v if res_v is not None else res_e
@@ -431,6 +479,73 @@ def bench_scale() -> None:
                 "_vs_vector_exact",
                 bench="scale_coalesce_drift", backend="event", size=chunks,
             )
+    if _BACKEND == "device":
+        _bench_scale_microbatch()
+
+
+def _bench_scale_microbatch() -> None:
+    """Batched-sweep regime: many small sims in one device dispatch.
+
+    Times a batch of B independently-planned small collectives through
+    ``simulate_many_device`` (one shared padding bucket, one vmap-ed
+    call) against the serial vector loop over the same planned arrays —
+    planning cost is identical (host-side) in both arms and excluded.
+    This is the dispatch-amortization regime the device backend targets:
+    the batch dimension is embarrassingly parallel, so on an accelerator
+    (or a multi-core host where XLA's thread pool covers the vmap dim)
+    one dispatch replaces B python/numpy round trips. On a single-core
+    CPU jax install there is nothing to parallelize over and the row
+    records the honest ratio vs numpy's serial scans (<1x) — the
+    trajectory metric to watch when the toolchain gains a real device.
+    """
+    from repro.netsim.devicesim import PlannedJobs, simulate_many_device
+    from repro.netsim.fastsim import LinkIndex, simulate_chunk_arrays
+    from repro.netsim.simulate import _plan_collective
+    from repro.netsim.topology import RailTopology
+
+    B = 32 if W.QUICK else 256
+    target_chunks = 200
+    topo = RailTopology(4, 4)
+    index = LinkIndex(topo)
+    planned = []
+    for i in range(B):
+        tm, chunk_bytes = W.scale_fabric(4, 4, target_chunks, seed=100 + i)
+        ja, link_by_level, entry_rank = _plan_collective(
+            topo, index, tm, "rails", chunk_bytes, seed=i, probe_every=64
+        )
+        planned.append(
+            PlannedJobs(
+                link_by_level=link_by_level,
+                size=ja.size,
+                release=ja.release,
+                entry_rank=entry_rank,
+                flow_id=ja.flow_id,
+                round_id=ja.round_id,
+            )
+        )
+    chunks = sum(p.num_chunks for p in planned)
+
+    def vector_loop():
+        return [
+            simulate_chunk_arrays(
+                index, p.link_by_level, p.size, p.release, p.entry_rank,
+                flow_id=p.flow_id, round_id=p.round_id,
+            )
+            for p in planned
+        ]
+
+    res_v, us_v = _timed(vector_loop)
+    simulate_many_device(index, planned)  # jit warmup (shared bucket)
+    res_d, us_d = _timed(lambda: simulate_many_device(index, planned))
+    drift = max(
+        abs(d.makespan / v.makespan - 1) for d, v in zip(res_d, res_v)
+    )
+    _emit(
+        f"scale_microbatch_{B}x{target_chunks}chunks_device", us_d,
+        f"{us_v / us_d:.2f}x_vector_loop_1dispatch_makespan_drift="
+        f"{drift * 100:.2e}pct",
+        bench="scale_microbatch", backend="device", size=chunks,
+    )
 
 
 def bench_fault_sweep() -> None:
@@ -563,15 +678,21 @@ def bench_serving_slo() -> None:
     Offered load (``mean_gap``) × fabric ({clean, one-dead-rail}) ×
     control arm ({no-control, admission, admission+brownout}), every cell
     one seeded request stream through the epoch-windowed
-    :func:`repro.serve.gateway.run_gateway` vector loop (full mode sweeps
+    :func:`repro.serve.gateway.run_gateway` array loop (full mode sweeps
     10⁴ requests per cell — the feedback-at-scale regime the windowed
     loop exists for). Scored shed-aware: goodput = served requests whose
     TTFT met the SLO, per second of trace. The per-cell ``ordering`` row
-    (structured key ``bench=slo_g<gap>_<fabric>``) tracks the
-    controlled-over-uncontrolled goodput ratio — the overload-robustness
-    headline — via ``perf_report.py --slo``. The fabric is a fixed 4×4
-    (the control loop, not fabric scale, is under test); the dead rail is
-    a 2 %-speed crawl, the vector loop's fail-stop proxy.
+    (structured key ``bench=slo_g<gap>_<fabric>``, keyed by backend)
+    tracks the controlled-over-uncontrolled goodput ratio — the
+    overload-robustness headline — via ``perf_report.py --slo``. The
+    fabric is a fixed 4×4 (the control loop, not fabric scale, is under
+    test); the dead rail is a 2 %-speed crawl, the array loops' fail-stop
+    proxy. ``--backend device`` runs each window's scan on the jax
+    backend instead and raises full mode to 10⁵ requests per cell — the
+    p99.99-tail regime, and the scale where an accelerator-backed jax
+    install would amortize per-window dispatch (on single-core CPU jax
+    the vector loop stays faster; the rows record what this host
+    measures).
     """
     from repro.core.traffic import serve_workload
     from repro.sched.control import (
@@ -583,7 +704,11 @@ def bench_serving_slo() -> None:
 
     m, n = 4, 4
     slo = 0.002
-    num_req = 300 if W.QUICK else 10_000
+    gw_backend = "device" if _BACKEND == "device" else "vector"
+    if W.QUICK:
+        num_req = 300
+    else:
+        num_req = 100_000 if gw_backend == "device" else 10_000
     gaps = (2e-4, 5e-5) if W.QUICK else (2e-4, 1e-4, 5e-5)
     dead = np.ones(n)
     dead[-1] = 0.02
@@ -608,7 +733,7 @@ def bench_serving_slo() -> None:
                 res, us = _timed(
                     lambda arm=arm, make_control=make_control: run_gateway(
                         wl, "rails-online", control=make_control(),
-                        rail_speeds=speeds, backend="vector", slo_s=slo,
+                        rail_speeds=speeds, backend=gw_backend, slo_s=slo,
                     )
                 )
                 s = res.slo
@@ -620,6 +745,7 @@ def bench_serving_slo() -> None:
                     f"_shed={s['shed_rate']:.3f}"
                     f"_att={s['slo_attainment']:.3f}"
                     f"_brownout_w={res.brownout_windows}",
+                    bench=f"{cell}_{arm}", backend=gw_backend, size=num_req,
                 )
             base = max(goodput["nocontrol"], 1e-9)
             _emit(
@@ -627,7 +753,7 @@ def bench_serving_slo() -> None:
                 f"admission={goodput['admission'] / base:.2f}x"
                 f"_brownout={goodput['admission_brownout'] / base:.2f}"
                 "x_nocontrol_goodput",
-                bench=cell, backend="vector",
+                bench=cell, backend=gw_backend, size=num_req,
             )
 
 
@@ -794,12 +920,18 @@ def bench_online_window_sweep() -> None:
 
 
 def parity_check() -> int:
-    """CI gate: event and vector backends must agree on the quick config.
+    """CI gate: the simulation backends must agree on the quick config.
 
-    Returns 0 on agreement (makespan + CCT percentiles), 1 otherwise.
-    Rail-path policies must match at fp tolerance; spine-path baselines
-    get 2e-3 for tie-order degeneracy on the synthetic equal-chunk
-    workloads (see tests/test_fastsim.py for the rationale).
+    Two legs, both required (returns 0 only if every check passes):
+
+    * event vs vector — makespan + CCT percentiles; rail-path policies at
+      fp tolerance, spine-path baselines at 2e-3 for tie-order degeneracy
+      on the synthetic equal-chunk workloads (see tests/test_fastsim.py).
+    * vector vs device — the jax backend on CPU jax; makespan at fp
+      tolerance for every policy, CCT percentiles at fp tolerance for
+      rails and 2e-2 otherwise (degenerate equal-chunk waves can resolve
+      ties into a different — equally valid — FIFO order on device; see
+      tests/test_devicesim.py).
     """
     W.configure(quick=True)
     workloads = {
@@ -823,10 +955,27 @@ def parity_check() -> int:
                     print(f"parity MISMATCH: {pol}/{name}/{key} vector={got!r} event={want!r}")
         verdict = "ok" if pol_failures == 0 else f"FAILED ({pol_failures})"
         print(f"parity {verdict}: {pol} ({len(workloads)} workloads, rtol={rtol:g})")
+    for pol in W.POLICIES:
+        mk_rtol = 1e-9
+        cct_rtol = 1e-9 if pol == "rails" else 2e-2
+        pol_failures = 0
+        for name, tm in workloads.items():
+            v = run_collective(tm, pol, chunk_bytes=W.CHUNK, seed=3, backend="vector")
+            d = run_collective(tm, pol, chunk_bytes=W.CHUNK, seed=3, backend="device")
+            checks = {"makespan": (d.makespan, v.makespan, mk_rtol)}
+            checks.update({k: (d.cct[k], v.cct[k], cct_rtol) for k in v.cct})
+            for key, (got, want, rtol) in checks.items():
+                if abs(got - want) > rtol * abs(want) + 1e-15:
+                    failures.append((pol, name, key, got, want))
+                    pol_failures += 1
+                    print(f"parity MISMATCH: {pol}/{name}/{key} device={got!r} vector={want!r}")
+        verdict = "ok" if pol_failures == 0 else f"FAILED ({pol_failures})"
+        print(f"device parity {verdict}: {pol} ({len(workloads)} workloads, "
+              f"cct_rtol={cct_rtol:g})")
     if failures:
         print(f"# backend parity FAILED: {len(failures)} mismatches")
         return 1
-    print("# backend parity OK: event == vector on the quick config")
+    print("# backend parity OK: event == vector == device on the quick config")
     return 0
 
 
@@ -869,14 +1018,17 @@ def main() -> None:
     )
     ap.add_argument(
         "--backend",
-        choices=("both", "event", "vector"),
+        choices=("both", "event", "vector", "device"),
         default="both",
-        help="bench_scale backend selection (default: time both)",
+        help="bench_scale/bench_serving_slo backend selection (default: "
+             "time event+vector; 'device' times the jax backend against "
+             "the vector reference)",
     )
     ap.add_argument(
         "--parity-check",
         action="store_true",
-        help="run the event-vs-vector agreement gate and exit (CI)",
+        help="run the backend agreement gates (event-vs-vector and "
+             "vector-vs-device) and exit (CI)",
     )
     args = ap.parse_args()
     if args.parity_check:

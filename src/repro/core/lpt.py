@@ -258,26 +258,36 @@ def lpt_schedule_reference(
     num_rails: int,
     source_ids: np.ndarray | None = None,
     initial_loads: np.ndarray | None = None,
+    rail_mask: np.ndarray | None = None,
 ) -> LptResult:
     """Algorithm 2, naive transcript: argmin re-scan per flow, O(F·N).
 
     The parity oracle for :func:`lpt_schedule` — every fast-path change
-    must keep the two bit-identical (tests pin this down).
+    must keep the two bit-identical (tests pin this down). ``rail_mask``
+    here is the direct transcript (masked argmin per flow; dead rails
+    never win against any finite load), which the fast path's
+    compact-recurse-remap formulation must reproduce exactly.
     """
     weights, source_ids, loads = _validate(weights, num_rails, source_ids, initial_loads)
+    mask = (
+        _check_rail_mask(rail_mask, num_rails) if rail_mask is not None else None
+    )
     f = weights.size
     order = _sort_order(weights, source_ids)
     assignment = np.empty(f, dtype=np.int64)
+    visible = loads if mask is None else np.where(mask, loads, np.inf)
     # Step 3: iterative allocation to the currently least-loaded rail.
     for i in order:
-        j = int(np.argmin(loads))  # ties -> lowest rail index (np.argmin)
+        j = int(np.argmin(visible))  # ties -> lowest rail index (np.argmin)
         assignment[i] = j
         loads[j] += weights[i]
+        if mask is not None:
+            visible[j] = loads[j]
     return LptResult(
         assignment=assignment,
         loads=loads,
         order=order,
-        mse=load_mse(loads),
+        mse=load_mse(loads if mask is None else loads[mask]),
     )
 
 
@@ -386,11 +396,25 @@ class LptState:
         )
 
 
-def _lpt_scan(weights_sorted: jnp.ndarray, initial_loads: jnp.ndarray, unroll: int):
-    """Greedy least-loaded assignment over pre-sorted weights via lax.scan."""
+def _lpt_scan(
+    weights_sorted: jnp.ndarray,
+    initial_loads: jnp.ndarray,
+    unroll: int,
+    rail_mask: jnp.ndarray | None = None,
+):
+    """Greedy least-loaded assignment over pre-sorted weights via lax.scan.
+
+    A survivor mask pins dead rails' loads to +inf inside the argmin only
+    — the accumulated loads themselves stay untouched, so ties still
+    resolve to the lowest *alive* original index, exactly like the host
+    path's compact-recurse-and-map-back.
+    """
 
     def step(loads, w):
-        j = jnp.argmin(loads)
+        visible = loads if rail_mask is None else jnp.where(
+            rail_mask, loads, jnp.inf
+        )
+        j = jnp.argmin(visible)
         loads = loads.at[j].add(w)
         return loads, j
 
@@ -403,6 +427,7 @@ def lpt_schedule_jax(
     initial_loads: jnp.ndarray | None = None,
     assume_uniform: bool = False,
     unroll: int = 8,
+    rail_mask: jnp.ndarray | None = None,
 ):
     """Device LPT: jit-friendly Algorithm 2 on a ``jax.lax`` substrate.
 
@@ -418,6 +443,12 @@ def lpt_schedule_jax(
         path holds exactly when the promise does.
       unroll: scan unroll factor for the general path — amortizes per-flow
         scan overhead at large F.
+      rail_mask: optional bool ``(N,)`` survivor mask (may be traced) —
+        False rails receive nothing and keep their initial loads, matching
+        the masked host scheduler: ties resolve to the lowest alive
+        original index, the MSE is over alive rails only. Under
+        ``assume_uniform`` the round-robin runs over the alive set in
+        ascending original order (the compacted Theorem-2 regime).
 
     Returns:
       ``(assignment, loads, mse)`` — assignment is in original flow order.
@@ -426,26 +457,59 @@ def lpt_schedule_jax(
     f = weights.shape[0]
     if initial_loads is None:
         initial_loads = jnp.zeros((num_rails,), dtype=jnp.float32)
+    mask = None
+    if rail_mask is not None:
+        mask = jnp.asarray(rail_mask, dtype=bool)
+        if mask.shape != (num_rails,):
+            raise ValueError(
+                f"rail_mask must be ({num_rails},), got {mask.shape}"
+            )
+        try:
+            if not bool(mask.any()):
+                raise ValueError(
+                    "rail_mask leaves no rail alive — nothing to plan over"
+                )
+        except jax.errors.TracerBoolConversionError:
+            pass  # traced mask: liveness is the caller's promise
     # Descending sort; jnp.argsort is stable, so equal weights keep index
     # order — matching the host tie-break (source_ids == arange).
     order = jnp.argsort(-weights, stable=True)
     if assume_uniform:
         # Equal weights over a uniform LoadState reduce LPT to round-robin
         # in sorted order; the per-rail loads are a batched segment-sum.
-        assignment_sorted = jnp.arange(f, dtype=jnp.int32) % num_rails
+        if mask is None:
+            assignment_sorted = jnp.arange(f, dtype=jnp.int32) % num_rails
+        else:
+            # Alive rails first, ascending original index (argsort of the
+            # dead flag is stable) — round-robin over that prefix is the
+            # compacted host round-robin mapped back in one gather.
+            alive_order = jnp.argsort(~mask, stable=True).astype(jnp.int32)
+            num_alive = jnp.sum(mask).astype(jnp.int32)
+            assignment_sorted = alive_order[
+                jnp.arange(f, dtype=jnp.int32) % num_alive
+            ]
         assignment = jnp.zeros((f,), dtype=jnp.int32).at[order].set(assignment_sorted)
         loads = initial_loads + jax.ops.segment_sum(
             weights, assignment, num_segments=num_rails
         )
     else:
         loads, assignment_sorted = _lpt_scan(
-            weights[order], initial_loads, unroll=max(int(unroll), 1)
+            weights[order], initial_loads, unroll=max(int(unroll), 1),
+            rail_mask=mask,
         )
         # Scatter assignments back to original flow order.
         assignment = jnp.zeros((f,), dtype=jnp.int32).at[order].set(
             assignment_sorted.astype(jnp.int32)
         )
-    mse = jnp.mean((loads - jnp.mean(loads)) ** 2)
+    if mask is None:
+        mse = jnp.mean((loads - jnp.mean(loads)) ** 2)
+    else:
+        # A dead rail is not load imbalance: moments over alive rails only.
+        num_alive_f = jnp.sum(mask).astype(loads.dtype)
+        mean_alive = jnp.sum(jnp.where(mask, loads, 0.0)) / num_alive_f
+        mse = jnp.sum(
+            jnp.where(mask, (loads - mean_alive) ** 2, 0.0)
+        ) / num_alive_f
     return assignment, loads, mse
 
 

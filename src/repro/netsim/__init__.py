@@ -8,9 +8,12 @@ discrete-event engine (`events`) and the array prefix-scan backend
 throughput) — the five policies of §VI-A plus the streaming `rails-online`
 control plane (`balancers`), and the paper's metrics (`metrics`).
 `simulate.run_collective` is the offline benchmark entry point (with a
-`backend={"event","vector"}` switch); `simulate.run_streaming_collective`
-is its online counterpart (release times, rail-health feedback, telemetry
-observers — see `repro.sched`). The pluggable link-dynamics layer
+`backend={"event","vector","device"}` switch — `device` is the jitted jax
+port of the scans with batched `vmap` sweep execution, see `devicesim`);
+`simulate.run_streaming_collective` is its online counterpart (release
+times, rail-health feedback, telemetry observers — see `repro.sched`).
+`devicesim` itself is imported lazily (first `backend="device"` use) so
+the numpy paths never pay the jax import. The pluggable link-dynamics layer
 (`linkmodel`) turns the frozen fabric into a scenario generator: per-link
 rate profiles (step degradation, flapping optics), PFC pause, ECN marking
 with sender rate cuts, Gilbert–Elliott chunk loss with go-back-N recovery,

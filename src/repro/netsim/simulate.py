@@ -26,6 +26,12 @@ Both regimes select a simulation **backend**:
   (:mod:`repro.netsim.events`): required for flowlet coalescing, rail-health
   feedback, telemetry observers, and any policy that reads live backlog
   during a streaming run.
+* ``device`` — the jax port of the vector scans
+  (:mod:`repro.netsim.devicesim`): the same FIFO dynamics as one jitted
+  device call over padded fixed-shape arrays, and — the point — batched
+  ``vmap`` execution so a whole policy-suite grid or placement candidate
+  set is a single dispatch. Parity with ``vector`` is float-tolerance,
+  not bit-exact.
 """
 
 from __future__ import annotations
@@ -59,7 +65,7 @@ __all__ = [
     "StreamingResult",
 ]
 
-BACKENDS = ("event", "vector")
+BACKENDS = ("event", "vector", "device")
 
 
 def build_jobs(
@@ -97,25 +103,39 @@ def _check_vector_supports(topo: RailTopology, backend: str | None) -> str:
                 "only; this fault_spec needs the event fallback "
                 "(backend='event')"
             )
+        if backend == "device":
+            from .devicesim import check_device_supports
+
+            check_device_supports(topo)  # raises NotImplementedError
         return "event"
     return backend if backend is not None else "vector"
 
 
-def _run_collective_vector(
+def _array_simulator(backend: str):
+    """The chunk-array simulate function for an array backend name."""
+    if backend == "device":
+        from .devicesim import simulate_chunk_arrays_device
+
+        return simulate_chunk_arrays_device
+    return simulate_chunk_arrays
+
+
+def _plan_collective(
     topo: RailTopology,
+    index: LinkIndex,
     tm: TrafficMatrix,
     policy_name: str,
     chunk_bytes: float,
     seed: int,
     probe_every: int,
 ):
-    """Offline collective on the array backend.
+    """Host-side planning phase of one offline collective.
 
     Planner policies fill path columns straight from :class:`JobArrays`;
     everything else runs its normal assignment phase against a (never
-    simulated) engine and only the fabric dynamics are vectorized.
+    simulated) engine. Returns ``(job_arrays, link_by_level, entry_rank)``
+    — the columns any array backend consumes.
     """
-    index = LinkIndex(topo)
     ja = build_job_arrays(tm, chunk_bytes)
     policy = make_policy(policy_name, topo, seed=seed)
     if hasattr(policy, "plan_arrays"):
@@ -127,13 +147,30 @@ def _run_collective_vector(
         eng = Engine(topo, probe_every=probe_every, seed=seed)
         ordered = policy.assign_batch(eng, jobs, now=0.0)
         link_by_level, entry_rank = paths_from_jobs(ordered, index, ja.num_chunks)
-    return simulate_chunk_arrays(
+    return ja, link_by_level, entry_rank
+
+
+def _run_collective_vector(
+    topo: RailTopology,
+    tm: TrafficMatrix,
+    policy_name: str,
+    chunk_bytes: float,
+    seed: int,
+    probe_every: int,
+    backend: str = "vector",
+):
+    """Offline collective on an array backend (``vector`` or ``device``)."""
+    index = LinkIndex(topo)
+    ja, link_by_level, entry_rank = _plan_collective(
+        topo, index, tm, policy_name, chunk_bytes, seed, probe_every
+    )
+    return _array_simulator(backend)(
         index,
         link_by_level,
         ja.size,
         ja.release,
         entry_rank,
-        hop_latency=1e-6,  # the Engine default — both backends share it
+        hop_latency=1e-6,  # the Engine default — all backends share it
         flow_id=ja.flow_id,
         round_id=ja.round_id,
     )
@@ -156,7 +193,9 @@ def run_collective(
 
     ``backend`` selects the simulator: ``vector`` (the default for exact
     runs) computes the exact FIFO dynamics with array prefix scans;
-    ``event`` runs the discrete-event engine. ``coalesce=True`` enables
+    ``device`` runs the same dynamics as one jitted jax call (float-
+    tolerance parity with ``vector``); ``event`` runs the discrete-event
+    engine. ``coalesce=True`` enables
     flowlet coalescing — an event-engine approximation (merged same-lane
     service events) — so it defaults to the event backend, and asking for
     ``backend="vector"`` together with it is an error (mirroring
@@ -175,15 +214,16 @@ def run_collective(
         rail_speeds=rail_speeds, fault_spec=fault_spec,
     )
     backend = _check_vector_supports(topo, backend)
-    if coalesce and backend == "vector":
+    if coalesce and backend in ("vector", "device"):
         raise ValueError(
             "flowlet coalescing is an event-engine approximation; drop "
             "coalesce=True or use backend='event'"
         )
     opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
-    if backend == "vector":
+    if backend in ("vector", "device"):
         result = _run_collective_vector(
-            topo, tm, policy_name, chunk_bytes, seed, probe_every
+            topo, tm, policy_name, chunk_bytes, seed, probe_every,
+            backend=backend,
         )
         return compute_metrics(result, topo, tm.name, policy_name, opt)
     jobs = build_jobs(tm, chunk_bytes)
@@ -252,8 +292,9 @@ def _run_streaming_vector(
     policy,
     probe_every: int,
     seed: int,
+    backend: str = "vector",
 ):
-    """Streaming collective on the array backend (proactive planners only).
+    """Streaming collective on an array backend (proactive planners only).
 
     The policy assigns each release batch exactly as the event engine
     would — batches in release order, round-robin senders — but against a
@@ -283,7 +324,7 @@ def _run_streaming_vector(
         release[cid] = j.arrival_time
         flow_id[cid] = j.flow_id
         round_id[cid] = j.round_id
-    return simulate_chunk_arrays(
+    return _array_simulator(backend)(
         index,
         link_by_level,
         size,
@@ -345,9 +386,11 @@ def run_streaming_collective(
       coalesce: enable flowlet coalescing (merged same-lane service
         events); exact CCTs require the default ``False``.
       backend: ``event`` (default — the incremental DES, required for
-        feedback/telemetry/coalescing and reactive policies) or ``vector``
+        feedback/telemetry/coalescing and reactive policies), ``vector``
         (exact array simulation; proactive planners without fabric feedback
-        only — the reference for coalescing drift measurements).
+        only — the reference for coalescing drift measurements) or
+        ``device`` (the jitted jax scan, same restrictions as ``vector``,
+        float-tolerance parity).
     """
     _check_backend(backend)
     if isinstance(workload, TrafficMatrix):
@@ -383,20 +426,23 @@ def run_streaming_collective(
         }
     policy = make_policy(policy_name, topo, seed=seed, **kwargs)
     policy.prepare(jobs)
-    if backend == "vector":
+    if backend in ("vector", "device"):
         _check_vector_supports(topo, backend)  # dynamics need the event engine
         if feedback or recorder is not None or coalesce or detector is not None:
             raise ValueError(
-                "vector streaming is feedback-free: rail-health estimation, "
-                "dead-rail detection, telemetry recording and flowlet "
-                "coalescing need the event engine's live service stream"
+                f"{backend} streaming is feedback-free: rail-health "
+                "estimation, dead-rail detection, telemetry recording and "
+                "flowlet coalescing need the event engine's live service "
+                "stream"
             )
         if not issubclass(policy_cls, (RailSPolicy, OnlineRailSPolicy)):
             raise ValueError(
-                f"vector streaming requires a proactive planner; {policy_name!r} "
-                "reads live backlog estimates during the run"
+                f"{backend} streaming requires a proactive planner; "
+                f"{policy_name!r} reads live backlog estimates during the run"
             )
-        result = _run_streaming_vector(topo, jobs, policy, probe_every, seed)
+        result = _run_streaming_vector(
+            topo, jobs, policy, probe_every, seed, backend=backend
+        )
     else:
         engine = Engine(
             topo, probe_every=probe_every, seed=seed, coalesce_flowlets=coalesce
@@ -445,7 +491,57 @@ def run_policy_suite(
     """Run every policy on the same workload (the paper's comparison grid).
 
     ``kwargs`` pass through to :func:`run_collective` — in particular
-    ``backend={"event","vector"}`` (vector is the offline default, which is
-    what keeps full-grid sweeps at paper scale under a minute).
+    ``backend={"event","vector","device"}`` (vector is the offline default,
+    which is what keeps full-grid sweeps at paper scale under a minute).
+    ``backend="device"`` batches the whole grid: every policy plans
+    host-side, then all members run as **one** ``vmap``-ed device call
+    instead of a Python loop over simulations.
     """
+    if kwargs.get("backend") == "device":
+        return _run_policy_suite_device(tm, policies, **kwargs)
     return {p: run_collective(tm, p, **kwargs) for p in policies}
+
+
+def _run_policy_suite_device(
+    tm: TrafficMatrix,
+    policies: tuple[str, ...],
+    r1: float = 400e9,
+    r2: float = 50e9,
+    chunk_bytes: float = 4 * 2**20,
+    seed: int = 0,
+    probe_every: int = 64,
+    backend: str = "device",
+    rail_speeds=None,
+    fault_spec=None,
+) -> dict[str, CollectiveMetrics]:
+    """The batched policy-suite grid: one device dispatch for all policies."""
+    from .devicesim import PlannedJobs, check_device_supports, simulate_many_device
+
+    assert backend == "device"
+    topo = RailTopology(
+        tm.num_domains, tm.num_rails, r1=r1, r2=r2,
+        rail_speeds=rail_speeds, fault_spec=fault_spec,
+    )
+    check_device_supports(topo)
+    index = LinkIndex(topo)
+    planned = []
+    for p in policies:
+        ja, link_by_level, entry_rank = _plan_collective(
+            topo, index, tm, p, chunk_bytes, seed, probe_every
+        )
+        planned.append(
+            PlannedJobs(
+                link_by_level=link_by_level,
+                size=ja.size,
+                release=ja.release,
+                entry_rank=entry_rank,
+                flow_id=ja.flow_id,
+                round_id=ja.round_id,
+            )
+        )
+    results = simulate_many_device(index, planned, hop_latency=1e-6)
+    opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
+    return {
+        p: compute_metrics(res, topo, tm.name, p, opt)
+        for p, res in zip(policies, results)
+    }

@@ -35,6 +35,7 @@ __all__ = [
     "greedy_placement",
     "lp_placement",
     "score_placement",
+    "score_placements_batch",
     "search_placement",
     "PLACEMENT_METHODS",
 ]
@@ -229,6 +230,74 @@ def score_placement(
     ).makespan
 
 
+def score_placements_batch(
+    counts: np.ndarray,
+    placements: list[Placement],
+    num_rails: int,
+    bytes_per_token: float,
+    chunk_bytes: float = 256 * 2**10,
+    r1: float = 400e9,
+    r2: float = 50e9,
+    policy: str = "rails",
+    migration_d2: np.ndarray | None = None,
+    seed: int = 0,
+    probe_every: int = 64,
+) -> list[float]:
+    """Simulated CCTs of many candidates in one device dispatch.
+
+    The device-backend counterpart of looping :func:`score_placement`:
+    every candidate's traffic is planned host-side (the LPT spraying is
+    Python) and the fabric scans run as one ``vmap``-ed batch on the
+    jax backend — the whole candidate grid costs one dispatch, which is
+    what makes wide placement searches affordable. Candidates share the
+    fabric (same shard/rail counts); empty traffic scores 0.0 without
+    simulating. Per-candidate results match ``score_placement(...,
+    backend="device")`` exactly and the vector backend to float
+    tolerance.
+    """
+    from ..netsim.devicesim import (  # netsim imports sched; keep lazy
+        PlannedJobs,
+        check_device_supports,
+        simulate_many_device,
+    )
+    from ..netsim.fastsim import LinkIndex
+    from ..netsim.simulate import _plan_collective
+    from ..netsim.topology import RailTopology
+
+    if not placements:
+        return []
+    m = placements[0].num_shards
+    topo = RailTopology(m, num_rails, r1=r1, r2=r2)
+    check_device_supports(topo)
+    index = LinkIndex(topo)
+    scores = [0.0] * len(placements)
+    planned: list[PlannedJobs] = []
+    live: list[int] = []  # candidate index of each planned member
+    for i, pl in enumerate(placements):
+        tm = pl.traffic(
+            counts, bytes_per_token, num_rails, migration_d2=migration_d2
+        )
+        if tm.total_bytes() <= 0:
+            continue
+        ja, link_by_level, entry_rank = _plan_collective(
+            topo, index, tm, policy, chunk_bytes, seed, probe_every
+        )
+        planned.append(
+            PlannedJobs(
+                link_by_level=link_by_level,
+                size=ja.size,
+                release=ja.release,
+                entry_rank=entry_rank,
+                flow_id=ja.flow_id,
+                round_id=ja.round_id,
+            )
+        )
+        live.append(i)
+    for i, res in zip(live, simulate_many_device(index, planned)):
+        scores[i] = float(res.makespan)
+    return scores
+
+
 @dataclasses.dataclass(frozen=True)
 class PlacementCandidate:
     """A scored placement: simulated CCT + the bound it descended on."""
@@ -254,12 +323,15 @@ def search_placement(
     r2: float = 50e9,
     start: Placement | None = None,
     score: bool = True,
+    backend: str = "vector",
 ) -> PlacementCandidate:
     """Generate one candidate with ``method`` and score it.
 
-    ``score=False`` skips the vector simulation (bound only) — the
-    controller's drift check uses that cheap path and simulates only when
-    a migration is actually on the table.
+    ``score=False`` skips the simulation (bound only) — the controller's
+    drift check uses that cheap path and simulates only when a migration
+    is actually on the table. ``backend`` picks the scoring simulator
+    (scoring many candidates at once is cheaper through
+    :func:`score_placements_batch` on the device backend).
     """
     if method == "static":
         pl = (
@@ -285,7 +357,7 @@ def search_placement(
     cct = (
         score_placement(
             counts, pl, num_rails, bytes_per_token,
-            chunk_bytes=chunk_bytes, r2=r2,
+            chunk_bytes=chunk_bytes, r2=r2, backend=backend,
         )
         if score
         else float("nan")

@@ -15,7 +15,7 @@ observed tail back into the admission / brownout controllers for the
 next window — plan on window *k*'s observed state, simulate window
 *k+1*.
 
-Two simulation backends, mirroring the rest of the repo:
+Three simulation backends, mirroring the rest of the repo:
 
 * ``vector`` (default) — each window runs on the exact prefix-scan
   simulator; fabric state chains across windows through the per-link
@@ -26,6 +26,14 @@ Two simulation backends, mirroring the rest of the repo:
   (:class:`~repro.sched.control.RailProbeMonitor` feeding the EWMA
   estimator); degraded fabrics are piecewise-static ``fabric_schedule``
   segments (a "dead" rail crawls at ε speed).
+* ``device`` — same window loop and busy-until chaining, but each
+  window's scan runs on the jitted jax backend
+  (:func:`~repro.netsim.devicesim.simulate_chunk_arrays_device`): plan
+  window *k* on the host, scan window *k+1* on device with the
+  ``link_busy`` carry threaded through. Float-tolerance parity with
+  ``vector``; pays off on accelerator hosts where one dispatch replaces
+  per-window numpy round trips (on single-core CPU jax the vector loop
+  stays faster — see the README backends table).
 * ``event`` — each window runs the DES with the
   :class:`~repro.sched.feedback.RailHealthEstimator` and
   :class:`~repro.sched.feedback.DeadRailDetector` attached as live
@@ -151,6 +159,53 @@ def _speeds_at(fabric_schedule, t: float, n: int, rail_speeds) -> np.ndarray:
     return np.asarray(speeds, dtype=np.float64)
 
 
+class _SpeedCursor:
+    """Monotone cursor over the piecewise-static fabric schedule.
+
+    The window loop queries speeds at every epoch boundary; re-scanning
+    the whole segment list each time is O(windows × segments). Boundaries
+    advance monotonically, so a cursor resumes where the last query left
+    off — O(windows + segments) total — and the per-segment arrays are
+    materialized once instead of per window. Matches :func:`_speeds_at`
+    exactly (including the t=0 coverage error) and falls back to a fresh
+    scan if a caller ever queries backwards.
+    """
+
+    def __init__(self, fabric_schedule, n: int, rail_speeds):
+        self._static = None
+        self._segs: list[tuple[float, np.ndarray]] = []
+        if fabric_schedule is None:
+            self._static = (
+                np.ones(n)
+                if rail_speeds is None
+                else np.asarray(rail_speeds, dtype=np.float64)
+            )
+        else:
+            self._segs = [
+                (seg_t, np.asarray(seg_speeds, dtype=np.float64))
+                for seg_t, seg_speeds in fabric_schedule
+            ]
+        self._idx = -1  # last segment known to start at/before the cursor
+        self._t = -np.inf
+
+    def at(self, t: float) -> np.ndarray:
+        if self._static is not None:
+            return self._static
+        if t < self._t:
+            self._idx = -1  # backwards query: rescan (never hit in the loop)
+        self._t = t
+        while (
+            self._idx + 1 < len(self._segs)
+            and self._segs[self._idx + 1][0] <= t
+        ):
+            self._idx += 1
+        if self._idx < 0:
+            raise ValueError(
+                "fabric_schedule must cover t=0 (first segment t <= 0)"
+            )
+        return self._segs[self._idx][1]
+
+
 @dataclasses.dataclass
 class _WinRound:
     """One fabric round the gateway actually simulates.
@@ -166,12 +221,28 @@ class _WinRound:
 
 
 def _merged_tm(tms: list[TrafficMatrix], scale: float) -> TrafficMatrix:
-    """Sum decode traffic matrices (× brownout fan-out scale) into one."""
+    """Sum decode traffic matrices (× brownout fan-out scale) into one.
+
+    One output allocation and in-place accumulation — the old
+    ``d1 = d1 + tm.d1 * scale`` built two fresh arrays per member, which
+    dominated allocation churn in continuous-batching windows. The sum is
+    left-to-right over members and the scale distributes (``(a+b)*s`` vs
+    ``a*s + b*s`` differ in float), so the scale is applied per member to
+    keep the result bit-identical to the old expression.
+    """
     if len(tms) == 1 and scale == 1.0:
         return tms[0]
     d1 = tms[0].d1 * scale
+    scratch = np.empty_like(d1) if scale != 1.0 and len(tms) > 1 else None
     for tm in tms[1:]:
-        d1 = d1 + tm.d1 * scale
+        if scale == 1.0:
+            np.add(d1, tm.d1, out=d1)
+        else:
+            # Same rounding as `d1 + tm.d1 * scale` (one product, one
+            # add), through a single reused scratch instead of a fresh
+            # temporary per member.
+            np.multiply(tm.d1, scale, out=scratch)
+            np.add(d1, scratch, out=d1)
     return TrafficMatrix(
         d1=d1, d2=aggregate_domains(d1), name="decode-batch"
     )
@@ -233,7 +304,7 @@ def run_gateway(
         is scored against the same threshold.
       rail_speeds: static per-rail speed factors (either backend).
       fabric_schedule: piecewise-static ``[(t_start, speeds), ...]``
-        segments, vector backend only; speeds switch at the first window
+        segments, array backends only; speeds switch at the first window
         boundary at/after each segment start. The out-of-band probes read
         these true speeds — the analytic stand-in for a latency probe on
         a real fabric.
@@ -246,7 +317,9 @@ def run_gateway(
       feedback: control-off passthrough to ``run_serving`` (the
         controlled path governs EWMA feedback via ``control.feedback``).
       backend: ``vector`` (default; epoch windows chained exactly via the
-        per-link busy carry) or ``event``.
+        per-link busy carry), ``device`` (the same window loop with each
+        window's scan jitted on the jax backend, float-tolerance parity),
+        or ``event``.
     """
     if control is None:
         serving = run_serving(
@@ -285,18 +358,23 @@ def run_gateway(
             serving=serving,
             health=serving.streaming.health,
         )
-    if backend not in ("vector", "event"):
+    if backend not in ("vector", "event", "device"):
         raise ValueError(f"unknown backend {backend!r}")
     if backend == "event" and fabric_schedule is not None:
         raise ValueError("fabric_schedule is a vector-loop construct; "
                          "use fault_spec with backend='event'")
-    if backend == "vector" and fault_spec is not None:
+    if backend in ("vector", "device") and fault_spec is not None:
         from ..netsim.topology import RailTopology as _T
 
-        if _T(
+        probe_topo = _T(
             workload.num_domains, workload.num_rails,
             r1=r1, r2=r2, fault_spec=fault_spec,
-        ).has_dynamics:
+        )
+        if probe_topo.has_dynamics:
+            if backend == "device":
+                from ..netsim.devicesim import check_device_supports
+
+                check_device_supports(probe_topo)
             raise ValueError(
                 "non-static fault_spec needs backend='event'; the vector "
                 "loop models degraded rails via fabric_schedule/rail_speeds"
@@ -321,6 +399,14 @@ def _run_gateway_loop(
     from ..netsim.simulate import build_streaming_jobs
     from ..netsim.topology import RailTopology
 
+    array_backend = backend in ("vector", "device")
+    if backend == "device":
+        from ..netsim.devicesim import simulate_chunk_arrays_device
+
+        sim_arrays = simulate_chunk_arrays_device
+    else:
+        sim_arrays = simulate_chunk_arrays
+
     m, n = workload.num_domains, workload.num_rails
     ordered, releases, t0 = normalized_rounds(workload)
     if not ordered:
@@ -342,10 +428,10 @@ def _run_gateway_loop(
 
     # -- controllers (decisions frozen per window, updated at boundaries) --
     health = RailHealthEstimator(n, nominal_rate=r2) if (
-        control.feedback or backend == "vector"
+        control.feedback or array_backend
     ) else None
     monitor = None
-    if backend == "vector":
+    if array_backend:
         monitor = RailProbeMonitor(
             health,
             dead_speed=control.dead_speed,
@@ -372,7 +458,7 @@ def _run_gateway_loop(
         fault_spec=fault_spec if backend == "event" else None,
     )
     policy_cls = POLICIES.get(policy_name, Policy)
-    policy_mask_src = monitor if backend == "vector" else detector
+    policy_mask_src = monitor if array_backend else detector
     if issubclass(policy_cls, OnlineRailSPolicy):
         policy = make_policy(
             policy_name, nominal_topo, seed=seed, window=plan_window,
@@ -380,12 +466,12 @@ def _run_gateway_loop(
             replay=None, detector=policy_mask_src,
         )
     else:
-        if backend == "vector" and not issubclass(
+        if array_backend and not issubclass(
             policy_cls, (RailSPolicy, OnlineRailSPolicy)
         ):
             raise ValueError(
-                f"vector gateway requires a proactive planner; {policy_name!r} "
-                "reads live backlog estimates during the run"
+                f"{backend} gateway requires a proactive planner; "
+                f"{policy_name!r} reads live backlog estimates during the run"
             )
         policy = make_policy(policy_name, nominal_topo, seed=seed)
 
@@ -401,6 +487,11 @@ def _run_gateway_loop(
     p99_est: float | None = None  # gateway-level EWMA (brownout signal)
     link_busy = None  # created lazily from the first window's LinkIndex
     quantum = control.batch_quantum_s
+    speed_cursor = _SpeedCursor(fabric_schedule, n, rail_speeds)
+    # Fabric objects are pure functions of the speed vector; windows that
+    # share a schedule segment reuse them instead of rebuilding
+    # RailTopology + LinkIndex per window.
+    fabric_cache: dict[tuple, tuple] = {}
 
     ptr = 0
     num_rounds = len(ordered)
@@ -409,7 +500,7 @@ def _run_gateway_loop(
     while ptr < num_rounds:
         t_lo = k * epoch_s
         t_hi = (k + 1) * epoch_s
-        speeds_now = _speeds_at(fabric_schedule, t_lo, n, rail_speeds)
+        speeds_now = speed_cursor.at(t_lo)
         if monitor is not None:
             # Out-of-band probe at the window boundary — the only place
             # the vector loop touches ground truth, and only through the
@@ -501,11 +592,17 @@ def _run_gateway_loop(
                 [(w.release, w.tm) for w in win_rounds], chunk_bytes
             )
             policy.prepare(jobs)  # no-op for the online planner
-            if backend == "vector":
-                topo = RailTopology(
-                    m, n, r1=r1, r2=r2, rail_speeds=speeds_now
-                )
-                index = LinkIndex(topo)
+            if array_backend:
+                speeds_key = tuple(speeds_now.tolist())
+                cached = fabric_cache.get(speeds_key)
+                if cached is None:
+                    topo = RailTopology(
+                        m, n, r1=r1, r2=r2, rail_speeds=speeds_now
+                    )
+                    index = LinkIndex(topo)
+                    fabric_cache[speeds_key] = (topo, index)
+                else:
+                    topo, index = cached
                 if link_busy is None:
                     link_busy = np.zeros(index.num_links)
                 rel_batches: dict[float, dict] = {}
@@ -533,7 +630,7 @@ def _run_gateway_loop(
                     size[cid] = j.size
                     release[cid] = j.arrival_time
                     round_id[cid] = j.round_id
-                res = simulate_chunk_arrays(
+                res = sim_arrays(
                     index, link_by_level, size, release, entry_rank,
                     hop_latency=1e-6, round_id=round_id,
                     link_busy=link_busy,

@@ -216,6 +216,75 @@ def test_jax_uniform_fast_path_matches_host():
             np.testing.assert_allclose(np.asarray(loads), host.loads, rtol=1e-5)
 
 
+# -- rail_mask: survivor-masked device scheduling ----------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    weights=st.lists(st.integers(1, 1000), min_size=1, max_size=64),
+    n=st.integers(2, 8),
+    mask_seed=st.integers(0, 100),
+)
+def test_jax_rail_mask_matches_host(weights, n, mask_seed):
+    """Three-way masked parity: the jax scan path agrees with the host
+    fast path and the reference on which rails receive flows, and places
+    nothing on dead rails. Assignments compare exactly — integer-valued
+    weights are exactly representable in f32, so the device sort order
+    can't diverge from the host's f64 order and argmin ties break toward
+    the lowest alive index on both paths; loads at f32 tolerance."""
+    w = np.asarray(weights, dtype=float)
+    rng = np.random.default_rng(mask_seed)
+    mask = rng.random(n) < 0.7
+    if not mask.any():
+        mask[int(rng.integers(n))] = True
+    host = lpt_schedule(w, n, rail_mask=mask)
+    ref = lpt_schedule_reference(w, n, rail_mask=mask)
+    np.testing.assert_array_equal(host.assignment, ref.assignment)
+    a, loads, _ = lpt_schedule_jax(jnp.asarray(w, jnp.float32), n, rail_mask=mask)
+    np.testing.assert_array_equal(np.asarray(a), host.assignment)
+    np.testing.assert_allclose(np.asarray(loads), host.loads, rtol=1e-5)
+    assert mask[np.asarray(a)].all()  # no flow landed on a dead rail
+
+
+def test_jax_rail_mask_uniform_path_matches_host():
+    for n in (2, 4, 8):
+        mask = np.ones(n, dtype=bool)
+        mask[n // 2] = False
+        for f in (1, 7, 64, 65):
+            w = np.full(f, 2.0)
+            host = lpt_schedule(w, n, rail_mask=mask)
+            a, loads, _ = lpt_schedule_jax(
+                jnp.asarray(w, jnp.float32), n, assume_uniform=True,
+                rail_mask=mask,
+            )
+            np.testing.assert_array_equal(np.asarray(a), host.assignment)
+            np.testing.assert_allclose(np.asarray(loads), host.loads, rtol=1e-5)
+
+
+def test_jax_rail_mask_jits_with_traced_mask():
+    import functools
+    import jax
+
+    fn = jax.jit(
+        functools.partial(lpt_schedule_jax),
+        static_argnames=("num_rails",),
+    )
+    w = jnp.asarray(np.full(16, 2.0), jnp.float32)
+    mask = jnp.asarray([True, False, True, True])
+    a, loads, _ = fn(w, num_rails=4, rail_mask=mask)
+    host = lpt_schedule(np.full(16, 2.0), 4, rail_mask=np.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(a), host.assignment)
+    assert float(loads[1]) == 0.0  # dead rail untouched
+
+
+def test_jax_rail_mask_rejects_all_dead_and_bad_shape():
+    w = jnp.asarray(np.ones(4), jnp.float32)
+    with pytest.raises(ValueError):
+        lpt_schedule_jax(w, 4, rail_mask=np.zeros(4, dtype=bool))
+    with pytest.raises(ValueError):
+        lpt_schedule_jax(w, 4, rail_mask=np.ones(3, dtype=bool))
+
+
 # -- LptState: incremental windowed assignment -------------------------------
 
 
