@@ -33,15 +33,26 @@ import numpy as np
 from repro.core.lpt import lpt_schedule, lpt_schedule_reference
 from repro.core.lp import closed_form_opt, solve_minmax_lp
 from repro.core.theorems import theorem2_optimal_time
+from repro.core.traffic import (
+    TrafficMatrix,
+    rl_phase_counts,
+    uniform_workload,
+)
 from repro.netsim import (
     FaultSpec,
+    FecConfig,
+    LinkIndex,
     LossConfig,
+    MultiPodFabric,
+    build_job_arrays,
+    make_policy,
     run_collective,
     run_policy_suite,
     run_streaming_collective,
     step_profile,
 )
-from repro.sched import run_pipeline
+from repro.placement import Placement
+from repro.sched import RoutingReplayState, run_pipeline
 
 from . import paper_workloads as W
 
@@ -919,6 +930,213 @@ def bench_online_window_sweep() -> None:
             )
 
 
+def _xdc_moe_tm(m: int, n: int, bytes_per_pair: float, top_k: int, seed: int) -> TrafficMatrix:
+    """MoE-gated sparse all-to-all: each sender GPU routes to ``top_k``
+    remote (domain, gpu) experts with lognormal flow sizes.
+
+    Few large flows per sender is exactly where the flat policy's static
+    ``rail % wan_lanes`` spray leaves WAN lanes unbalanced — dense uniform
+    traffic self-averages over lanes and hides the hierarchy (Theorem 3's
+    symmetry, one tier up); ``bench_xdc`` emits both regimes to show it.
+    """
+    rng = np.random.default_rng(seed)
+    d1 = np.zeros((m, n, m, n))
+    for d in range(m):
+        for g in range(n):
+            dsts = rng.choice(
+                [x for x in range(m) if x != d], size=top_k, replace=False
+            )
+            for dd in dsts:
+                gg = int(rng.integers(0, n))
+                d1[d, g, int(dd), gg] = bytes_per_pair * rng.lognormal(0.0, 0.5)
+    return TrafficMatrix(d1=d1, d2=d1.sum(axis=(1, 3)), name=f"xdc-moe-top{top_k}")
+
+
+def _wan_lane_imbalance(tm: TrafficMatrix, topo, policy_name: str, chunk: float) -> float:
+    """Mean over active pod pairs of max-lane-load / mean-lane-load on the
+    WAN tier under a policy's static plan (1.0 = perfectly lane-balanced)."""
+    ja = build_job_arrays(tm, chunk_bytes=chunk)
+    index = LinkIndex(topo)
+    pol = make_policy(policy_name, topo, seed=0)
+    lbl = pol.plan_arrays(ja, index)
+    wan_links = lbl[:, index.level_of_kind["wan"]]
+    loads = np.zeros(index.num_links)
+    mask = wan_links >= 0
+    np.add.at(loads, wan_links[mask], ja.size[mask])
+    imbs = []
+    p = topo.num_pods
+    for ps in range(p):
+        for pd in range(p):
+            if ps == pd:
+                continue
+            lane_loads = loads[index.wan[ps, pd]]
+            if lane_loads.sum() > 0:
+                imbs.append(lane_loads.max() / lane_loads.mean())
+    return float(np.mean(imbs)) if imbs else 1.0
+
+
+def bench_xdc() -> None:
+    """Hierarchical multi-pod fabrics: hier-LPT vs flat LPT vs reactive.
+
+    Sweeps oversubscription x WAN RTT on a 4-pod fabric (2 domains/pod)
+    carrying MoE-gated sparse traffic, reporting per-policy CCT, the
+    hier-vs-flat margin, and the WAN per-lane imbalance that explains it.
+    A dense-uniform row quantifies the symmetry break: uniform send keeps
+    Theorem 3's balance one tier up and the hierarchy-aware pass is a
+    no-op; gated traffic breaks it and two-level LPT wins the difference.
+    FEC rows compare XOR parity against go-back-N on the lossy WAN tier.
+    """
+    pods, dpp, n, lanes = 4, 2, 4, 4
+    m = pods * dpp
+    chunk = 2 * 2**20
+    tm = _xdc_moe_tm(m, n, bytes_per_pair=8 * 2**20, top_k=4, seed=1)
+    grid = [(16.0, 10e-3)] if W.QUICK else [
+        (4.0, 1e-3), (4.0, 10e-3), (16.0, 1e-3), (16.0, 10e-3)
+    ]
+    for oversub, rtt in grid:
+        topo = MultiPodFabric(
+            num_pods=pods, domains_per_pod=dpp, num_rails=n,
+            oversub=oversub, wan_rtt=rtt, wan_lanes=lanes,
+        )
+        tag = f"xdc_o{oversub:g}_rtt{rtt * 1e3:g}ms"
+        res, us = {}, {}
+        for pol in ("ecmp", "rails", "hier-rails"):
+            res[pol], us[pol] = _timed(
+                lambda p=pol: run_collective(
+                    tm, p, chunk_bytes=chunk, fabric=topo, backend="vector"
+                )
+            )
+            _emit(
+                f"{tag}_{pol}", us[pol],
+                f"{res[pol].makespan * 1e3:.2f}ms_opt_ratio="
+                f"{res[pol].opt_ratio:.2f}",
+                bench=f"{tag}_{pol}", backend="vector",
+            )
+        _emit(
+            f"{tag}_hier_vs_flat", us["rails"] + us["hier-rails"],
+            f"{(1 - res['hier-rails'].makespan / res['rails'].makespan) * 100:.2f}"
+            "pct_cct_cut",
+            bench=f"{tag}_hier_vs_flat", backend="vector",
+        )
+    # The symmetry break, quantified: WAN lane imbalance under each plan,
+    # and the hier margin collapsing to ~0 on dense-uniform traffic.
+    topo = MultiPodFabric(
+        num_pods=pods, domains_per_pod=dpp, num_rails=n,
+        oversub=16.0, wan_rtt=10e-3, wan_lanes=lanes,
+    )
+    for pol in ("rails", "hier-rails"):
+        imb, us_i = _timed(lambda p=pol: _wan_lane_imbalance(tm, topo, p, chunk))
+        _emit(
+            f"xdc_wan_lane_imbalance_{pol}", us_i, f"{imb:.3f}x_mean_lane",
+            bench=f"xdc_wan_lane_imbalance_{pol}", backend="vector",
+        )
+    utm = uniform_workload(m, n, bytes_per_pair=2 * 2**20)
+    uflat, us_uf = _timed(
+        lambda: run_collective(utm, "rails", chunk_bytes=chunk, fabric=topo,
+                               backend="vector")
+    )
+    uhier, us_uh = _timed(
+        lambda: run_collective(utm, "hier-rails", chunk_bytes=chunk, fabric=topo,
+                               backend="vector")
+    )
+    _emit(
+        "xdc_uniform_hier_vs_flat", us_uf + us_uh,
+        f"{(1 - uhier.makespan / uflat.makespan) * 100:.2f}pct_cct_cut",
+        bench="xdc_uniform_hier_vs_flat", backend="vector",
+    )
+    # FEC vs go-back-N on the lossy WAN: XOR parity absorbs losses without
+    # waiting out the 10 ms RTT's RTO (wins under loss), but its r/k
+    # redundancy bandwidth is a pure tax at zero loss (loses there).
+    fec_chunk = 2**20  # >= k chunks per lane so groups actually fill
+    for rate, label in ((0.01, "loss1pct"), (0.0, "loss0")):
+        loss = LossConfig(rate=rate, rto=2 * 10e-3, links="wan")
+        out = {}
+        us_fec = 0.0
+        for variant, fec in (("gbn", None), ("fec", FecConfig(k=4, r=1))):
+            ftopo = MultiPodFabric(
+                num_pods=pods, domains_per_pod=dpp, num_rails=n,
+                oversub=16.0, wan_rtt=10e-3, wan_lanes=lanes,
+                fault_spec=FaultSpec(loss=loss, fec=fec, seed=7),
+            )
+            out[variant], us_v = _timed(
+                lambda t=ftopo: run_collective(
+                    tm, "hier-rails", chunk_bytes=fec_chunk, fabric=t,
+                    backend="event",
+                )
+            )
+            us_fec += us_v
+        _emit(
+            f"xdc_fec_vs_gbn_{label}", us_fec,
+            f"{(1 - out['fec'].makespan / out['gbn'].makespan) * 100:.2f}"
+            "pct_cct_cut",
+            bench=f"xdc_fec_vs_gbn_{label}", backend="event",
+        )
+
+
+def bench_rl_phases() -> None:
+    """RL rollout/train lurches: replay forecast quality across phase
+    boundaries (PR 8's open question), scored like the gating-drift sweep.
+
+    ``rl_phase_counts`` alternates peaky rollout gating with flat train
+    gating; the routing distribution *lurches* at each boundary instead of
+    drifting. Pure last-iteration replay (alpha=1) tracks within-phase
+    drift best but eats the full lurch at each boundary; EWMA smoothing
+    trades steady-state lag for boundary shock absorption. The CCT rows
+    re-score run_pipeline's replay warm-start on the lurching stream.
+    """
+    m, n = W.M, W.N
+    rounds = 8 if W.QUICK else 24
+    phase_len = 2 if W.QUICK else 6
+    tokens = float(m * (m - 1) * 64)
+    counts_rounds, shard, phases = rl_phase_counts(
+        m, num_experts=4 * m, num_rounds=rounds, tokens_per_round=tokens,
+        rollout_len=phase_len, train_len=phase_len, seed=9,
+        return_phases=True,
+    )
+    placement = Placement.round_robin(4 * m, m)
+    bpt = float(2**17)  # 128 KiB/token -> ~8 MiB mean off-diagonal entry
+    tms = [
+        placement.traffic(c, bpt, n, name=f"rl-{phases[i]}-{i}")
+        for i, c in enumerate(counts_rounds)
+    ]
+    forecasters = {"replay": 1.0, "ewma": 0.35}
+    for name, alpha in forecasters.items():
+        def score(alpha=alpha):
+            errs = {"boundary": [], "steady": []}
+            rs = RoutingReplayState(m, n, alpha=alpha)
+            prev = None
+            for tm, phase in zip(tms, phases):
+                realized = tm.domain_send_totals()
+                if rs.iterations > 0:
+                    predicted = rs.expected_totals()
+                    err = float(
+                        np.abs(predicted - realized).sum()
+                        / max(np.abs(realized).sum(), 1e-12)
+                    )
+                    errs["boundary" if phase != prev else "steady"].append(err)
+                rs.update_from_loads(realized)
+                prev = phase
+            return errs
+        errs, us = _timed(score)
+        _emit(
+            f"rl_forecast_err_{name}", us,
+            f"boundary={np.mean(errs['boundary']):.3f}"
+            f"_steady={np.mean(errs['steady']):.3f}_rel_l1",
+            bench=f"rl_forecast_err_{name}",
+        )
+    speeds = [1.0] * (n - 1) + [0.5]
+    kwargs = dict(
+        gap_fraction=0.5, chunk_bytes=W.CHUNK, rail_speeds=speeds, feedback=True
+    )
+    off, us_o = _timed(lambda: run_pipeline(tms, use_replay=False, **kwargs))
+    rep, us_r = _timed(lambda: run_pipeline(tms, use_replay=True, **kwargs))
+    _emit(
+        "rl_phase_replay_cct_vs_noreplay", us_o + us_r,
+        f"{rep.makespan / off.makespan:.3f}x_noreplay",
+        bench="rl_phase_replay_cct", backend="event",
+    )
+
+
 def parity_check() -> int:
     """CI gate: the simulation backends must agree on the quick config.
 
@@ -998,6 +1216,8 @@ BENCHES = {
     "serving_slo": bench_serving_slo,
     "placement": bench_placement,
     "recovery": bench_recovery,
+    "xdc": bench_xdc,
+    "rl_phases": bench_rl_phases,
 }
 
 

@@ -8,6 +8,8 @@ render the netsim benchmark trajectory across BENCH_netsim.json snapshots.
     PYTHONPATH=src python scripts/perf_report.py --placement BENCH_a.json ...
     PYTHONPATH=src python scripts/perf_report.py --recovery BENCH_a.json ...
     PYTHONPATH=src python scripts/perf_report.py --slo BENCH_a.json ...
+    PYTHONPATH=src python scripts/perf_report.py --xdc BENCH_a.json ...
+    PYTHONPATH=src python scripts/perf_report.py --rl-phases BENCH_a.json ...
 
 ``--fault-sweep`` restricts the trajectory to the fault-sweep grid (rows
 whose bench key starts with ``fault_``): one row per (loss rate ×
@@ -36,6 +38,16 @@ and the serving rail-down p99-TTFT recovery leg.
 starting with ``slo_``): one row per (offered load × fabric) cell,
 carrying the controlled-over-uncontrolled goodput ordering — the
 admission / brownout overload-robustness margin across snapshots.
+
+``--xdc`` restricts it to the hierarchical-fabric grid (bench keys
+starting with ``xdc``): one row per (oversubscription × WAN RTT) cell
+and policy, carrying the hier-over-flat CCT margin, the WAN per-lane
+imbalance, and the FEC-vs-go-back-N ordering across snapshots.
+
+``--rl-phases`` restricts it to the RL rollout/train forecast study
+(bench keys starting with ``rl_``): replay-vs-EWMA forecast error at
+phase boundaries vs steady state, plus the replay warm-start CCT ratio
+on the lurching stream.
 
 Netsim trajectory rows are keyed by **(bench, backend, size)** — not by
 bench name alone — so the event and vector measurements of one benchmark
@@ -156,6 +168,8 @@ if __name__ == "__main__":
         "--placement": "plc_",
         "--recovery": "recov_",
         "--slo": "slo_",
+        "--xdc": "xdc",
+        "--rl-phases": "rl_",
     }
     selected = [f for f in flags if f in args]
     args = [a for a in args if a not in flags]

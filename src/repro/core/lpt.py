@@ -24,6 +24,17 @@ Three interchangeable implementations:
 heap survives across re-planning windows, so online schedulers extend a
 plan in O(window · log N) instead of re-sorting the full backlog.
 
+:func:`hier_lpt_schedule` is the two-level form for hierarchical
+(multi-pod) fabrics: level 1 is the flat per-domain rail LPT unchanged —
+Theorem 3 still wants every NIC balanced — and level 2 re-runs LPT *per
+destination pod* over the scarce inter-pod wan lanes. Flat LPT balances
+bytes per rail summed over all destinations; nothing controls how each
+rail's bytes split across destination pods, so the static ``lane = rail
+mod L`` spray can overload one wan lane while another idles. The second
+level restores the Theorem-3 symmetry argument one tier up: each source
+domain locally balancing its per-pod egress over L lanes makes the pod's
+aggregate per-lane load uniform.
+
 All return the assignment vector, the final per-rail loads, and the load
 MSE against the uniform target (paper eq. 6 / Algorithm 2 step 6).
 """
@@ -41,9 +52,11 @@ import jax.numpy as jnp
 __all__ = [
     "LptResult",
     "LptState",
+    "HierLptResult",
     "lpt_schedule",
     "lpt_schedule_reference",
     "lpt_schedule_jax",
+    "hier_lpt_schedule",
     "round_robin_schedule",
     "random_schedule",
     "load_mse",
@@ -511,6 +524,101 @@ def lpt_schedule_jax(
             jnp.where(mask, (loads - mean_alive) ** 2, 0.0)
         ) / num_alive_f
     return assignment, loads, mse
+
+
+@dataclasses.dataclass(frozen=True)
+class HierLptResult:
+    """Outcome of a two-level (rails x wan-lanes) hierarchical LPT pass.
+
+    Attributes:
+      rail: the level-1 :class:`LptResult` over rails — byte-identical to
+        the flat scheduler's (hier-LPT never trades NIC balance away).
+      lane: ``(F,)`` int — wan-lane index per chunk, ``-1`` for intra-pod
+        chunks (which never touch a wan link).
+      lane_loads: dst pod -> ``(L,)`` accumulated per-lane bytes.
+      lane_mse: mean over destination pods of the per-lane load MSE —
+        the level-2 analogue of eq. 6.
+    """
+
+    rail: LptResult
+    lane: np.ndarray
+    lane_loads: dict[int, np.ndarray]
+    lane_mse: float
+
+
+def hier_lpt_schedule(
+    weights: np.ndarray,
+    num_rails: int,
+    num_lanes: int,
+    dst_pods: np.ndarray,
+    src_pod: int,
+    source_ids: np.ndarray | None = None,
+    initial_loads: np.ndarray | None = None,
+    rail_mask: np.ndarray | None = None,
+    lane_loads: dict[int, np.ndarray] | None = None,
+) -> HierLptResult:
+    """Two-level LPT for one source domain on a multi-pod fabric.
+
+    Level 1 is exactly :func:`lpt_schedule` over rails (all chunks, intra-
+    and inter-pod alike — the NIC is serialized either way, and keeping it
+    identical preserves flat-fabric parity). Level 2 runs one independent
+    LPT per remote destination pod over the ``L = num_lanes`` wan links of
+    that pod pair, balancing this domain's per-pod egress across the
+    scarce oversubscribed lanes; summed over the pod's domains the
+    per-lane load is uniform (the Theorem-3 argument, one tier up).
+
+    Args:
+      weights: ``(F,)`` chunk sizes for this source domain.
+      num_rails: N (level-1 bins).
+      num_lanes: L, wan links per ordered pod pair (level-2 bins).
+      dst_pods: ``(F,)`` destination pod per chunk.
+      src_pod: this domain's pod — chunks with ``dst_pods == src_pod``
+        get lane ``-1``.
+      source_ids / initial_loads / rail_mask: forwarded to level 1
+        untouched (feedback pre-charges and survivor masks keep working).
+      lane_loads: optional persistent dst-pod -> ``(L,)`` LoadStates for
+        incremental use; mutated in place when given.
+
+    Returns a :class:`HierLptResult`.
+    """
+    rail_res = lpt_schedule(
+        weights,
+        num_rails,
+        source_ids=source_ids,
+        initial_loads=initial_loads,
+        rail_mask=rail_mask,
+    )
+    weights = np.asarray(weights, dtype=np.float64)
+    dst_pods = np.asarray(dst_pods)
+    if dst_pods.shape != weights.shape:
+        raise ValueError("dst_pods must match weights shape")
+    if num_lanes < 1:
+        raise ValueError("num_lanes must be >= 1")
+    lane = np.full(weights.size, -1, dtype=np.int64)
+    out_loads: dict[int, np.ndarray] = {}
+    mses: list[float] = []
+    for q in np.unique(dst_pods).tolist():
+        if q == src_pod:
+            continue
+        idx = np.flatnonzero(dst_pods == q)
+        init = None if lane_loads is None else lane_loads.get(q)
+        sub = lpt_schedule(
+            weights[idx],
+            num_lanes,
+            source_ids=None if source_ids is None else np.asarray(source_ids)[idx],
+            initial_loads=init,
+        )
+        lane[idx] = sub.assignment
+        out_loads[q] = sub.loads
+        if lane_loads is not None:
+            lane_loads[q] = sub.loads
+        mses.append(sub.mse)
+    return HierLptResult(
+        rail=rail_res,
+        lane=lane,
+        lane_loads=out_loads,
+        lane_mse=float(np.mean(mses)) if mses else 0.0,
+    )
 
 
 def round_robin_schedule(weights: np.ndarray, num_rails: int) -> LptResult:

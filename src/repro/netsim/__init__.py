@@ -25,6 +25,7 @@ exactly-once retry onto surviving rails, all switched through a
 from .balancers import (
     POLICIES,
     EcmpPolicy,
+    HierRailSPolicy,
     MinRttPolicy,
     OnlineRailSPolicy,
     PlbPolicy,
@@ -40,6 +41,7 @@ from .linkmodel import (
     EcnConfig,
     FailStopEvent,
     FaultSpec,
+    FecConfig,
     GilbertElliott,
     LinkModel,
     LossConfig,
@@ -70,6 +72,6 @@ from .simulate import (
     run_policy_suite,
     run_streaming_collective,
 )
-from .topology import Link, RailTopology
+from .topology import Fabric, Link, MultiPodFabric, RailTopology
 
 __all__ = [k for k in dir() if not k.startswith("_")]

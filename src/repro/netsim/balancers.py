@@ -28,6 +28,13 @@ explicitly:
   EWMA rail-health feedback and a routing-replay forecast of bytes still
   to come. With every chunk released at t=0 and no feedback it reproduces
   RailS exactly (the offline-parity anchor).
+* **hier-RailS** — two-level RailS for multi-pod fabrics
+  (:func:`repro.core.lpt.hier_lpt_schedule`): rails exactly as RailS, and
+  inter-pod chunks additionally LPT'd per destination pod over the scarce
+  wan lanes. Flat RailS on a multi-pod fabric sprays lane ``rail mod L``
+  — per-rail balance says nothing about per-lane balance, which is the
+  uniform-send symmetry break the cross-DC bench quantifies. On a flat
+  fabric (P=1) hier-RailS degenerates to RailS bit-exactly.
 
 Under fabric dynamics (:mod:`repro.netsim.linkmodel`) the reactive
 policies' shared estimate — ``Engine.path_delay`` — additionally folds in
@@ -45,7 +52,7 @@ import math
 
 import numpy as np
 
-from ..core.lpt import LptState, lpt_schedule
+from ..core.lpt import LptState, hier_lpt_schedule, lpt_schedule
 from ..sched.feedback import speed_precharge
 from .events import ChunkJob, Engine
 from .topology import RailTopology
@@ -57,6 +64,7 @@ __all__ = [
     "MinRttPolicy",
     "RepsPolicy",
     "RailSPolicy",
+    "HierRailSPolicy",
     "OnlineRailSPolicy",
     "make_policy",
     "POLICIES",
@@ -118,9 +126,11 @@ class EcmpPolicy(Policy):
 
     def plan_arrays(self, ja, index):
         """Array-native plan: the per-flow hash is stateless, so the whole
-        collective's spine choices vectorize to one splitmix64 pass."""
-        from .fastsim import NUM_LEVELS
-
+        collective's spine choices vectorize to one splitmix64 pass. On a
+        multi-pod fabric the leaf/spine ids are pod-translated and
+        cross-pod chunks recycle the hash as wan-lane entropy, exactly
+        like :meth:`RailTopology.spine_path`."""
+        topo = self.topo
         # uint64 arithmetic wraps, so the scalar path's explicit & masks
         # are implicit here.
         x = ja.flow_id.astype(np.uint64)
@@ -128,15 +138,35 @@ class EcmpPolicy(Policy):
         x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
         x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
         x = x ^ (x >> np.uint64(31))
-        spine = (x % np.uint64(self.topo.num_spines)).astype(np.int64)
+        spine = (x % np.uint64(topo.num_spines)).astype(np.int64)
         src_rail = ja.src_gpu
         dst_rail = ja.dst_gpu
-        lbl = np.full((ja.num_chunks, NUM_LEVELS), -1, dtype=index.id_dtype, order="F")
+        f = ja.num_chunks
+        lbl = np.full((f, index.num_levels), -1, dtype=index.id_dtype, order="F")
         lbl[:, 0] = index.up[ja.src_domain, src_rail]
-        lbl[:, 3] = index.down[ja.dst_domain, dst_rail]
-        cross = src_rail != dst_rail
-        lbl[cross, 1] = index.l2s[src_rail[cross], spine[cross]]
-        lbl[cross, 2] = index.s2l[spine[cross], dst_rail[cross]]
+        lbl[:, index.down_level] = index.down[ja.dst_domain, dst_rail]
+        l2s_lv = index.level_of_kind["l2s"]
+        s2l_lv = index.level_of_kind["s2l"]
+        if index.wan is None:
+            cross = src_rail != dst_rail
+            lbl[cross, l2s_lv] = index.l2s[src_rail[cross], spine[cross]]
+            lbl[cross, s2l_lv] = index.s2l[spine[cross], dst_rail[cross]]
+        else:
+            dpp = topo.domains_per_pod
+            ps = ja.src_domain // dpp
+            pd = ja.dst_domain // dpp
+            same = ps == pd
+            cross = (src_rail != dst_rail) & same
+            leaf_s = ps * topo.n + src_rail
+            leaf_d = pd * topo.n + dst_rail
+            sp = ps * topo.num_spines + (spine % topo.num_spines)
+            lbl[cross, l2s_lv] = index.l2s[leaf_s[cross], sp[cross]]
+            lbl[cross, s2l_lv] = index.s2l[sp[cross], leaf_d[cross]]
+            xp = ~same
+            lane = spine % topo.wan_lanes
+            lbl[xp, index.level_of_kind["wan"]] = index.wan[
+                ps[xp], pd[xp], lane[xp]
+            ]
         return lbl
 
     def __init__(self, topo: RailTopology, seed: int = 0):
@@ -296,7 +326,7 @@ class RailSPolicy(Policy):
         byte-identical to :meth:`prepare`'s, so assignments match the event
         path exactly.
         """
-        from .fastsim import NUM_LEVELS, _group_bounds
+        from .fastsim import _group_bounds
 
         f = ja.num_chunks
         rail = np.empty(f, dtype=np.int64)
@@ -307,14 +337,133 @@ class RailSPolicy(Policy):
                     ja.size[s:e], self.topo.n, source_ids=ja.src_gpu[s:e]
                 )
                 rail[s:e] = res.assignment
-        lbl = np.full((f, NUM_LEVELS), -1, dtype=index.id_dtype, order="F")
+        lbl = np.full((f, index.num_levels), -1, dtype=index.id_dtype, order="F")
         if f:
             lbl[:, 0] = index.up[ja.src_domain, rail]
-            lbl[:, 3] = index.down[ja.dst_domain, rail]
+            lbl[:, index.down_level] = index.down[ja.dst_domain, rail]
+            self._fill_wan(ja, index, rail, lbl)
+        return lbl
+
+    def _fill_wan(self, ja, index, rail, lbl) -> None:
+        """Cross-pod chunks ride the rail's default wan lane (``rail mod
+        L`` — :meth:`RailTopology.rail_path`'s static spray). Hier-RailS
+        overrides this with its per-pod lane LPT."""
+        if index.wan is None:
+            return
+        dpp = self.topo.domains_per_pod
+        ps = ja.src_domain // dpp
+        pd = ja.dst_domain // dpp
+        xp = ps != pd
+        if xp.any():
+            lane = rail % self.topo.wan_lanes
+            lbl[xp, index.level_of_kind["wan"]] = index.wan[
+                ps[xp], pd[xp], lane[xp]
+            ]
+
+    def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
+        rail = self._assignment[job.chunk_id]
+        return self.topo.rail_path(job.src_domain, job.dst_domain, rail)
+
+
+class HierRailSPolicy(RailSPolicy):
+    """Two-level RailS for hierarchical fabrics (`hier_lpt_schedule`).
+
+    Level 1 (rails) is byte-identical to :class:`RailSPolicy` — every
+    chunk still serializes through one NIC, so NIC balance stays the
+    first-order term and flat-fabric behavior is bit-exact. Level 2 LPTs
+    each source domain's *inter-pod* chunks per destination pod over the
+    ``L`` wan lanes of that pod pair, replacing flat RailS's static
+    ``lane = rail mod L`` spray. Per-rail balance says nothing about how
+    a rail's bytes split across destination pods; under skewed (MoE-gated)
+    traffic the static spray loads wan lanes unevenly — the uniform-send
+    symmetry break of the cross-DC study. The lane LPT carries a shared
+    per-source-pod load state across the pod's domains (the
+    ``lane_loads`` carry of :func:`hier_lpt_schedule`), so the *pod
+    aggregate* per-lane load is balanced — Theorem 3 restored one tier
+    up, by coordination rather than by symmetry.
+    """
+
+    name = "hier-rails"
+
+    def __init__(self, topo: RailTopology, seed: int = 0):
+        super().__init__(topo, seed)
+        self._lane: dict[int, int] = {}  # chunk_id -> wan lane (-1 intra)
+
+    def prepare(self, jobs_by_sender: dict[tuple[int, int], list[ChunkJob]]) -> None:
+        topo = self.topo
+        if topo.num_pods <= 1:
+            return super().prepare(jobs_by_sender)
+        by_domain: dict[int, list[ChunkJob]] = {}
+        for (_d, _g), jobs in jobs_by_sender.items():
+            for j in jobs:
+                by_domain.setdefault(j.src_domain, []).append(j)
+        dpp = topo.domains_per_pod
+        # Shared lane-load carry per source pod: later domains see the wan
+        # bytes earlier siblings already placed, balancing the aggregate.
+        pod_lanes: dict[int, dict[int, np.ndarray]] = {}
+        for domain in sorted(by_domain):
+            jobs = by_domain[domain]
+            weights = np.array([j.size for j in jobs])
+            src_ids = np.array([j.src_gpu for j in jobs])
+            dst_pods = np.array([j.dst_domain // dpp for j in jobs])
+            res = hier_lpt_schedule(
+                weights,
+                topo.n,
+                topo.wan_lanes,
+                dst_pods,
+                domain // dpp,
+                source_ids=src_ids,
+                lane_loads=pod_lanes.setdefault(domain // dpp, {}),
+            )
+            for j, rail, lane in zip(jobs, res.rail.assignment, res.lane):
+                self._assignment[j.chunk_id] = int(rail)
+                self._lane[j.chunk_id] = int(lane)
+
+    def plan_arrays(self, ja, index):
+        topo = self.topo
+        if topo.num_pods <= 1:
+            return super().plan_arrays(ja, index)
+        from .fastsim import _group_bounds
+
+        f = ja.num_chunks
+        rail = np.empty(f, dtype=np.int64)
+        lane = np.full(f, -1, dtype=np.int64)
+        dpp = topo.domains_per_pod
+        src_pods = ja.src_domain // dpp
+        dst_pods = ja.dst_domain // dpp
+        if f:
+            pod_lanes: dict[int, dict[int, np.ndarray]] = {}
+            starts, ends = _group_bounds(ja.src_domain)
+            for s, e in zip(starts.tolist(), ends.tolist()):
+                res = hier_lpt_schedule(
+                    ja.size[s:e],
+                    topo.n,
+                    topo.wan_lanes,
+                    dst_pods[s:e],
+                    int(src_pods[s]),
+                    source_ids=ja.src_gpu[s:e],
+                    lane_loads=pod_lanes.setdefault(int(src_pods[s]), {}),
+                )
+                rail[s:e] = res.rail.assignment
+                lane[s:e] = res.lane
+        lbl = np.full((f, index.num_levels), -1, dtype=index.id_dtype, order="F")
+        if f:
+            lbl[:, 0] = index.up[ja.src_domain, rail]
+            lbl[:, index.down_level] = index.down[ja.dst_domain, rail]
+            xp = lane >= 0
+            if xp.any():
+                lbl[xp, index.level_of_kind["wan"]] = index.wan[
+                    src_pods[xp], dst_pods[xp], lane[xp]
+                ]
         return lbl
 
     def choose_path(self, eng: Engine, job: ChunkJob) -> list[str]:
         rail = self._assignment[job.chunk_id]
+        lane = self._lane.get(job.chunk_id, -1)
+        if lane >= 0:
+            return self.topo.rail_path(
+                job.src_domain, job.dst_domain, rail, lane=lane
+            )
         return self.topo.rail_path(job.src_domain, job.dst_domain, rail)
 
 
@@ -442,6 +591,7 @@ POLICIES = {
         MinRttPolicy,
         RepsPolicy,
         RailSPolicy,
+        HierRailSPolicy,
         OnlineRailSPolicy,
     )
 }

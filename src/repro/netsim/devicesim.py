@@ -17,10 +17,11 @@ associative form scans ``(flag, t, b)`` triples::
 
 where ``flag`` marks busy-queue (= link-run) heads after one multi-key
 ``lax.sort`` by ``(link, clamped arrival, original arrival, start-time
-tie, rank tie)``. Levels sweep topologically (``up -> l2s -> s2l ->
-down``) exactly like the vector backend; per-link ``link_busy`` carry is
-an arrival clamp whose sort keys preserve the pre-clamp order, mirroring
-``fastsim._busy_clamped``.
+tie, rank tie)``. Levels sweep topologically in the fabric's
+``level_kinds`` order (``up -> l2s -> s2l -> down`` flat, with a ``wan``
+level on multi-pod fabrics) exactly like the vector backend; per-link
+``link_busy`` carry is an arrival clamp whose sort keys preserve the
+pre-clamp order, mirroring ``fastsim._busy_clamped``.
 
 **Two scan kernels.** The inner segmented scan has a Pallas kernel —
 grid over blocks of per-link job lanes, a sequential ``fori_loop`` over
@@ -62,7 +63,6 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from .fastsim import (
-    NUM_LEVELS,
     ArraySimResult,
     LinkIndex,
     _segment_max,
@@ -257,19 +257,24 @@ def _level_scan(el, clamped, arrival, tie1, tie2, service, num_links,
     return comp, start, rank, seg_last
 
 
-def _scan_core(link_by_level, size, release, entry_rank, rate, link_busy,
-               valid, hop_latency, *, impl, lane_depth):
-    """The full 4-level sweep over one padded simulation (traced).
+def _scan_core(link_by_level, size, release, entry_rank, rate, latency,
+               link_busy, valid, hop_latency, *, impl, lane_depth):
+    """The full level sweep over one padded simulation (traced).
 
-    ``link_by_level`` is ``(F, NUM_LEVELS)`` int32, −1 = level not on the
-    path (padded chunks are −1 everywhere); ``valid`` masks real chunks.
-    Sentinel rows sort to the tail as their own zero-service segment and
-    are dropped from every per-link reduction by the out-of-range scatter
-    rule. Returns ``(finish, start0, link_volume, link_last, makespan)``.
+    ``link_by_level`` is ``(F, num_levels)`` int32 — the level count is a
+    static trace dimension taken from the fabric's ``level_kinds`` (4 flat,
+    5 multi-pod); −1 = level not on the path (padded chunks are −1
+    everywhere); ``valid`` masks real chunks. Sentinel rows sort to the
+    tail as their own zero-service segment and are dropped from every
+    per-link reduction by the out-of-range scatter rule. ``latency`` is
+    the per-link fixed propagation delay charged after each service (zero
+    except WAN lanes). Returns ``(finish, start0, link_volume, link_last,
+    makespan)``.
     """
     f = size.shape[0]
     num_links = rate.shape[0]
     rate_ext = jnp.concatenate([rate, jnp.ones((1,), rate.dtype)])
+    lat_ext = jnp.concatenate([latency, jnp.zeros((1,), latency.dtype)])
     busy_ext = jnp.concatenate([link_busy, jnp.zeros((1,), link_busy.dtype)])
     arrival = release + 0.0
     tie1 = jnp.zeros(f, release.dtype)
@@ -278,7 +283,7 @@ def _scan_core(link_by_level, size, release, entry_rank, rate, link_busy,
     start0 = jnp.zeros(f, release.dtype)
     link_last = link_busy
     link_volume = jnp.zeros(num_links, size.dtype)
-    for lv in range(NUM_LEVELS):
+    for lv in range(link_by_level.shape[1]):
         links = link_by_level[:, lv]
         served = links >= 0
         el = jnp.where(served, links, num_links).astype(jnp.int32)
@@ -294,7 +299,7 @@ def _scan_core(link_by_level, size, release, entry_rank, rate, link_busy,
         if lv == 0:
             start0 = jnp.where(served, start, 0.0)
         finish = jnp.where(served, comp, finish)
-        arrival = jnp.where(served, comp + hop_latency, arrival)
+        arrival = jnp.where(served, comp + hop_latency + lat_ext[el], arrival)
         tie1 = jnp.where(served, start, tie1)
         tie2 = jnp.where(served, rank, tie2)
         link_volume = link_volume + jax.ops.segment_sum(
@@ -306,21 +311,21 @@ def _scan_core(link_by_level, size, release, entry_rank, rate, link_busy,
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "lane_depth"))
-def _scan_single_jit(link_by_level, size, release, entry_rank, rate,
+def _scan_single_jit(link_by_level, size, release, entry_rank, rate, latency,
                      link_busy, valid, hop_latency, *, impl, lane_depth):
     return _scan_core(
-        link_by_level, size, release, entry_rank, rate, link_busy, valid,
-        hop_latency, impl=impl, lane_depth=lane_depth,
+        link_by_level, size, release, entry_rank, rate, latency, link_busy,
+        valid, hop_latency, impl=impl, lane_depth=lane_depth,
     )
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "lane_depth"))
-def _scan_batch_jit(link_by_level, size, release, entry_rank, rate,
+def _scan_batch_jit(link_by_level, size, release, entry_rank, rate, latency,
                     link_busy, valid, hop_latency, *, impl, lane_depth):
     core = functools.partial(_scan_core, impl=impl, lane_depth=lane_depth)
-    return jax.vmap(core, in_axes=(0, 0, 0, 0, 0, 0, 0, None))(
-        link_by_level, size, release, entry_rank, rate, link_busy, valid,
-        hop_latency,
+    return jax.vmap(core, in_axes=(0, 0, 0, 0, 0, None, 0, 0, None))(
+        link_by_level, size, release, entry_rank, rate, latency, link_busy,
+        valid, hop_latency,
     )
 
 
@@ -336,7 +341,7 @@ class PlannedJobs:
     host-side (policies are Python), only the fabric dynamics batch.
     """
 
-    link_by_level: np.ndarray  # (F, NUM_LEVELS) int, -1 = level skipped
+    link_by_level: np.ndarray  # (F, num_levels) int, -1 = level skipped
     size: np.ndarray  # (F,) float64
     release: np.ndarray  # (F,) float64
     entry_rank: np.ndarray  # (F,) int
@@ -377,7 +382,9 @@ def pad_job_arrays(planned: PlannedJobs, bucket: int | None = None):
         bucket = bucket_size(f)
     if bucket < f:
         raise ValueError(f"bucket {bucket} smaller than job count {f}")
-    lbl = np.full((bucket, NUM_LEVELS), -1, dtype=np.int32)
+    lbl = np.full(
+        (bucket, planned.link_by_level.shape[1]), -1, dtype=np.int32
+    )
     lbl[:f] = planned.link_by_level
     size = np.zeros(bucket)
     size[:f] = planned.size
@@ -422,7 +429,7 @@ def _lane_depth_for(link_by_level_list, num_links: int) -> int:
     """
     deepest = 1
     for lbl in link_by_level_list:
-        for lv in range(NUM_LEVELS):
+        for lv in range(lbl.shape[1]):
             col = lbl[:, lv]
             col = col[col >= 0]
             if col.size:
@@ -519,7 +526,8 @@ def simulate_chunk_arrays_device(
         finish, start0, link_volume, link_last, makespan = _scan_single_jit(
             jnp.asarray(lbl), jnp.asarray(psize), jnp.asarray(prelease),
             jnp.asarray(prank), jnp.asarray(index.rate),
-            jnp.asarray(busy), jnp.asarray(valid),
+            jnp.asarray(index.latency), jnp.asarray(busy),
+            jnp.asarray(valid),
             jnp.asarray(hop_latency, dtype=jnp.float64),
             impl=impl, lane_depth=lane_depth,
         )
@@ -579,7 +587,8 @@ def simulate_many_device(
     with enable_x64():
         finish, start0, link_volume, link_last, makespan = _scan_batch_jit(
             jnp.asarray(lbl), jnp.asarray(size), jnp.asarray(release),
-            jnp.asarray(rank), jnp.asarray(rate), jnp.asarray(busy),
+            jnp.asarray(rank), jnp.asarray(rate),
+            jnp.asarray(index.latency), jnp.asarray(busy),
             jnp.asarray(valid),
             jnp.asarray(hop_latency, dtype=jnp.float64),
             impl=impl, lane_depth=lane_depth,

@@ -100,6 +100,39 @@ delivery stays exactly-once: ``dynamics["delivered_chunks"]`` equals the
 chunk count even through a mid-collective rail loss. With no failures
 configured both new sources stay empty and the dynamic loop is bit-exact
 with its PR-4 behaviour.
+
+**Hierarchical fabrics.** Any :class:`~repro.netsim.topology.Fabric` is
+accepted — the engine walks whatever per-link path the policy committed,
+so multi-pod paths (``up -> wan -> down``) need no special casing. Two
+wrinkles: (a) per-link *propagation latency* (``Link.latency``, nonzero
+only on wan links) is charged after a link's service, on top of the
+constant ``hop_latency``; heterogeneous latencies break the
+non-decreasing hop-arrival order the deque relies on, so the hop-arrival
+container switches to a heap iff any link has nonzero latency (flat
+fabrics keep the deque and stay bit-exact); (b) ``LossConfig.links``
+gains a ``"wan"`` scope so loss can be confined to the long-haul hops —
+the eligibility of every link is precomputed into one dict.
+
+**XOR-FEC** (``FaultSpec.fec`` — :class:`~repro.netsim.linkmodel.FecConfig`).
+With forward error correction, every ``k`` consecutive data chunks a
+transport lane — (flow, first-hop link), the go-back-N granularity —
+commits form a *group*, and the engine injects ``r`` parity chunks right
+behind the group's last member (sized like its largest member, on its
+path). The receiver reconstructs as soon as any ``k`` of the ``k + r``
+group members have landed: a group therefore *absorbs* up to ``r``
+losses — an absorbed data chunk schedules **no** retransmission and
+never enters the go-back-N window (no head-of-line blocking); it is
+delivered at the instant reconstruction becomes possible. Parity losses
+consume the same budget and are never retransmitted. Past the budget the
+group is *busted*: previously-absorbed data chunks are flushed to the
+PR-4 go-back-N retransmit path (otherwise ``k=2, r=2`` with both parity
+chunks lost deadlocks — only one arrival can ever happen, forever short
+of ``k``) and every later loss is handled legacy. Parity chunks are
+invisible to flow accounting: CCT, makespan, ``delivered_chunks`` and
+goodput count data only, while ``fec_*`` counters in the dynamics
+summary expose the redundancy spent. Chunks left in a partially-filled
+group at the end of assignment are unprotected. FEC is inert without a
+``LossConfig`` (use ``rate=0.0`` to measure pure parity overhead).
 """
 
 from __future__ import annotations
@@ -217,6 +250,27 @@ class _Flowlet:
         self.round_id = head.round_id
 
 
+class _FecGroup:
+    """Receiver-side state of one FEC group (k data + r parity chunks).
+
+    ``arrived`` counts landed members (data delivered + parity received);
+    once it reaches ``k`` every ``absorbed`` chunk (lost but within the
+    redundancy budget) is reconstructable. ``busted`` means the loss
+    count exceeded ``r`` — the group fell back to go-back-N and this
+    state is only consulted to route parity arrivals to /dev/null.
+    """
+
+    __slots__ = ("k", "r", "losses", "arrived", "absorbed", "busted")
+
+    def __init__(self, k: int, r: int):
+        self.k = k
+        self.r = r
+        self.losses = 0
+        self.arrived = 0
+        self.absorbed: list[ChunkJob] = []
+        self.busted = False
+
+
 @dataclasses.dataclass
 class SimResult:
     jobs: list[ChunkJob]
@@ -283,7 +337,11 @@ class _FifoNetwork:
       link in flight.
     * ``hop_arrivals`` — deque; completion order is non-decreasing in time
       and ``hop_latency`` is constant, so next-hop arrivals are produced
-      already sorted.
+      already sorted. On fabrics with heterogeneous per-link propagation
+      latency (multi-pod wan hops) that invariant breaks — a short-hop
+      arrival can be produced *after* but land *before* a long-hop one —
+      so the container becomes a heap instead (flat fabrics keep the
+      deque: same peek, bit-exact event order).
     * ``injections`` — deque of released chunks; callers inject in
       non-decreasing release order (the single sorted release stream).
 
@@ -298,7 +356,9 @@ class _FifoNetwork:
         self.link_busy: dict[str, bool] = {k: False for k in topo.links}
         self.link_rate: dict[str, float] = {k: l.rate for k, l in topo.links.items()}
         self.finishes: list = []  # heap of (finish, seq, job, hop, link, start)
-        self.hop_arrivals: deque = deque()  # (t, seq, job, hop)
+        # Heap iff any link carries propagation latency (see class docstring).
+        self.var_latency = engine._var_latency
+        self.hop_arrivals = [] if self.var_latency else deque()  # (t, seq, job, hop)
         self.injections: deque = deque()  # (t, seq, job)
         self._seq = itertools.count()
         self.now = 0.0
@@ -375,6 +435,8 @@ class _FifoNetwork:
         heappop = heapq.heappop
         seq = self._seq
         start = self._start
+        var_lat = self.var_latency
+        link_latency = eng._link_latency
         bound = _INF if horizon is None else horizon
         while True:
             t_f = finishes[0][0] if finishes else _INF
@@ -403,7 +465,14 @@ class _FifoNetwork:
                         cb(link, started, t, job)
                 path = job.path
                 if hop + 1 < len(path):
-                    arrivals.append((t + hop_latency, next(seq), job, hop + 1))
+                    # Same association order as the vector/device backends:
+                    # (finish + hop_latency) + per-link latency.
+                    t_a = t + hop_latency
+                    if var_lat:
+                        t_a += link_latency[link]
+                        heapq.heappush(arrivals, (t_a, next(seq), job, hop + 1))
+                    else:
+                        arrivals.append((t_a, next(seq), job, hop + 1))
                 else:
                     job.finish_time = t
                     if completion_cbs:
@@ -415,7 +484,10 @@ class _FifoNetwork:
                     start(link, job2, hop2, t)
             else:
                 if src == 1:
-                    t, _s, job, hop = arrivals.popleft()
+                    if var_lat:
+                        t, _s, job, hop = heappop(arrivals)
+                    else:
+                        t, _s, job, hop = arrivals.popleft()
                 else:
                     t, _s, job = injections.popleft()
                     hop = 0
@@ -459,7 +531,10 @@ class _FifoNetwork:
             if src == 0:
                 self._finish_dyn(heappop(finishes))
             elif src == 1:
-                t, _s, job, hop = arrivals.popleft()
+                if self.var_latency:
+                    t, _s, job, hop = heappop(arrivals)
+                else:
+                    t, _s, job, hop = arrivals.popleft()
                 self.now = t
                 self._arrive_dyn(job.path[hop], job, hop, t)
             elif src == 4:
@@ -701,40 +776,117 @@ class _FifoNetwork:
                     self._try_start_dyn(up, job2, hop2, t)
         loss = eng._loss
         lost = False
-        if loss is not None and (loss.links == "all" or eng._nic_link[link]):
+        if loss is not None and eng._loss_eligible[link]:
             chain = self.loss_chains.get(link)
             if chain is None:
                 chain = self.loss_chains[link] = GilbertElliott(loss)
             lost = chain.draw(eng.fault_rng)
         if lost:
-            # The wire time was spent; the chunk vanishes and re-enters its
-            # first hop once the sender's retransmission timer fires. The
-            # links it already crossed (and will cross again) re-absorb its
-            # bytes into the assigned ledger so backlog estimates stay
+            # The wire time was spent. A FEC-protected chunk whose group
+            # still has redundancy budget is *absorbed* — no retransmit,
+            # reconstruction happens receiver-side (see _fec_lost).
+            # Otherwise the chunk vanishes and re-enters its first hop
+            # once the sender's retransmission timer fires. The links it
+            # already crossed (and will cross again) re-absorb its bytes
+            # into the assigned ledger so backlog estimates stay
             # consistent — without this, retransmissions push transmitted
             # past assigned and lossy links read as permanently idle to
             # the reactive policies.
             eng.drops[link] = eng.drops.get(link, 0) + 1
-            lane = (job.flow_id, job.path[0])
-            eng._lane_outstanding.setdefault(lane, set()).add(job.chunk_id)
             for cb in eng._drop_cbs:
                 cb(link, t, job)
-            assigned = eng.assigned_bytes
-            for crossed in job.path[: hop + 1]:
-                assigned[crossed] += job.size
-            job.retries += 1
-            job.ecn_marked = False
-            self.retrans.append((t + loss.rto, next(self._seq), job))
+            if not (eng._fec is not None and self._fec_lost(job, t)):
+                lane = (job.flow_id, job.path[0])
+                eng._lane_outstanding.setdefault(lane, set()).add(job.chunk_id)
+                assigned = eng.assigned_bytes
+                for crossed in job.path[: hop + 1]:
+                    assigned[crossed] += job.size
+                job.retries += 1
+                job.ecn_marked = False
+                self.retrans.append((t + loss.rto, next(self._seq), job))
         elif hop + 1 < len(job.path):
-            self.hop_arrivals.append(
-                (t + eng.hop_latency, next(self._seq), job, hop + 1)
-            )
+            t_a = t + eng.hop_latency
+            if self.var_latency:
+                t_a += eng._link_latency[link]
+                heapq.heappush(
+                    self.hop_arrivals, (t_a, next(self._seq), job, hop + 1)
+                )
+            else:
+                self.hop_arrivals.append((t_a, next(self._seq), job, hop + 1))
         else:
             self._deliver_dyn(job, t)
         q = self.link_queue[link]
         if q and not self.link_busy[link] and link not in self.stalled:
             job2, hop2 = q.popleft()
             self._try_start_dyn(link, job2, hop2, t)
+
+    # -- FEC (XOR parity groups; see module docstring) ------------------------
+
+    def _fec_lost(self, job, t: float) -> bool:
+        """FEC view of one lost chunk. Returns True when the loss is fully
+        handled here — absorbed within the group's redundancy budget, or a
+        parity chunk (never retransmitted). False sends the caller down
+        the legacy go-back-N retransmit path."""
+        eng = self.eng
+        g = eng._fec_group_of.get(id(job))
+        if g is None:
+            return False  # unprotected tail chunk of a partial group
+        parity = id(job) in eng._parity_ids
+        if g.busted:
+            if parity:
+                eng.fec_absorbed += 1  # parity is never retransmitted
+            return parity  # busted group: data goes legacy
+        g.losses += 1
+        if g.losses <= g.r:
+            eng.fec_absorbed += 1
+            if parity:
+                return True  # budget spent; nothing to reconstruct
+            g.absorbed.append(job)
+            # The receiver may already hold >= k members — a chunk lost
+            # after the k-th arrival must reconstruct *now*; no further
+            # arrival will ever re-trigger the decode.
+            self._fec_decode(g, t)
+            return True
+        # Budget exceeded: bust the group and flush every previously
+        # absorbed data chunk back onto the go-back-N retransmit path.
+        # Without the flush, k=2/r=2 with both parity chunks lost
+        # deadlocks: one data chunk absorbed, one arrival possible —
+        # forever short of k.
+        g.busted = True
+        eng.fec_busted += 1
+        loss = eng._loss
+        assigned = eng.assigned_bytes
+        for aj in g.absorbed:
+            lane = (aj.flow_id, aj.path[0])
+            eng._lane_outstanding.setdefault(lane, set()).add(aj.chunk_id)
+            for crossed in aj.path:
+                assigned[crossed] += aj.size
+            aj.retries += 1
+            aj.ecn_marked = False
+            self.retrans.append((t + loss.rto, next(self._seq), aj))
+        g.absorbed = []
+        if parity:
+            eng.fec_absorbed += 1
+        return parity
+
+    def _fec_decode(self, g: _FecGroup, t: float) -> None:
+        """Reconstruct every absorbed data chunk once >= k group members
+        have landed. Called after each arrival *and* each absorbed loss.
+        Reconstructed chunks deliver at the decode instant with full
+        bookkeeping; they never touched the go-back-N window (that is the
+        point — no head-of-line blocking on the recovered lane)."""
+        if g.arrived < g.k or not g.absorbed:
+            return
+        eng = self.eng
+        for aj in g.absorbed:
+            aj.finish_time = t
+            eng.delivered_chunks += 1
+            eng.goodput_bytes += aj.size
+            eng.fec_recovered += 1
+            if eng._completion_cbs:
+                for cb in eng._completion_cbs:
+                    cb(aj, t)
+        g.absorbed = []
 
     def _deliver_dyn(self, job, t: float) -> None:
         """Receiver side: go-back-N in-order delivery + ECN echo.
@@ -749,6 +901,17 @@ class _FifoNetwork:
         and feed the sender's ECN pacing factor (cut on marked, additive
         recovery)."""
         eng = self.eng
+        fecg = None
+        if eng._fec is not None:
+            fecg = eng._fec_group_of.get(id(job))
+            if fecg is not None and id(job) in eng._parity_ids:
+                # Parity never reaches the flow: count the arrival toward
+                # reconstruction (unless the group already fell back to
+                # go-back-N) and discard it.
+                if not fecg.busted:
+                    fecg.arrived += 1
+                    self._fec_decode(fecg, t)
+                return
         lane = (job.flow_id, job.path[0])
         outstanding = eng._lane_outstanding.get(lane)
         loss = eng._loss
@@ -787,6 +950,9 @@ class _FifoNetwork:
         if eng._completion_cbs:
             for cb in eng._completion_cbs:
                 cb(job, t)
+        if fecg is not None and not fecg.busted:
+            fecg.arrived += 1
+            self._fec_decode(fecg, t)
 
 
 class Engine:
@@ -808,17 +974,24 @@ class Engine:
         self.transmitted_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
         self._snapshot: dict[str, float] = dict(self.assigned_bytes)
         self.link_bytes: dict[str, float] = {k: 0.0 for k in topo.links}
-        # Pre-parsed link metadata: the up-link's domain (or -1), the rate
-        # and the NIC-lane flag, so the per-chunk estimate path and the
-        # loss filter never split strings.
+        # Pre-parsed link metadata: the up-link's domain (or -1), the rate,
+        # the NIC/WAN-lane flags and the propagation latency, so the
+        # per-chunk estimate path and the loss filter never split strings.
         self._up_domain: dict[str, int] = {}
         self._link_rate: dict[str, float] = {}
         self._nic_link: dict[str, bool] = {}
+        self._wan_link: dict[str, bool] = {}
+        self._link_latency: dict[str, float] = {}
         for name, link in topo.links.items():
             parts = name.split(":")
             self._up_domain[name] = int(parts[1]) if parts[0] == "up" else -1
             self._link_rate[name] = link.rate
             self._nic_link[name] = parts[0] in ("up", "down")
+            self._wan_link[name] = parts[0] == "wan"
+            self._link_latency[name] = getattr(link, "latency", 0.0)
+        # Heterogeneous propagation latency flips the hop-arrival container
+        # to a heap; flat fabrics (all-zero) keep the bit-exact deque.
+        self._var_latency = any(v != 0.0 for v in self._link_latency.values())
         self._decisions = 0
         self._flowlets: list[_Flowlet] = []
         # Fabric dynamics (repro.netsim.linkmodel): active only when the
@@ -833,6 +1006,9 @@ class Engine:
         self._retry = (
             (spec.retry or RetryConfig()) if self._failures else None
         )
+        # FEC is inert without a LossConfig (is_static stays loss-driven;
+        # a rate=0 LossConfig measures pure parity overhead).
+        self._fec = spec.fec if self._loss is not None else None
         self._signals = self._pfc is not None or self._ecn is not None
         # Links currently fail-stopped (empty unless failures fire); the
         # policy-facing delay estimates treat them as unusable (inf).
@@ -860,6 +1036,35 @@ class Engine:
             self.gbn_discards = 0
             self.delivered_chunks = 0
             self.goodput_bytes = 0.0
+            # Per-link loss eligibility (LossConfig.links scope), resolved
+            # once so _finish_dyn never inspects names.
+            self._loss_eligible: dict[str, bool] = (
+                {
+                    k: (
+                        self._loss.links == "all"
+                        or (self._loss.links == "nic" and self._nic_link[k])
+                        or (self._loss.links == "wan" and self._wan_link[k])
+                    )
+                    for k in topo.links
+                }
+                if self._loss is not None
+                else {}
+            )
+            # XOR-FEC state (module docstring): open per-lane groups being
+            # filled at commit time, chunk->group map (object identity —
+            # chunk ids collide across flows), synthesized parity ids, and
+            # the parity chunks to inject right behind each group closer.
+            self.fec_recovered = 0
+            self.fec_parity_chunks = 0
+            self.fec_parity_bytes = 0.0
+            self.fec_busted = 0
+            self.fec_absorbed = 0  # losses that scheduled no retransmit
+            if self._fec is not None:
+                self._fec_open: dict[tuple[int, str], list[ChunkJob]] = {}
+                self._fec_group_of: dict[int, _FecGroup] = {}
+                self._parity_ids: set[int] = set()
+                self._parity_after: dict[int, list[ChunkJob]] = {}
+                self._parity_seq = itertools.count(1)
             # Fail-stop telemetry: strand counts per dead link, and how
             # many stranded chunks were re-sprayed onto a surviving rail.
             self.fail_strands: dict[str, int] = {}
@@ -1001,6 +1206,8 @@ class Engine:
         assigned = self.assigned_bytes
         for link in path:
             assigned[link] += size
+        if self._fec is not None:
+            self._fec_commit(job)
         self._decisions += 1
         if self._decisions % self.probe_every == 0:
             transmitted = self.transmitted_bytes
@@ -1012,6 +1219,66 @@ class Engine:
                     k: v - prev.get(k, 0) for k, v in self.ecn_marks.items() if v
                 }
                 self._marks_at_snapshot = dict(self.ecn_marks)
+
+    # -- FEC encode (sender side) --------------------------------------------
+
+    def _fec_commit(self, job: ChunkJob) -> None:
+        """Accumulate a committed data chunk into its lane's open FEC
+        group; on the k-th member, close the group and synthesize its r
+        parity chunks (largest-member size, last member's path), to be
+        injected right behind that member. Parity bytes are charged to the
+        assigned ledger — they are real wire traffic the reactive backlog
+        estimates must see."""
+        lane = (job.flow_id, job.path[0])
+        buf = self._fec_open.setdefault(lane, [])
+        buf.append(job)
+        fec = self._fec
+        if len(buf) < fec.k:
+            return
+        del self._fec_open[lane]
+        group = _FecGroup(fec.k, fec.r)
+        for j in buf:
+            self._fec_group_of[id(j)] = group
+        last = buf[-1]
+        psize = max(j.size for j in buf)
+        assigned = self.assigned_bytes
+        parity: list[ChunkJob] = []
+        for _ in range(fec.r):
+            pj = ChunkJob(
+                chunk_id=-next(self._parity_seq),
+                flow_id=last.flow_id,
+                src_domain=last.src_domain,
+                src_gpu=last.src_gpu,
+                dst_domain=last.dst_domain,
+                dst_gpu=last.dst_gpu,
+                size=psize,
+                arrival_time=last.arrival_time,
+                round_id=last.round_id,
+                path=list(last.path),
+            )
+            self._fec_group_of[id(pj)] = group
+            self._parity_ids.add(id(pj))
+            self.fec_parity_chunks += 1
+            self.fec_parity_bytes += psize
+            for link in pj.path:
+                assigned[link] += psize
+            parity.append(pj)
+        self._parity_after[id(last)] = parity
+
+    def _with_parity(self, jobs: list) -> list:
+        """Interleave synthesized parity chunks right behind the data
+        chunk that closed their group, preserving injection order (and
+        hence deterministic fabric entry)."""
+        if self._fec is None or not self._parity_after:
+            return jobs
+        after = self._parity_after
+        out: list = []
+        for j in jobs:
+            out.append(j)
+            ps = after.pop(id(j), None)
+            if ps:
+                out.extend(ps)
+        return out
 
     # -- flowlet coalescing ---------------------------------------------------
 
@@ -1066,7 +1333,7 @@ class Engine:
         sim_jobs = self._coalesce(all_jobs) if self.coalesce_flowlets else all_jobs
         # Stable sort keeps assignment order among equal release times (the
         # whole batch, in the t=0 one-shot case).
-        for job in sorted(sim_jobs, key=lambda j: j.arrival_time):
+        for job in self._with_parity(sorted(sim_jobs, key=lambda j: j.arrival_time)):
             net.inject(job, job.arrival_time)
         net.drain()
         if self._flowlets:
@@ -1098,7 +1365,7 @@ class Engine:
             batch = policy.assign_batch(self, releases[t], now=t)
             all_jobs.extend(batch)
             sim_batch = self._coalesce(batch) if self.coalesce_flowlets else batch
-            for job in sim_batch:
+            for job in self._with_parity(sim_batch):
                 net.inject(job, t)
         net.drain()
         if self._flowlets:
@@ -1136,7 +1403,7 @@ class Engine:
         if not self._dynamic:
             return None
         drops = sum(self.drops.values())
-        return {
+        out = {
             "drops": drops,
             "gbn_discards": self.gbn_discards,
             "retransmits": drops + self.gbn_discards,
@@ -1151,3 +1418,13 @@ class Engine:
             "failovers": self.failovers,
             "dead_links": sorted(self.dead_links),
         }
+        if self._fec is not None:
+            # Absorbed losses scheduled no retransmission — correct the
+            # drops-based estimate above.
+            out["retransmits"] = drops + self.gbn_discards - self.fec_absorbed
+            out["fec_recovered"] = self.fec_recovered
+            out["fec_absorbed"] = self.fec_absorbed
+            out["fec_parity_chunks"] = self.fec_parity_chunks
+            out["fec_parity_bytes"] = self.fec_parity_bytes
+            out["fec_busted_groups"] = self.fec_busted
+        return out

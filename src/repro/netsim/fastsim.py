@@ -68,18 +68,25 @@ __all__ = [
     "simulate_chunk_arrays",
 ]
 
-#: Topological link levels: every path visits at most one link per kind and
-#: kinds only ever appear in this order, so each level's arrivals are fully
-#: known once the previous levels are scanned.
+#: Flat-pod topological link levels (the historical four-kind structure);
+#: kept as the default for fabrics that predate ``Fabric.level_kinds``.
+#: Every path visits at most one link per kind and kinds only ever appear
+#: in level order, so each level's arrivals are fully known once the
+#: previous levels are scanned — true per fabric for whatever
+#: ``level_kinds`` it declares (multi-pod fabrics insert a ``wan`` level).
 _LEVEL_OF_KIND = {"up": 0, "l2s": 1, "s2l": 2, "down": 3}
 NUM_LEVELS = 4
 
 
 class LinkIndex:
-    """Integer link ids plus rate/level arrays for one :class:`RailTopology`.
+    """Integer link ids plus rate/level/latency arrays for one fabric.
 
-    Also exposes id grids (``up[d, r]``, ``down[d, r]``, ``l2s[r, s]``,
-    ``s2l[s, r]``) so planners can gather whole path columns without
+    The level structure is *per fabric*: ``topo.level_kinds`` (the ordered
+    link-kind tuple) defines ``num_levels`` and the kind→level map; the
+    flat pod keeps the historical four levels, multi-pod fabrics add a
+    ``wan`` level. Also exposes id grids (``up[d, r]``, ``down[d, r]``,
+    ``l2s[leaf, s]``, ``s2l[s, leaf]`` and — on multi-pod fabrics —
+    ``wan[p, q, lane]``) so planners can gather whole path columns without
     formatting a single link-name string.
     """
 
@@ -95,13 +102,26 @@ class LinkIndex:
         self.names = names
         self.id_of = {nm: i for i, nm in enumerate(names)}
         self.rate = np.array([topo.links[nm].rate for nm in names])
-        self.level = np.array(
-            [_LEVEL_OF_KIND[nm.split(":", 1)[0]] for nm in names], dtype=np.int8
+        self.level_kinds = tuple(
+            getattr(topo, "level_kinds", ("up", "l2s", "s2l", "down"))
         )
-        # Compact ids keep the (F, NUM_LEVELS) path columns small and let
+        self.level_of_kind = {k: i for i, k in enumerate(self.level_kinds)}
+        self.num_levels = len(self.level_kinds)
+        self.down_level = self.level_of_kind["down"]
+        self.level = np.array(
+            [self.level_of_kind[nm.split(":", 1)[0]] for nm in names],
+            dtype=np.int8,
+        )
+        # Fixed propagation delay per link, charged after each service
+        # (zero except WAN lanes). ``has_latency`` gates the extra adds so
+        # flat fabrics stay bit-identical to the historical arithmetic.
+        self.latency = np.array([topo.links[nm].latency for nm in names])
+        self.has_latency = bool(self.latency.any())
+        # Compact ids keep the (F, num_levels) path columns small and let
         # the grouping sort radix over 2 bytes instead of 8.
         self.id_dtype = np.int16 if len(names) < 2**15 else np.int32
-        m, n, p = topo.m, topo.n, topo.num_spines
+        m, n = topo.m, topo.n
+        num_pods = getattr(topo, "num_pods", 1)
         self.up = np.array(
             [[self.id_of[f"up:{d}:{r}"] for r in range(n)] for d in range(m)],
             dtype=self.id_dtype,
@@ -110,14 +130,42 @@ class LinkIndex:
             [[self.id_of[f"down:{d}:{r}"] for r in range(n)] for d in range(m)],
             dtype=self.id_dtype,
         )
+        # Leaf/spine ids are globalized per pod (pod*n + rail, pod*S + s);
+        # cross-pod pairs don't exist and read as -1. The flat pod (one
+        # pod) reproduces the historical dense (n, num_spines) grids.
+        num_leaves = num_pods * n
+        num_spines = num_pods * topo.num_spines
         self.l2s = np.array(
-            [[self.id_of[f"l2s:{r}:{s}"] for s in range(p)] for r in range(n)],
+            [
+                [self.id_of.get(f"l2s:{lf}:{s}", -1) for s in range(num_spines)]
+                for lf in range(num_leaves)
+            ],
             dtype=self.id_dtype,
         )
         self.s2l = np.array(
-            [[self.id_of[f"s2l:{s}:{r}"] for r in range(n)] for s in range(p)],
+            [
+                [self.id_of.get(f"s2l:{s}:{lf}", -1) for lf in range(num_leaves)]
+                for s in range(num_spines)
+            ],
             dtype=self.id_dtype,
         )
+        if num_pods > 1:
+            lanes = topo.wan_lanes
+            self.wan = np.array(
+                [
+                    [
+                        [
+                            self.id_of.get(f"wan:{p}:{q}:{lane}", -1)
+                            for lane in range(lanes)
+                        ]
+                        for q in range(num_pods)
+                    ]
+                    for p in range(num_pods)
+                ],
+                dtype=self.id_dtype,
+            )
+        else:
+            self.wan = None
 
     @property
     def num_links(self) -> int:
@@ -271,7 +319,9 @@ def paths_from_jobs(
     """
     if len(ordered_jobs) != num_chunks:
         raise ValueError("assignment must cover every chunk exactly once")
-    link_by_level = np.full((num_chunks, NUM_LEVELS), -1, dtype=index.id_dtype, order="F")
+    link_by_level = np.full(
+        (num_chunks, index.num_levels), -1, dtype=index.id_dtype, order="F"
+    )
     entry_rank = np.empty(num_chunks, dtype=np.int64)
     id_of = index.id_of
     level = index.level
@@ -863,11 +913,15 @@ def simulate_chunk_arrays(
 ) -> ArraySimResult:
     """Exact FIFO dynamics of one assigned collective, no event loop.
 
-    ``link_by_level`` is ``(F, NUM_LEVELS)`` int link ids (−1 = level not on
-    the path); every path must start at level 0 (an up-link) — true for
-    both rail-direct and spine families. ``flow_id``/``round_id`` (when
-    given) must be non-decreasing in chunk order, which the builders
-    guarantee; ``None`` treats every chunk as its own flow / one round.
+    ``link_by_level`` is ``(F, index.num_levels)`` int link ids (−1 = level
+    not on the path); every path must start at level 0 (an up-link) — true
+    for the rail-direct, spine and cross-pod WAN families. ``flow_id``/
+    ``round_id`` (when given) must be non-decreasing in chunk order, which
+    the builders guarantee; ``None`` treats every chunk as its own flow /
+    one round. Links with a fixed propagation ``latency`` (WAN lanes)
+    charge it after their service completes, on top of ``hop_latency`` —
+    the gated extra add keeps zero-latency fabrics bit-identical to the
+    historical arithmetic.
 
     ``link_busy`` is an optional ``(num_links,)`` busy-until carry from a
     previous window: each job's arrival at a link is raised to that link's
@@ -929,6 +983,8 @@ def simulate_chunk_arrays(
                 finish = comp
                 if need_tie:
                     arrival = comp + hop_latency
+                    if index.has_latency:
+                        arrival = arrival + index.latency[links]
                     tie_a = na
                     tie_b = nb
                     tie_c = nc
@@ -959,7 +1015,10 @@ def simulate_chunk_arrays(
                 start0[sel] = sv
             finish[sel] = comp
             if need_tie:
-                arrival[sel] = comp + hop_latency
+                hop_arrival = comp + hop_latency
+                if index.has_latency:
+                    hop_arrival = hop_arrival + index.latency[l_sel]
+                arrival[sel] = hop_arrival
                 tie_a[sel] = na
                 tie_b[sel] = nb
                 tie_c[sel] = nc

@@ -77,11 +77,14 @@ def compute_metrics(
     nic_tx = np.zeros((m, n))
     nic_rx = np.zeros((m, n))
     for name, volume in result.link_bytes.items():
-        kind, d, r = name.split(":")[0], *name.split(":")[1:]
+        # Only NIC lanes are 3-part "kind:domain:rail"; hierarchical
+        # fabrics add 4-part "wan:p:q:lane" links, which carry no NIC
+        # accounting (their bytes already crossed an up lane).
+        kind, *rest = name.split(":")
         if kind == "up":
-            nic_tx[int(d), int(r)] += volume
+            nic_tx[int(rest[0]), int(rest[1])] += volume
         elif kind == "down":
-            nic_rx[int(d), int(r)] += volume
+            nic_rx[int(rest[0]), int(rest[1])] += volume
     # Up-link volume is the wire view: under lossy FaultSpecs go-back-N
     # retransmissions re-cross the NICs and inflate it past the unique
     # delivered bytes. "Achieved" BusBw is goodput-based; the wire volume

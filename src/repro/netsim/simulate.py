@@ -59,6 +59,7 @@ from .topology import RailTopology
 __all__ = [
     "build_jobs",
     "build_streaming_jobs",
+    "resolve_backend",
     "run_collective",
     "run_streaming_collective",
     "run_policy_suite",
@@ -80,35 +81,67 @@ def build_jobs(
     return chunk_jobs_from_arrays(build_job_arrays(tm, chunk_bytes))
 
 
-def _check_backend(backend: str) -> None:
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; choose {BACKENDS}")
+def resolve_backend(
+    backend: str | None, topo: RailTopology | None = None
+) -> str:
+    """The one backend resolver every driver shares (offline, streaming,
+    serving gateway).
 
-
-def _check_vector_supports(topo: RailTopology, backend: str | None) -> str:
-    """Resolve/validate the backend against the fabric's dynamics.
-
-    Non-static fault specs (time-varying profiles, PFC/ECN/loss) only run
-    on the event engine: an unspecified backend falls back to it, an
-    explicit ``vector`` request is an error naming that fallback. Unknown
-    backend names are rejected before the fallback so typos never run
-    silently.
+    Unknown backend names are rejected first, so typos never run silently.
+    With no fabric (or a static one) the explicit choice — or the
+    ``vector`` default — stands. A *dynamic* fabric (non-static fault
+    spec: time-varying profiles, PFC/ECN/loss) only runs on the event
+    engine: an unspecified backend falls back to it silently, an explicit
+    array backend is an error naming that fallback (``device`` first
+    consults :func:`repro.netsim.devicesim.check_device_supports`, which
+    raises the device-side gap by name).
     """
-    if backend is not None:
-        _check_backend(backend)
-    if topo.has_dynamics:
-        if backend == "vector":
-            raise ValueError(
-                "backend='vector' supports constant-profile link models "
-                "only; this fault_spec needs the event fallback "
-                "(backend='event')"
-            )
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose {BACKENDS}")
+    if topo is not None and topo.has_dynamics:
         if backend == "device":
             from .devicesim import check_device_supports
 
             check_device_supports(topo)  # raises NotImplementedError
+        if backend in ("vector", "device"):
+            raise ValueError(
+                f"backend={backend!r} supports constant-profile link "
+                "models only; this fault_spec needs the event fallback "
+                "(backend='event')"
+            )
         return "event"
     return backend if backend is not None else "vector"
+
+
+def _resolve_fabric(
+    fabric: RailTopology | None,
+    tm: TrafficMatrix,
+    r1: float,
+    r2: float,
+    rail_speeds,
+    fault_spec,
+) -> RailTopology:
+    """The driver-side fabric source: a prebuilt ``fabric`` wins, a flat
+    ``RailTopology`` is built otherwise. A prebuilt fabric must match the
+    workload's ``(M, N)`` shape and owns its own speeds/dynamics — passing
+    ``rail_speeds``/``fault_spec`` alongside it is ambiguous and rejected.
+    """
+    if fabric is None:
+        return RailTopology(
+            tm.num_domains, tm.num_rails, r1=r1, r2=r2,
+            rail_speeds=rail_speeds, fault_spec=fault_spec,
+        )
+    if rail_speeds is not None or fault_spec is not None:
+        raise ValueError(
+            "pass rail_speeds/fault_spec via the prebuilt fabric, not "
+            "alongside it"
+        )
+    if (fabric.m, fabric.n) != (tm.num_domains, tm.num_rails):
+        raise ValueError(
+            f"fabric shape ({fabric.m} domains x {fabric.n} rails) does "
+            f"not match workload ({tm.num_domains} x {tm.num_rails})"
+        )
+    return fabric
 
 
 def _array_simulator(backend: str):
@@ -188,6 +221,7 @@ def run_collective(
     backend: str | None = None,
     rail_speeds=None,
     fault_spec=None,
+    fabric: RailTopology | None = None,
 ) -> CollectiveMetrics:
     """Simulate one all-to-all under one policy; return §VI-A metrics.
 
@@ -206,20 +240,25 @@ def run_collective(
     layer — time-varying rate profiles, PFC, ECN, loss + go-back-N. A
     non-static spec forces the event backend (the vector simulator rejects
     it by name); a fully static spec runs on either backend bit-exactly.
+
+    ``fabric`` passes a prebuilt topology (e.g. a
+    :class:`~repro.netsim.topology.MultiPodFabric`) instead of the flat
+    ``RailTopology`` constructed from ``r1``/``r2``; the two forms are
+    mutually exclusive with ``rail_speeds``/``fault_spec`` (bake those
+    into the fabric itself).
     """
     if coalesce and backend is None:
         backend = "event"
-    topo = RailTopology(
-        tm.num_domains, tm.num_rails, r1=r1, r2=r2,
-        rail_speeds=rail_speeds, fault_spec=fault_spec,
+    topo = _resolve_fabric(
+        fabric, tm, r1, r2, rail_speeds, fault_spec
     )
-    backend = _check_vector_supports(topo, backend)
+    backend = resolve_backend(backend, topo)
     if coalesce and backend in ("vector", "device"):
         raise ValueError(
             "flowlet coalescing is an event-engine approximation; drop "
             "coalesce=True or use backend='event'"
         )
-    opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
+    opt = theorem2_optimal_time(tm.d2, tm.num_rails, topo.r2)
     if backend in ("vector", "device"):
         result = _run_collective_vector(
             topo, tm, policy_name, chunk_bytes, seed, probe_every,
@@ -353,6 +392,7 @@ def run_streaming_collective(
     detector=None,
     coalesce: bool = False,
     backend: str = "event",
+    fabric: RailTopology | None = None,
 ) -> StreamingResult:
     """Simulate a streaming all-to-all (chunks released over time).
 
@@ -391,8 +431,12 @@ def run_streaming_collective(
         only — the reference for coalescing drift measurements) or
         ``device`` (the jitted jax scan, same restrictions as ``vector``,
         float-tolerance parity).
+      fabric: optional prebuilt topology (e.g. a
+        :class:`~repro.netsim.topology.MultiPodFabric`) replacing the flat
+        ``RailTopology`` built from ``r1``/``r2``; mutually exclusive with
+        ``rail_speeds``/``fault_spec`` (bake those into the fabric).
     """
-    _check_backend(backend)
+    resolve_backend(backend)
     if isinstance(workload, TrafficMatrix):
         rounds = [(0.0, workload)]
     else:
@@ -404,9 +448,7 @@ def run_streaming_collective(
     for _t, tm in rounds:
         if (tm.num_domains, tm.num_rails) != (m, n):
             raise ValueError("all rounds must share one (M, N) fabric shape")
-    topo = RailTopology(
-        m, n, r1=r1, r2=r2, rail_speeds=rail_speeds, fault_spec=fault_spec
-    )
+    topo = _resolve_fabric(fabric, tm0, r1, r2, rail_speeds, fault_spec)
     jobs = build_streaming_jobs(rounds, chunk_bytes)
     if isinstance(feedback, RailHealthEstimator):
         if feedback.num_rails != n:
@@ -416,7 +458,7 @@ def run_streaming_collective(
             )
         health = feedback
     else:
-        health = RailHealthEstimator(n, nominal_rate=r2) if feedback else None
+        health = RailHealthEstimator(n, nominal_rate=topo.r2) if feedback else None
     kwargs: dict = {}
     policy_cls = POLICIES.get(policy_name, Policy)
     if issubclass(policy_cls, OnlineRailSPolicy):
@@ -427,7 +469,7 @@ def run_streaming_collective(
     policy = make_policy(policy_name, topo, seed=seed, **kwargs)
     policy.prepare(jobs)
     if backend in ("vector", "device"):
-        _check_vector_supports(topo, backend)  # dynamics need the event engine
+        resolve_backend(backend, topo)  # dynamics need the event engine
         if feedback or recorder is not None or coalesce or detector is not None:
             raise ValueError(
                 f"{backend} streaming is feedback-free: rail-health "
@@ -458,8 +500,8 @@ def run_streaming_collective(
     # release, nor can the union beat the aggregate matrix's bound.
     d2_total = sum(tm.d2 for _t, tm in rounds)
     opt = max(
-        [theorem2_optimal_time(d2_total, n, r2)]
-        + [t + theorem2_optimal_time(tm.d2, n, r2) for t, tm in rounds]
+        [theorem2_optimal_time(d2_total, n, topo.r2)]
+        + [t + theorem2_optimal_time(tm.d2, n, topo.r2) for t, tm in rounds]
     )
     name = tm0.name if len(rounds) == 1 else f"stream[{len(rounds)}x{tm0.name}]"
     metrics = compute_metrics(result, topo, name, policy_name, opt)
@@ -513,15 +555,13 @@ def _run_policy_suite_device(
     backend: str = "device",
     rail_speeds=None,
     fault_spec=None,
+    fabric: RailTopology | None = None,
 ) -> dict[str, CollectiveMetrics]:
     """The batched policy-suite grid: one device dispatch for all policies."""
     from .devicesim import PlannedJobs, check_device_supports, simulate_many_device
 
     assert backend == "device"
-    topo = RailTopology(
-        tm.num_domains, tm.num_rails, r1=r1, r2=r2,
-        rail_speeds=rail_speeds, fault_spec=fault_spec,
-    )
+    topo = _resolve_fabric(fabric, tm, r1, r2, rail_speeds, fault_spec)
     check_device_supports(topo)
     index = LinkIndex(topo)
     planned = []
@@ -540,7 +580,7 @@ def _run_policy_suite_device(
             )
         )
     results = simulate_many_device(index, planned, hop_latency=1e-6)
-    opt = theorem2_optimal_time(tm.d2, tm.num_rails, r2)
+    opt = theorem2_optimal_time(tm.d2, tm.num_rails, topo.r2)
     return {
         p: compute_metrics(res, topo, tm.name, p, opt)
         for p, res in zip(policies, results)

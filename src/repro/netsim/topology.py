@@ -1,9 +1,11 @@
-"""Rail-optimized datacenter topology model (paper §III-A, Fig. 3).
+"""Fabric topology models: the flat rail pod (paper §III-A, Fig. 3) and
+hierarchical multi-pod fabrics joined by oversubscribed inter-pod links.
 
-M domains × N NICs. NIC ``(d, n)`` connects to leaf switch ``S_n`` at rate
-``R2``; leaves connect to a spine layer (for ECMP cross-rail paths); GPUs
-inside a domain interconnect at rate ``R1 > R2`` (NVLink analogue — per
-Theorem 1 it never bottlenecks, so intra-domain hops are modeled as free).
+The flat case — :class:`RailTopology` — is the paper's: M domains × N NICs.
+NIC ``(d, n)`` connects to leaf switch ``S_n`` at rate ``R2``; leaves
+connect to a spine layer (for ECMP cross-rail paths); GPUs inside a domain
+interconnect at rate ``R1 > R2`` (NVLink analogue — per Theorem 1 it never
+bottlenecks, so intra-domain hops are modeled as free).
 
 A *path* is the ordered list of serialization resources (links) a chunk
 occupies. Two path families exist, matching the paper's Challenge 1:
@@ -13,22 +15,38 @@ occupies. Two path families exist, matching the paper's Challenge 1:
 * **spine**: ``NIC(src,n) → S_n → spine_p → S_m → NIC(dst,m)`` — crosses
   rails via the spine; this is what ECMP hashing uses.
 
+:class:`MultiPodFabric` generalizes this to P rail pods joined by
+oversubscribed inter-pod WAN lanes (long RTT, low aggregate rate — the
+cross-datacenter regime). Cross-pod paths leave on a source NIC lane,
+cross one of the scarce ``wan:{p}:{q}:{lane}`` links, and land on the
+destination NIC lane. ``P=1`` degenerates to the exact flat pod: the link
+inventory, names, insertion order and level structure are byte-identical
+to :class:`RailTopology`, which is what the BitExact parity gate pins.
+
+Both classes implement the :class:`Fabric` protocol. The load-bearing
+addition over the historical single-topology code is ``level_kinds``: the
+ordered tuple of link-name kinds a path may visit (at most one link per
+kind, in tuple order). The array backends derive their per-level scan
+structure from it instead of hard-coding the four flat phases.
+
 Every link carries a :class:`~repro.netsim.linkmodel.LinkModel` handle (the
-pluggable dynamics layer). Static ``rail_speeds`` are sugar for degenerate
-constant profiles — their factor is pre-folded into ``Link.rate`` so a
-constant-profile fabric is bit-identical to the historical static one. A
+pluggable dynamics layer) and a fixed propagation ``latency`` charged after
+each serialization (zero everywhere except WAN lanes). Static
+``rail_speeds`` are sugar for degenerate constant profiles — their factor
+is pre-folded into ``Link.rate`` so a constant-profile fabric is
+bit-identical to the historical static one. A
 :class:`~repro.netsim.linkmodel.FaultSpec` attaches time-varying profiles
-(and the PFC/ECN/loss knobs the event engine implements) per rail.
+(and the PFC/ECN/loss/FEC knobs the event engine implements) per rail.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Protocol, runtime_checkable
 
 from .linkmodel import CONSTANT, FaultSpec, LinkModel
 
-__all__ = ["Link", "RailTopology"]
+__all__ = ["Link", "Fabric", "RailTopology", "MultiPodFabric"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,16 +56,69 @@ class Link:
     ``rate`` is the static rate in bytes/sec with any constant speed factor
     already folded in; ``model`` holds the dynamics handle (a constant
     model for frozen links — its factor is *not* applied again on top of
-    ``rate``; non-constant profiles scale ``rate`` over time).
+    ``rate``; non-constant profiles scale ``rate`` over time). ``latency``
+    is a fixed propagation delay charged *after* serialization completes,
+    before the chunk reaches the next hop (or the receiver) — zero on
+    intra-pod links, half the configured RTT on WAN lanes.
     """
 
     name: str
     rate: float
     model: LinkModel = CONSTANT
+    latency: float = 0.0
+
+
+@runtime_checkable
+class Fabric(Protocol):
+    """The surface every topology exposes to the simulators and policies.
+
+    Attributes: ``m`` (total domains), ``n`` (rails per domain), ``r1``,
+    ``r2``, ``num_spines``, ``rail_speeds``, ``fault_spec``, ``links``
+    (name → :class:`Link`, insertion-ordered — the array backends index
+    links by this order), ``level_kinds`` (ordered link-kind tuple; every
+    path visits at most one link per kind, in tuple order — the invariant
+    the level-sweep scans rely on), ``num_pods``, ``domains_per_pod``,
+    ``wan_lanes`` and ``inter_pod_cost_factor`` (1.0 on flat fabrics; the
+    slowdown multiple of a byte that must cross pods, used to price
+    migrations).
+    """
+
+    m: int
+    n: int
+    r1: float
+    r2: float
+    links: dict[str, Link]
+    level_kinds: tuple[str, ...]
+    num_pods: int
+
+    @property
+    def has_dynamics(self) -> bool: ...
+
+    def pod_of(self, domain: int) -> int: ...
+
+    def rail_path(self, src_domain: int, dst_domain: int, rail: int) -> list[str]: ...
+
+    def spine_path(
+        self, src_domain: int, dst_domain: int, src_rail: int, dst_rail: int,
+        spine: int,
+    ) -> list[str]: ...
+
+    def all_paths(self, src_domain: int, dst_domain: int) -> list[list[str]]: ...
+
+    def capacity(self, src_domain: int, dst_domain: int) -> float: ...
+
+    def with_rail_speeds(self, rail_speeds, fault_spec=None) -> "Fabric": ...
 
 
 class RailTopology:
-    """Explicit link inventory + path construction for the rail fabric."""
+    """Explicit link inventory + path construction for the flat rail pod."""
+
+    #: Ordered link kinds a path may visit (one per kind, in this order).
+    level_kinds: tuple[str, ...] = ("up", "l2s", "s2l", "down")
+    #: Flat fabric: one pod, no WAN lanes, intra-pod migration pricing.
+    num_pods: int = 1
+    wan_lanes: int = 0
+    inter_pod_cost_factor: float = 1.0
 
     def __init__(
         self,
@@ -73,6 +144,10 @@ class RailTopology:
         self.r1 = r1
         self.r2 = r2
         self.num_spines = num_spines
+        self.spine_rate = spine_rate
+        # Subclasses set num_pods (a class attr of 1 here) before chaining
+        # up, so pod geometry derives uniformly.
+        self.domains_per_pod = num_domains // self.num_pods
         # Per-rail speed factors: rail n's NIC links run at
         # r2 * rail_speeds[n]. Values below 1.0 model a slow leaf/optics
         # lane (the straggler-rail scenario repro.sched.feedback learns to
@@ -95,14 +170,20 @@ class RailTopology:
         # paths as read-only, so sharing one list per key is safe.
         self._rail_paths: dict[tuple, list[str]] = {}
         self._spine_paths: dict[tuple, list[str]] = {}
-        rail_models = self._rail_models(fault_spec)
+        self._build_links(spine_rate)
+
+    def _build_links(self, spine_rate: float) -> None:
+        """Populate ``self.links`` (insertion order is the array backends'
+        link-id order — subclasses that degenerate to the flat pod must
+        reproduce it exactly)."""
+        rail_models = self._rail_models(self.fault_spec)
         for d in range(self.m):
             for n in range(self.n):
                 rate, model = rail_models[n]
                 self._add(f"up:{d}:{n}", rate, model)  # NIC(d,n) -> leaf S_n
                 self._add(f"down:{d}:{n}", rate, model)  # leaf S_n -> NIC(d,n)
         for n in range(self.n):
-            for p in range(num_spines):
+            for p in range(self.num_spines):
                 self._add(f"l2s:{n}:{p}", spine_rate)  # leaf S_n -> spine p
                 self._add(f"s2l:{p}:{n}", spine_rate)  # spine p -> leaf S_n
 
@@ -123,14 +204,34 @@ class RailTopology:
             out.append((rate, model))
         return out
 
-    def _add(self, name: str, rate: float, model: LinkModel = CONSTANT) -> None:
-        self.links[name] = Link(name, rate, model)
+    def _add(
+        self, name: str, rate: float, model: LinkModel = CONSTANT,
+        latency: float = 0.0,
+    ) -> None:
+        self.links[name] = Link(name, rate, model, latency)
 
     @property
     def has_dynamics(self) -> bool:
         """True when the fabric needs the event engine's dynamic loop
         (non-constant profiles or any PFC/ECN/loss knob)."""
         return self.fault_spec is not None and not self.fault_spec.is_static
+
+    def pod_of(self, domain: int) -> int:
+        """Pod index of a global domain id (always 0 on the flat fabric)."""
+        return domain // self.domains_per_pod
+
+    def with_rail_speeds(
+        self, rail_speeds, fault_spec: Optional[FaultSpec] = None
+    ) -> "RailTopology":
+        """Same fabric geometry with different static per-rail speeds (the
+        serving gateway's per-window rebuild hook). ``fault_spec`` is NOT
+        inherited — window rebuilds are static by construction; pass one
+        explicitly to attach dynamics."""
+        return RailTopology(
+            self.m, self.n, r1=self.r1, r2=self.r2,
+            num_spines=self.num_spines, spine_rate=self.spine_rate,
+            rail_speeds=rail_speeds, fault_spec=fault_spec,
+        )
 
     # -- path families ------------------------------------------------------
 
@@ -180,3 +281,230 @@ class RailTopology:
     def capacity(self, src_domain: int, dst_domain: int) -> float:
         """Theorem 1: N * R2."""
         return self.n * self.r2
+
+
+class MultiPodFabric(RailTopology):
+    """P rail pods joined by oversubscribed inter-pod WAN lanes.
+
+    Each pod is a full :class:`RailTopology` (``domains_per_pod`` domains ×
+    ``num_rails`` NICs, its own leaf/spine layer); pods ``p → q`` are
+    joined by ``wan_lanes`` unidirectional lanes ``wan:{p}:{q}:{lane}``.
+    Global domain ids are pod-major (domain ``d`` lives in pod
+    ``d // domains_per_pod``); leaf/spine switch ids are globalized as
+    ``pod * num_rails + rail`` / ``pod * num_spines + s`` so every name
+    stays unique.
+
+    The WAN tier is scarce by construction. A pod's full-bisection egress
+    is ``domains_per_pod * num_rails * r2``; with oversubscription factor
+    ``oversub`` only ``1/oversub`` of that leaves the pod, split evenly
+    over ``(P-1)`` peer pods × ``wan_lanes`` lanes::
+
+        wan_rate = domains_per_pod * num_rails * r2
+                   / (oversub * (num_pods - 1) * wan_lanes)
+
+    (overridable via ``wan_rate``). Each lane also carries a fixed
+    propagation latency of ``wan_rtt / 2`` — the long-RTT half of the
+    cross-DC regime; loss there is what FEC (vs go-back-N) trades against.
+
+    Cross-pod paths are ``up → wan → down``: out on the source NIC lane,
+    across one WAN lane (default ``rail % wan_lanes`` — the topology-blind
+    mapping whose symmetry break the xdc bench quantifies; hierarchy-aware
+    policies pass an explicit ``lane``), in on the destination NIC lane.
+    ``level_kinds`` therefore grows a ``wan`` level between ``s2l`` and
+    ``down`` when ``num_pods > 1``.
+
+    ``num_pods=1`` is the degenerate flat pod: no WAN links, the flat
+    four-kind level structure, and a link inventory byte-identical (names,
+    rates, insertion order) to ``RailTopology`` — the BitExact parity
+    anchor.
+    """
+
+    def __init__(
+        self,
+        num_pods: int,
+        domains_per_pod: int,
+        num_rails: int,
+        r1: float = 400e9,
+        r2: float = 50e9,
+        num_spines: Optional[int] = None,
+        spine_rate: Optional[float] = None,
+        oversub: float = 4.0,
+        wan_rtt: float = 10e-3,
+        wan_lanes: Optional[int] = None,
+        wan_rate: Optional[float] = None,
+        rail_speeds=None,
+        fault_spec: Optional[FaultSpec] = None,
+    ):
+        if num_pods < 1:
+            raise ValueError("num_pods must be >= 1")
+        if domains_per_pod < 1:
+            raise ValueError("domains_per_pod must be >= 1")
+        if not oversub > 0.0:
+            raise ValueError("oversub must be positive")
+        if not wan_rtt >= 0.0:
+            raise ValueError("wan_rtt must be >= 0")
+        self.num_pods = int(num_pods)
+        self.oversub = float(oversub)
+        self.wan_rtt = float(wan_rtt)
+        self.wan_lanes = int(wan_lanes) if wan_lanes is not None else int(num_rails)
+        if self.wan_lanes < 1:
+            raise ValueError("wan_lanes must be >= 1")
+        if num_spines is None:
+            num_spines = domains_per_pod  # non-blocking *per pod*
+        if self.num_pods > 1:
+            pod_egress = domains_per_pod * num_rails * r2
+            if wan_rate is None:
+                wan_rate = pod_egress / (
+                    self.oversub * (self.num_pods - 1) * self.wan_lanes
+                )
+            if not wan_rate > 0.0:
+                raise ValueError("wan_rate must be positive")
+            self.wan_rate = float(wan_rate)
+            # Slowdown multiple of a byte that must cross pods vs staying
+            # inside one (= `oversub` at the default wan_rate): pod
+            # full-bisection egress over aggregate egress toward one peer.
+            self.inter_pod_cost_factor = pod_egress / (
+                self.wan_rate * (self.num_pods - 1) * self.wan_lanes
+            )
+            self.level_kinds = ("up", "l2s", "s2l", "wan", "down")
+        else:
+            self.wan_rate = 0.0
+            self.inter_pod_cost_factor = 1.0
+            self.level_kinds = RailTopology.level_kinds
+        super().__init__(
+            num_pods * domains_per_pod, num_rails, r1=r1, r2=r2,
+            num_spines=num_spines, spine_rate=spine_rate,
+            rail_speeds=rail_speeds, fault_spec=fault_spec,
+        )
+
+    def _build_links(self, spine_rate: float) -> None:
+        if self.num_pods == 1:
+            super()._build_links(spine_rate)
+            return
+        rail_models = self._rail_models(self.fault_spec)
+        for d in range(self.m):
+            for n in range(self.n):
+                rate, model = rail_models[n]
+                self._add(f"up:{d}:{n}", rate, model)
+                self._add(f"down:{d}:{n}", rate, model)
+        for pod in range(self.num_pods):
+            for n in range(self.n):
+                leaf = pod * self.n + n
+                for s in range(self.num_spines):
+                    spine = pod * self.num_spines + s
+                    self._add(f"l2s:{leaf}:{spine}", spine_rate)
+                    self._add(f"s2l:{spine}:{leaf}", spine_rate)
+        half_rtt = self.wan_rtt / 2.0
+        for p in range(self.num_pods):
+            for q in range(self.num_pods):
+                if p == q:
+                    continue
+                for lane in range(self.wan_lanes):
+                    self._add(
+                        f"wan:{p}:{q}:{lane}", self.wan_rate, latency=half_rtt
+                    )
+
+    def wan_link(self, src_pod: int, dst_pod: int, lane: int) -> str:
+        """Name of one inter-pod WAN lane."""
+        return f"wan:{src_pod}:{dst_pod}:{lane}"
+
+    def with_rail_speeds(
+        self, rail_speeds, fault_spec: Optional[FaultSpec] = None
+    ) -> "MultiPodFabric":
+        return MultiPodFabric(
+            self.num_pods, self.domains_per_pod, self.n,
+            r1=self.r1, r2=self.r2, num_spines=self.num_spines,
+            spine_rate=self.spine_rate, oversub=self.oversub,
+            wan_rtt=self.wan_rtt, wan_lanes=self.wan_lanes,
+            wan_rate=self.wan_rate if self.num_pods > 1 else None,
+            rail_speeds=rail_speeds, fault_spec=fault_spec,
+        )
+
+    # -- path families ------------------------------------------------------
+
+    def rail_path(
+        self, src_domain: int, dst_domain: int, rail: int,
+        lane: Optional[int] = None,
+    ) -> list[str]:
+        """Same-pod: the flat rail-direct path. Cross-pod: ``up → wan →
+        down`` on the same rail both sides, WAN lane ``lane`` (default
+        ``rail % wan_lanes`` — the topology-blind mapping)."""
+        ps = self.pod_of(src_domain)
+        pd = self.pod_of(dst_domain)
+        if ps == pd:
+            return super().rail_path(src_domain, dst_domain, rail)
+        if lane is None:
+            lane = rail % self.wan_lanes
+        key = (src_domain, dst_domain, rail, lane)
+        path = self._rail_paths.get(key)
+        if path is None:
+            path = [
+                f"up:{src_domain}:{rail}",
+                f"wan:{ps}:{pd}:{lane}",
+                f"down:{dst_domain}:{rail}",
+            ]
+            self._rail_paths[key] = path
+        return path
+
+    def spine_path(
+        self,
+        src_domain: int,
+        dst_domain: int,
+        src_rail: int,
+        dst_rail: int,
+        spine: int,
+    ) -> list[str]:
+        """Same-pod: the flat cross-rail path through the pod's own
+        leaf/spine layer. Cross-pod: ``up → wan → down`` with the hashed
+        ``spine`` recycled as WAN-lane entropy (``spine % wan_lanes``) —
+        how the reactive baselines spray over lanes."""
+        ps = self.pod_of(src_domain)
+        pd = self.pod_of(dst_domain)
+        if ps == pd:
+            if self.num_pods == 1:
+                return super().spine_path(
+                    src_domain, dst_domain, src_rail, dst_rail, spine
+                )
+            if src_rail == dst_rail:
+                return self.rail_path(src_domain, dst_domain, src_rail)
+            key = (src_domain, dst_domain, src_rail, dst_rail, spine)
+            path = self._spine_paths.get(key)
+            if path is None:
+                leaf_s = ps * self.n + src_rail
+                leaf_d = ps * self.n + dst_rail
+                sp = ps * self.num_spines + (spine % self.num_spines)
+                path = [
+                    f"up:{src_domain}:{src_rail}",
+                    f"l2s:{leaf_s}:{sp}",
+                    f"s2l:{sp}:{leaf_d}",
+                    f"down:{dst_domain}:{dst_rail}",
+                ]
+                self._spine_paths[key] = path
+            return path
+        lane = spine % self.wan_lanes
+        key = (src_domain, dst_domain, src_rail, dst_rail, lane)
+        path = self._spine_paths.get(key)
+        if path is None:
+            path = [
+                f"up:{src_domain}:{src_rail}",
+                f"wan:{ps}:{pd}:{lane}",
+                f"down:{dst_domain}:{dst_rail}",
+            ]
+            self._spine_paths[key] = path
+        return path
+
+    def all_paths(self, src_domain: int, dst_domain: int) -> list[list[str]]:
+        if self.pod_of(src_domain) == self.pod_of(dst_domain):
+            return super().all_paths(src_domain, dst_domain)
+        return [
+            self.rail_path(src_domain, dst_domain, n, lane=lane)
+            for n in range(self.n)
+            for lane in range(self.wan_lanes)
+        ]
+
+    def capacity(self, src_domain: int, dst_domain: int) -> float:
+        """Same-pod: Theorem 1's ``N * R2``. Cross-pod: capped by the WAN
+        lane aggregate toward the destination pod."""
+        if self.pod_of(src_domain) == self.pod_of(dst_domain):
+            return self.n * self.r2
+        return min(self.n * self.r2, self.wan_lanes * self.wan_rate)

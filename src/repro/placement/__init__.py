@@ -26,6 +26,7 @@ from .state import (
     Placement,
     as_shard_expert_counts,
     placement_bound,
+    pod_priced_d2,
     placement_loads,
 )
 
@@ -34,6 +35,7 @@ __all__ = [
     "as_shard_expert_counts",
     "placement_loads",
     "placement_bound",
+    "pod_priced_d2",
     "PlacementCandidate",
     "PLACEMENT_METHODS",
     "static_placement",

@@ -99,8 +99,10 @@ class OnlinePlacementController:
         r2: float = 50e9,
         capacity: int | None = None,
         config: RelayoutConfig | None = None,
+        fabric=None,
     ):
         self.placement = placement
+        self.fabric = fabric  # pod-aware cost pricing when multi-pod
         self.num_rails = int(num_rails)
         self.bytes_per_token = float(bytes_per_token)
         self.r2 = float(r2)
@@ -148,7 +150,8 @@ class OnlinePlacementController:
         rnd = self.rounds_seen
         self.rounds_seen += 1
         cur = placement_bound(
-            self._ewma, self.placement, self.num_rails, self.bytes_per_token, self.r2
+            self._ewma, self.placement, self.num_rails, self.bytes_per_token,
+            self.r2, fabric=self.fabric,
         )
         due = (
             rnd % self.config.check_every == 0
@@ -158,16 +161,22 @@ class OnlinePlacementController:
             return RelayoutDecision(False, self.placement, None, 0.0, cur, cur, 0.0)
         candidate = self._search()
         cand = placement_bound(
-            self._ewma, candidate, self.num_rails, self.bytes_per_token, self.r2
+            self._ewma, candidate, self.num_rails, self.bytes_per_token,
+            self.r2, fabric=self.fabric,
         )
         gain = cur - cand
         if gain <= self.config.hysteresis * cur:
             return RelayoutDecision(False, self.placement, None, 0.0, cur, cand, gain)
-        mig_d2, mig_bytes = self.placement.migration_to(candidate)
+        mig_d2, mig_bytes = self.placement.migration_to(
+            candidate, fabric=self.fabric
+        )
         from ..core.theorems import theorem2_optimal_time
+        from .state import pod_priced_d2
 
         mig_time = (
-            theorem2_optimal_time(mig_d2, self.num_rails, self.r2)
+            theorem2_optimal_time(
+                pod_priced_d2(mig_d2, self.fabric), self.num_rails, self.r2
+            )
             if mig_bytes > 0
             else 0.0
         )
@@ -211,7 +220,8 @@ class OnlinePlacementController:
         else:
             counts_se = np.ones((m, self.placement.num_experts))
         cur = placement_bound(
-            counts_se, self.placement, self.num_rails, self.bytes_per_token, self.r2
+            counts_se, self.placement, self.num_rails, self.bytes_per_token,
+            self.r2, fabric=self.fabric,
         )
         if victims.size == 0:
             return RelayoutDecision(False, self.placement, None, 0.0, cur, cur, 0.0)
@@ -248,7 +258,8 @@ class OnlinePlacementController:
                 mig[srcs, dest] += wb[e] / len(srcs)
                 mig_bytes += float(wb[e])
         cand = placement_bound(
-            counts_se, candidate, self.num_rails, self.bytes_per_token, self.r2
+            counts_se, candidate, self.num_rails, self.bytes_per_token,
+            self.r2, fabric=self.fabric,
         )
         rnd = self.rounds_seen
         self.placement = candidate

@@ -16,6 +16,14 @@ trades off:
   to the new one per moved expert), which the controller amortizes
   against projected gating savings.
 
+On hierarchical fabrics (:class:`repro.netsim.topology.MultiPodFabric`)
+both costs are pod-aware: bytes that must cross pods ride the
+oversubscribed WAN tier, so ``pod_priced_d2`` scales cross-pod entries by
+the fabric's ``inter_pod_cost_factor`` before the Theorem-2 bound — an
+expert migration between pods is ``oversub×`` as expensive as the same
+move inside one, which is exactly the asymmetry a pod-aware re-layout
+search must see to prefer intra-pod moves.
+
 Everything is numpy + the existing traffic/theorem helpers; the simulated
 (vector-backend) CCT scoring lives in :mod:`repro.placement.search`.
 """
@@ -40,7 +48,29 @@ __all__ = [
     "as_shard_expert_counts",
     "placement_loads",
     "placement_bound",
+    "pod_priced_d2",
 ]
+
+
+def pod_priced_d2(d2: np.ndarray, fabric) -> np.ndarray:
+    """Price cross-pod bytes at the fabric's oversubscribed WAN rate.
+
+    Scales every ``d2[i, j]`` whose shards ``i``/``j`` live in different
+    pods by ``fabric.inter_pod_cost_factor`` (= ``oversub`` at the default
+    WAN rate), leaving intra-pod entries untouched. Flat fabrics (or
+    ``fabric=None``) are the identity — every existing flat-pod call is
+    bit-unchanged.
+    """
+    if fabric is None or getattr(fabric, "num_pods", 1) <= 1:
+        return d2
+    m = d2.shape[0]
+    if m != fabric.m:
+        raise ValueError(
+            f"d2 covers {m} shards but the fabric has {fabric.m} domains"
+        )
+    pods = np.arange(m) // fabric.domains_per_pod
+    cross = pods[:, None] != pods[None, :]
+    return np.where(cross, d2 * fabric.inter_pod_cost_factor, d2)
 
 
 def as_shard_expert_counts(counts: np.ndarray, num_shards: int) -> np.ndarray:
@@ -178,7 +208,9 @@ class Placement:
 
     # -- migration cost -----------------------------------------------------
 
-    def migration_to(self, other: "Placement") -> tuple[np.ndarray, float]:
+    def migration_to(
+        self, other: "Placement", fabric=None
+    ) -> tuple[np.ndarray, float]:
         """Extra all-to-all flows of re-laying-out to ``other``.
 
         Returns ``(migration_d2, total_bytes)``: an ``(M, M)`` bytes
@@ -186,6 +218,11 @@ class Placement:
         every moved expert, and its total. The matrix plugs straight into
         :meth:`traffic` / :func:`placement_bound` so migration cost is
         measured in the same simulated-CCT units as the gating savings.
+
+        With a multi-pod ``fabric``, the returned *total* prices
+        inter-pod moves at the oversubscribed rate (raw bytes ×
+        ``inter_pod_cost_factor``) — the matrix stays raw bytes, since the
+        simulators charge the WAN slowdown themselves.
         """
         if other.num_shards != self.num_shards:
             raise ValueError("placements must share the shard count")
@@ -198,7 +235,9 @@ class Placement:
             (self.expert_shard[moved], other.expert_shard[moved]),
             self.weight_bytes[moved],
         )
-        return mig, float(self.weight_bytes[moved].sum())
+        if fabric is None or getattr(fabric, "num_pods", 1) <= 1:
+            return mig, float(self.weight_bytes[moved].sum())
+        return mig, float(pod_priced_d2(mig, fabric).sum())
 
 
 def placement_loads(
@@ -220,14 +259,20 @@ def placement_bound(
     bytes_per_token: float,
     r2: float = 50e9,
     migration_d2: np.ndarray | None = None,
+    fabric=None,
 ) -> float:
     """Theorem-2 optimal drain time (seconds) of the placed traffic.
 
     ``max(row sums, col sums) / (N · R2)`` of the placed d2 — the CCT an
     ideal LPT spray approaches, and the cheap inner-loop score the search
     descends on before the vector-backend simulation ranks finalists.
+
+    With a multi-pod ``fabric``, cross-pod entries are first scaled by
+    ``inter_pod_cost_factor`` (see :func:`pod_priced_d2`): a byte that
+    must cross the oversubscribed WAN tier counts ``oversub×`` toward the
+    drain-time floor, so the search sees pod locality.
     """
     d2 = placement.counts_d2(counts) * float(bytes_per_token)
     if migration_d2 is not None:
         d2 = d2 + migration_d2
-    return theorem2_optimal_time(d2, num_rails, r2)
+    return theorem2_optimal_time(pod_priced_d2(d2, fabric), num_rails, r2)

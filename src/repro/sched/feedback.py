@@ -87,7 +87,12 @@ class RailHealthEstimator:
     # -- engine observer protocol -------------------------------------------
 
     def record_service(self, link: str, start: float, end: float, job) -> None:
-        kind, _d, rail = link.split(":")
+        # Multi-pod wan links are 4-part (wan:p:q:lane) and say nothing
+        # about rail lane health; only 3-part NIC links feed the EWMA.
+        parts = link.split(":")
+        if len(parts) != 3:
+            return
+        kind, _d, rail = parts
         if kind not in ("up", "down"):
             return
         duration = end - start
@@ -236,7 +241,10 @@ class DeadRailDetector:
     # -- engine observer protocol -------------------------------------------
 
     def record_service(self, link: str, start: float, end: float, job) -> None:
-        kind, _d, rail = link.split(":")
+        parts = link.split(":")
+        if len(parts) != 3:
+            return  # wan links (4-part) are not rail heartbeats
+        kind, _d, rail = parts
         if kind not in ("up", "down"):
             return
         r = int(rail)

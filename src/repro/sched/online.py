@@ -32,11 +32,19 @@ import hashlib
 
 import numpy as np
 
-from ..core.lpt import LptResult, LptState, load_mse, normalized_load_mse
+from ..core.lpt import (
+    HierLptResult,
+    LptResult,
+    LptState,
+    load_mse,
+    lpt_schedule,
+    normalized_load_mse,
+)
 
 __all__ = [
     "online_greedy_schedule",
     "windowed_lpt_schedule",
+    "windowed_hier_lpt_schedule",
     "PlanCache",
     "RoutingReplayState",
     "AdaptiveChunker",
@@ -102,6 +110,82 @@ def windowed_lpt_schedule(
     order = np.concatenate(order_parts) if order_parts else np.arange(0)
     return LptResult(
         assignment=assignment, loads=state.loads, order=order, mse=load_mse(state.loads)
+    )
+
+
+def windowed_hier_lpt_schedule(
+    weights: np.ndarray,
+    num_rails: int,
+    num_lanes: int,
+    dst_pods: np.ndarray,
+    src_pod: int,
+    window: int | None = None,
+    source_ids: np.ndarray | None = None,
+    initial_loads: np.ndarray | None = None,
+    extra_loads: np.ndarray | None = None,
+    rail_mask: np.ndarray | None = None,
+    lane_loads: dict[int, np.ndarray] | None = None,
+) -> HierLptResult:
+    """Windowed two-level LPT for hierarchical fabrics.
+
+    Level 1 is exactly :func:`windowed_lpt_schedule` — rails keep the
+    carried LoadState, health ``extra_loads`` pre-charge, and survivor
+    ``rail_mask``, so all of the online control plane's feedback plumbing
+    applies unchanged. Level 2 LPTs each window's *inter-pod* chunks per
+    destination pod over the ``num_lanes`` wan lanes, with per-pod lane
+    loads carried across windows (pass ``lane_loads`` — a mutable dict —
+    to also carry them across *calls*, e.g. across a pod's domains or
+    across release batches).
+
+    Intra-pod chunks (``dst_pods == src_pod``) get lane ``-1``.
+
+    Returns a :class:`~repro.core.lpt.HierLptResult` whose ``rail`` field
+    is the windowed level-1 result.
+    """
+    weights = np.asarray(weights, dtype=np.float64)
+    dst_pods = np.asarray(dst_pods)
+    if dst_pods.shape != weights.shape:
+        raise ValueError(
+            f"dst_pods shape {dst_pods.shape} != weights shape {weights.shape}"
+        )
+    if num_lanes < 1:
+        raise ValueError(f"num_lanes must be >= 1, got {num_lanes}")
+    rail_res = windowed_lpt_schedule(
+        weights,
+        num_rails,
+        window=window,
+        source_ids=source_ids,
+        initial_loads=initial_loads,
+        extra_loads=extra_loads,
+        rail_mask=rail_mask,
+    )
+    if lane_loads is None:
+        lane_loads = {}
+    f = weights.size
+    lane = np.full(f, -1, dtype=np.int64)
+    step = f if window is None else max(window, 1)
+    source_ids = None if source_ids is None else np.asarray(source_ids)
+    for lo in range(0, f, step):
+        hi = min(lo + step, f)
+        wp = dst_pods[lo:hi]
+        for q in np.unique(wp).tolist():
+            if q == src_pod:
+                continue
+            idx = np.flatnonzero(wp == q) + lo
+            sub = lpt_schedule(
+                weights[idx],
+                num_lanes,
+                source_ids=None if source_ids is None else source_ids[idx],
+                initial_loads=lane_loads.get(q),
+            )
+            lane[idx] = sub.assignment
+            lane_loads[q] = sub.loads
+    mses = [load_mse(v) for v in lane_loads.values()]
+    return HierLptResult(
+        rail=rail_res,
+        lane=lane,
+        lane_loads=dict(lane_loads),
+        lane_mse=float(np.mean(mses)) if mses else 0.0,
     )
 
 

@@ -291,6 +291,7 @@ def run_gateway(
     window: int | None = None,
     backend: str = "vector",
     slo_s: float | None = None,
+    fabric=None,
 ) -> GatewayResult:
     """Serve one workload through the closed-loop gateway.
 
@@ -320,8 +321,26 @@ def run_gateway(
         per-link busy carry), ``device`` (the same window loop with each
         window's scan jitted on the jax backend, float-tolerance parity),
         or ``event``.
+      fabric: optional prebuilt topology (e.g. a
+        :class:`~repro.netsim.topology.MultiPodFabric` — pod-aware
+        serving); replaces the flat ``RailTopology`` built from
+        ``r1``/``r2`` and is mutually exclusive with
+        ``rail_speeds``/``fault_spec`` (bake those into the fabric).
+        ``fabric_schedule`` still applies — per-window speeds rebuild the
+        fabric through its ``with_rail_speeds`` hook.
     """
+    if fabric is not None and (rail_speeds is not None or fault_spec is not None):
+        raise ValueError(
+            "pass rail_speeds/fault_spec via the prebuilt fabric, not "
+            "alongside it"
+        )
     if control is None:
+        if fabric is not None:
+            raise ValueError(
+                "fabric needs the controlled gateway loop; the control-off "
+                "path (control=None) delegates to run_serving, which is "
+                "flat-fabric only"
+            )
         serving = run_serving(
             workload,
             policy,
@@ -358,36 +377,36 @@ def run_gateway(
             serving=serving,
             health=serving.streaming.health,
         )
-    if backend not in ("vector", "event", "device"):
-        raise ValueError(f"unknown backend {backend!r}")
+    from ..netsim.simulate import resolve_backend
+
+    resolve_backend(backend)  # reject unknown names with the shared message
     if backend == "event" and fabric_schedule is not None:
         raise ValueError("fabric_schedule is a vector-loop construct; "
                          "use fault_spec with backend='event'")
-    if backend in ("vector", "device") and fault_spec is not None:
-        from ..netsim.topology import RailTopology as _T
+    if backend in ("vector", "device"):
+        # The one shared dynamics gate: non-static specs (whether passed
+        # directly or baked into a prebuilt fabric) need the event engine.
+        probe_topo = fabric
+        if probe_topo is None and fault_spec is not None:
+            from ..netsim.topology import RailTopology as _T
 
-        probe_topo = _T(
-            workload.num_domains, workload.num_rails,
-            r1=r1, r2=r2, fault_spec=fault_spec,
-        )
-        if probe_topo.has_dynamics:
-            if backend == "device":
-                from ..netsim.devicesim import check_device_supports
-
-                check_device_supports(probe_topo)
-            raise ValueError(
-                "non-static fault_spec needs backend='event'; the vector "
-                "loop models degraded rails via fabric_schedule/rail_speeds"
+            probe_topo = _T(
+                workload.num_domains, workload.num_rails,
+                r1=r1, r2=r2, fault_spec=fault_spec,
             )
+        if probe_topo is not None:
+            resolve_backend(backend, probe_topo)
     return _run_gateway_loop(
         workload, policy, control, r1, r2, chunk_bytes, seed, probe_every,
         rail_speeds, fabric_schedule, fault_spec, detector, window, backend,
+        fabric,
     )
 
 
 def _run_gateway_loop(
     workload, policy_name, control, r1, r2, chunk_bytes, seed, probe_every,
     rail_speeds, fabric_schedule, fault_spec, detector, plan_window, backend,
+    fabric=None,
 ):
     from ..netsim.balancers import (
         OnlineRailSPolicy, POLICIES, Policy, RailSPolicy, make_policy,
@@ -452,11 +471,19 @@ def _run_gateway_loop(
 
     # -- planner (persistent across windows: the LPT LoadState is the plan
     #    memory; the mask/pre-charge it reads are the control decisions) --
-    nominal_topo = RailTopology(
-        m, n, r1=r1, r2=r2,
-        rail_speeds=None if fabric_schedule is not None else rail_speeds,
-        fault_spec=fault_spec if backend == "event" else None,
-    )
+    if fabric is not None:
+        if (fabric.m, fabric.n) != (m, n):
+            raise ValueError(
+                f"fabric shape ({fabric.m} domains x {fabric.n} rails) "
+                f"does not match workload ({m} x {n})"
+            )
+        nominal_topo = fabric
+    else:
+        nominal_topo = RailTopology(
+            m, n, r1=r1, r2=r2,
+            rail_speeds=None if fabric_schedule is not None else rail_speeds,
+            fault_spec=fault_spec if backend == "event" else None,
+        )
     policy_cls = POLICIES.get(policy_name, Policy)
     policy_mask_src = monitor if array_backend else detector
     if issubclass(policy_cls, OnlineRailSPolicy):
@@ -596,9 +623,9 @@ def _run_gateway_loop(
                 speeds_key = tuple(speeds_now.tolist())
                 cached = fabric_cache.get(speeds_key)
                 if cached is None:
-                    topo = RailTopology(
-                        m, n, r1=r1, r2=r2, rail_speeds=speeds_now
-                    )
+                    # Window fabrics are static rebuilds of the nominal
+                    # geometry (flat or multi-pod) at the segment speeds.
+                    topo = nominal_topo.with_rail_speeds(speeds_now)
                     index = LinkIndex(topo)
                     fabric_cache[speeds_key] = (topo, index)
                 else:

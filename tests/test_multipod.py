@@ -1,0 +1,263 @@
+"""Hierarchical multi-pod fabrics — flat-pod equivalence, hier-LPT, FEC.
+
+Four contracts:
+
+1. **BitExact flat pod** — ``MultiPodFabric(num_pods=1)`` with FEC off is
+   the degenerate fabric: makespans and CCT percentiles must be
+   *bit-exact* equal to ``RailTopology`` on the event, vector, and device
+   backends (the CI parity gate keys on the BitExact class names).
+2. **BitExact multipod backends** — on a real multi-pod fabric the event
+   engine and the vector scan must still agree exactly for the proactive
+   planners (the same contract the flat fabric has always pinned).
+3. **Hier-LPT** — the two-level schedule balances WAN lanes where the
+   flat policy's static ``rail % wan_lanes`` spray cannot, beats it on
+   MoE-gated traffic, and degrades to a no-op on dense-uniform traffic
+   (Theorem 3's symmetry, one tier up).
+4. **FEC** — seeded regression: XOR parity beats go-back-N when the WAN
+   RTT makes retransmission expensive (10 ms RTT, 1% loss) and *loses*
+   at zero loss, where its ``r/k`` redundancy is a pure bandwidth tax.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.lpt import hier_lpt_schedule
+from repro.core.traffic import TrafficMatrix, sparse_topk_workload, uniform_workload
+from repro.netsim import (
+    FaultSpec,
+    FecConfig,
+    LinkIndex,
+    LossConfig,
+    MultiPodFabric,
+    RailTopology,
+    build_job_arrays,
+    make_policy,
+    run_collective,
+)
+from repro.sched.online import windowed_hier_lpt_schedule
+
+M, N = 6, 4
+CHUNK = 2**18
+
+
+def _tm(seed: int = 0) -> TrafficMatrix:
+    return sparse_topk_workload(
+        M, N, sparsity=0.3, bytes_per_pair=2**18, top_k=3, seed=seed
+    )
+
+
+def _moe_tm(m: int, n: int, bytes_per_pair: float, top_k: int, seed: int) -> TrafficMatrix:
+    """Gated sparse all-to-all: each sender GPU picks top_k remote
+    (domain, gpu) experts with lognormal sizes — few large flows, where
+    static lane spray leaves the WAN tier unbalanced."""
+    rng = np.random.default_rng(seed)
+    d1 = np.zeros((m, n, m, n))
+    for d in range(m):
+        for g in range(n):
+            dsts = rng.choice(
+                [x for x in range(m) if x != d], size=top_k, replace=False
+            )
+            for dd in dsts:
+                gg = int(rng.integers(0, n))
+                d1[d, g, int(dd), gg] = bytes_per_pair * rng.lognormal(0.0, 0.5)
+    return TrafficMatrix(d1=d1, d2=d1.sum(axis=(1, 3)), name="moe-gated")
+
+
+def _xdc_fabric(**kw) -> MultiPodFabric:
+    args = dict(
+        num_pods=4, domains_per_pod=2, num_rails=4,
+        oversub=16.0, wan_rtt=10e-3, wan_lanes=4,
+    )
+    args.update(kw)
+    return MultiPodFabric(**args)
+
+
+# -- 1. flat-pod equivalence (CI gate: -k BitExact) ---------------------------
+
+
+class TestBitExactFlatPod:
+    @pytest.mark.parametrize("backend", ["event", "vector", "device"])
+    @pytest.mark.parametrize("policy", ["ecmp", "rails", "hier-rails"])
+    def test_p1_matches_rail_topology(self, backend, policy):
+        tm = _tm()
+        flat = run_collective(tm, policy, chunk_bytes=CHUNK, backend=backend)
+        mp = run_collective(
+            tm, policy, chunk_bytes=CHUNK, backend=backend,
+            fabric=MultiPodFabric(num_pods=1, domains_per_pod=M, num_rails=N),
+        )
+        assert mp.makespan == flat.makespan
+        assert mp.cct == flat.cct
+
+    def test_hier_rails_degenerates_to_rails_on_flat(self):
+        """With one pod there is no level-2 problem: hier-rails must
+        reproduce the flat rail LPT chunk-for-chunk."""
+        tm = _tm(seed=3)
+        rails = run_collective(tm, "rails", chunk_bytes=CHUNK, backend="vector")
+        hier = run_collective(tm, "hier-rails", chunk_bytes=CHUNK, backend="vector")
+        assert hier.makespan == rails.makespan
+        assert hier.cct == rails.cct
+
+    def test_p1_geometry_matches(self):
+        flat = RailTopology(M, N)
+        mp = MultiPodFabric(num_pods=1, domains_per_pod=M, num_rails=N)
+        assert mp.level_kinds == flat.level_kinds
+        assert mp.num_pods == 1
+        assert mp.inter_pod_cost_factor == 1.0
+        for d in range(M):
+            for dd in range(M):
+                if d == dd:
+                    continue
+                assert mp.rail_path(d, dd, 1) == flat.rail_path(d, dd, 1)
+
+
+class TestBitExactMultiPodBackends:
+    @pytest.mark.parametrize("policy", ["rails", "hier-rails", "ecmp"])
+    def test_event_vector_agree(self, policy):
+        tm = _moe_tm(8, 4, 2**19, top_k=3, seed=2)
+        topo = _xdc_fabric()
+        ev = run_collective(
+            tm, policy, chunk_bytes=CHUNK, fabric=topo, backend="event"
+        )
+        ve = run_collective(
+            tm, policy, chunk_bytes=CHUNK, fabric=topo, backend="vector"
+        )
+        assert ve.makespan == pytest.approx(ev.makespan, rel=1e-9)
+        for k in ev.cct:
+            assert ve.cct[k] == pytest.approx(ev.cct[k], rel=1e-9)
+
+    def test_device_matches_vector(self):
+        """The jax backend runs the full multi-pod level structure (wan
+        level + per-level latency) — float-tolerance contract, as on the
+        flat fabric."""
+        tm = _moe_tm(8, 4, 2**19, top_k=3, seed=2)
+        topo = _xdc_fabric(oversub=4.0, wan_rtt=1e-3)
+        ve = run_collective(
+            tm, "hier-rails", chunk_bytes=CHUNK, fabric=topo, backend="vector"
+        )
+        de = run_collective(
+            tm, "hier-rails", chunk_bytes=CHUNK, fabric=topo, backend="device"
+        )
+        assert de.makespan == pytest.approx(ve.makespan, rel=1e-9)
+
+
+# -- 2. the hierarchy-aware scheduler -----------------------------------------
+
+
+def _wan_lane_imbalance(tm, topo, policy_name):
+    ja = build_job_arrays(tm, chunk_bytes=CHUNK)
+    index = LinkIndex(topo)
+    pol = make_policy(policy_name, topo, seed=0)
+    lbl = pol.plan_arrays(ja, index)
+    wan_links = lbl[:, index.level_of_kind["wan"]]
+    loads = np.zeros(index.num_links)
+    mask = wan_links >= 0
+    np.add.at(loads, wan_links[mask], ja.size[mask])
+    imbs = []
+    for ps in range(topo.num_pods):
+        for pd in range(topo.num_pods):
+            if ps == pd:
+                continue
+            lane = loads[index.wan[ps, pd]]
+            if lane.sum() > 0:
+                imbs.append(lane.max() / lane.mean())
+    return float(np.mean(imbs))
+
+
+class TestHierRails:
+    def test_beats_flat_on_gated_traffic(self):
+        """The headline margin: two-level LPT cuts makespan on an
+        oversubscribed 4-pod fabric carrying MoE-gated traffic. Seeded —
+        the margin on this workload is ~6%; require >1% so the assert has
+        slack without letting a regression to ~0 pass."""
+        tm = _moe_tm(8, 4, 8 * 2**20, top_k=4, seed=1)
+        topo = _xdc_fabric()
+        flat = run_collective(
+            tm, "rails", chunk_bytes=2 * 2**20, fabric=topo, backend="vector"
+        )
+        hier = run_collective(
+            tm, "hier-rails", chunk_bytes=2 * 2**20, fabric=topo, backend="vector"
+        )
+        assert hier.makespan < flat.makespan * 0.99
+
+    def test_wan_lanes_balanced(self):
+        tm = _moe_tm(8, 4, 8 * 2**20, top_k=4, seed=1)
+        topo = _xdc_fabric()
+        imb_flat = _wan_lane_imbalance(tm, topo, "rails")
+        imb_hier = _wan_lane_imbalance(tm, topo, "hier-rails")
+        assert imb_hier < imb_flat
+        assert imb_hier < 1.05
+
+    def test_uniform_traffic_is_a_wash(self):
+        """Dense uniform send keeps Theorem 3's symmetry one tier up: the
+        static spray is already lane-balanced and hier-LPT must not lose
+        anything for its extra machinery."""
+        tm = uniform_workload(8, 4, bytes_per_pair=2**20)
+        topo = _xdc_fabric()
+        flat = run_collective(
+            tm, "rails", chunk_bytes=2**19, fabric=topo, backend="vector"
+        )
+        hier = run_collective(
+            tm, "hier-rails", chunk_bytes=2**19, fabric=topo, backend="vector"
+        )
+        assert hier.makespan <= flat.makespan * 1.005
+
+
+class TestHierLptSchedule:
+    def test_intra_pod_chunks_get_no_lane(self):
+        w = np.array([4.0, 3.0, 2.0, 1.0])
+        res = hier_lpt_schedule(w, 2, 3, np.array([0, 1, 0, 1]), src_pod=0)
+        assert (res.lane[np.array([0, 2])] == -1).all()
+        assert (res.lane[np.array([1, 3])] >= 0).all()
+
+    def test_lane_loads_carry_balances_across_calls(self):
+        """The per-source-pod carry: a second domain's chunks fill the
+        lanes the first domain left lightest, so the pod's aggregate WAN
+        load balances even though each call sees only its own chunks."""
+        lane_loads = {}
+        w = np.array([8.0, 1.0])
+        dst = np.array([1, 1])
+        hier_lpt_schedule(w, 2, 2, dst, src_pod=0, lane_loads=lane_loads)
+        res2 = hier_lpt_schedule(w, 2, 2, dst, src_pod=0, lane_loads=lane_loads)
+        total = lane_loads[1]
+        assert total.max() / total.mean() == pytest.approx(1.0, abs=1e-9)
+        assert res2.lane.min() >= 0
+
+    def test_windowed_matches_offline_when_window_covers_all(self):
+        rng = np.random.default_rng(5)
+        w = rng.uniform(1, 10, size=32)
+        dst = rng.integers(0, 3, size=32)
+        off = hier_lpt_schedule(w, 4, 2, dst, src_pod=0)
+        win = windowed_hier_lpt_schedule(w, 4, 2, dst, src_pod=0, window=None)
+        np.testing.assert_array_equal(off.rail.assignment, win.rail.assignment)
+        np.testing.assert_array_equal(off.lane, win.lane)
+
+
+# -- 3. FEC vs go-back-N (seeded regression) ----------------------------------
+
+
+class TestFecRecovery:
+    def _run(self, rate: float, fec: FecConfig | None):
+        tm = _moe_tm(8, 4, 8 * 2**20, top_k=4, seed=1)
+        loss = LossConfig(rate=rate, rto=2 * 10e-3, links="wan")
+        topo = _xdc_fabric(
+            fault_spec=FaultSpec(loss=loss, fec=fec, seed=7)
+        )
+        return run_collective(
+            tm, "hier-rails", chunk_bytes=2**20, fabric=topo, backend="event"
+        )
+
+    def test_fec_beats_gbn_under_wan_loss(self):
+        """At 10 ms WAN RTT a go-back-N retransmission stalls the lane for
+        the full RTO; XOR parity absorbs the same losses in-band. Seeded:
+        on this draw FEC wins ~7% CCT."""
+        gbn = self._run(0.01, None)
+        fec = self._run(0.01, FecConfig(k=4, r=1))
+        assert fec.makespan < gbn.makespan
+        assert fec.goodput_bytes == pytest.approx(gbn.goodput_bytes)
+
+    def test_fec_loses_at_zero_loss(self):
+        """No losses to absorb: the r/k parity bandwidth is pure overhead
+        and FEC must be measurably slower, never magically free."""
+        clean = self._run(0.0, None)
+        fec = self._run(0.0, FecConfig(k=4, r=1))
+        assert fec.makespan > clean.makespan

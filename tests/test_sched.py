@@ -354,3 +354,44 @@ def test_windowed_replan_quality_improves_with_window():
     full = windowed_lpt_schedule(w, N, window=None)
     assert full.loads.max() <= greedy.loads.max() + 1e-9
     assert full.mse <= greedy.mse + 1e-9
+
+
+def test_rl_phase_forecast_lurch_regression():
+    """PR 8's open question, pinned: on an RL rollout/train stream the
+    last-iteration replay forecast is near-perfect within a phase but
+    eats the full distribution lurch at every boundary; EWMA smoothing
+    cuts the boundary error at a steady-state cost. Seeded so the four
+    means are stable; the asserts bound the *ordering*, not the values."""
+    from repro.core.traffic import rl_phase_counts
+    from repro.placement import Placement
+
+    m, n = 8, 4
+    counts_rounds, shard, phases = rl_phase_counts(
+        m, num_experts=4 * m, num_rounds=16, tokens_per_round=4096.0,
+        rollout_len=4, train_len=4, seed=9, return_phases=True,
+    )
+    placement = Placement.round_robin(4 * m, m)
+    tms = [placement.traffic(c, 1024.0, n) for c in counts_rounds]
+
+    def errs(alpha):
+        out = {"boundary": [], "steady": []}
+        rs = RoutingReplayState(m, n, alpha=alpha)
+        prev = None
+        for tm, phase in zip(tms, phases):
+            realized = tm.domain_send_totals()
+            if rs.iterations > 0:
+                err = float(
+                    np.abs(rs.expected_totals() - realized).sum()
+                    / max(np.abs(realized).sum(), 1e-12)
+                )
+                out["boundary" if phase != prev else "steady"].append(err)
+            rs.update_from_loads(realized)
+            prev = phase
+        return {k: float(np.mean(v)) for k, v in out.items()}
+
+    replay, ewma = errs(1.0), errs(0.35)
+    # Replay is sharp within phases and blind across them...
+    assert replay["steady"] < ewma["steady"]
+    assert replay["boundary"] > 5 * replay["steady"]
+    # ...and EWMA buys boundary absorption with steady-state lag.
+    assert ewma["boundary"] < replay["boundary"]
